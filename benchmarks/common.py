@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: timing, CSV output, sequential baseline."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (s) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def timeit_host(fn: Callable, *args, iters: int = 1) -> float:
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def sequential_pcc_numpy(x: np.ndarray) -> np.ndarray:
+    """The ALGLIB role: literal per-pair Eq. (1), single-threaded numpy f64.
+
+    Redundant per-variable stats exactly like literal computing (paper
+    SSIII-A's motivating inefficiency).
+    """
+    n, l = x.shape
+    x = x.astype(np.float64)
+    r = np.empty((n, n), np.float64)
+    for i in range(n):
+        for j in range(i, n):
+            u, v = x[i], x[j]
+            du = u - u.mean()
+            dv = v - v.mean()
+            den = np.sqrt((du * du).sum() * (dv * dv).sum())
+            val = (du * dv).sum() / den if den > 0 else 0.0
+            r[i, j] = r[j, i] = val
+    return r

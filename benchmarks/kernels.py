@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks (paper SSIII-C): tile sizes, dtypes, grid savings.
+
+interpret-mode Pallas is a correctness vehicle, not a speed path, so we
+report (i) the XLA oracle timing across tile sizes (the CPU-executable
+proxy), (ii) interpret-kernel validation timing, and (iii) the structural
+metrics that determine TPU throughput: triangular-grid step savings and
+VMEM working-set per BlockSpec.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.allpairs import prepare
+from repro.kernels.flash_attention import grid_savings
+from repro.kernels.pcc_tile import pcc_tiles
+from repro.kernels.ref import pcc_tiles_ref
+from repro.core.mapping import tri_count
+
+
+def vmem_bytes(t: int, l_blk: int, itemsize: int = 4) -> int:
+    return 2 * t * l_blk * itemsize + t * t * 4
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((256, 128)).astype(np.float32))
+
+    for t, lblk in [(32, 32), (64, 32), (64, 64), (128, 64)]:
+        u, plan = prepare(x, t=t, l_blk=lblk)
+        total = plan.total_tiles
+        t_ref = timeit(lambda u=u, t=t, total=total:
+                       pcc_tiles_ref(u, 0, t=t, pass_tiles=total))
+        emit(f"kernels/pcc_ref_t{t}_l{lblk}", t_ref * 1e6,
+             f"tiles={total};vmem_kib={vmem_bytes(t, lblk) // 1024}")
+
+    # interpret-mode validation cost (documented, not a perf claim)
+    u, plan = prepare(x[:64, :64], t=16, l_blk=32)
+    t_int = timeit(lambda: pcc_tiles(u, 0, t=16, l_blk=32,
+                                     pass_tiles=plan.total_tiles,
+                                     interpret=True), warmup=1, iters=1)
+    emit("kernels/pcc_interpret_t16", t_int * 1e6,
+         f"tiles={plan.total_tiles}")
+
+    # production BlockSpec working set (t=256, l_blk=512 f32)
+    emit("kernels/pcc_vmem_production", 0.0,
+         f"t=256;l_blk=512;vmem_kib={vmem_bytes(256, 512) // 1024}")
+
+    # triangular/banded grid savings (the C1 payoff)
+    for s, blk, w in [(4096, 128, None), (32768, 128, None),
+                      (32768, 128, 4096), (524288, 128, 1024)]:
+        emit(f"kernels/grid_savings_s{s}_w{w}", 0.0,
+             f"savings={grid_savings(s, blk, w):.4f};"
+             f"steps={tri_count(-(-s // blk)) if w is None else '-'}")
+
+
+if __name__ == "__main__":
+    run()

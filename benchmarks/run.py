@@ -1,0 +1,49 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary).
+
+  table1  — artificial-data speedup vs sequential baseline   (paper Table I)
+  table2  — real-dataset-shaped speedup                      (paper Table II)
+  fig2    — scalability vs device count                      (paper Fig. 2)
+  kernels — tile/kernel microbenchmarks + grid-savings       (paper SSIII-C)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only table1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: table1,table2,fig2,kernels")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import common
+    print("name,us_per_call,derived")
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    if want("table1"):
+        from benchmarks import table1_artificial
+        table1_artificial.run()
+    if want("table2"):
+        from benchmarks import table2_real
+        table2_real.run()
+    if want("fig2"):
+        from benchmarks import fig2_scaling
+        fig2_scaling.run()
+    if want("kernels"):
+        from benchmarks import kernels
+        kernels.run()
+
+    print(f"# {len(common.ROWS)} benchmark rows emitted", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table II: real whole-human-genome dataset (SEEK GPL570 shape).
+
+SEEK's 17,555 x 5,072 matrix is not redistributable; we benchmark the
+CPU-scaled same-aspect-ratio dataset with planted co-expression structure
+(repro.data.expression) — the paper itself establishes that PCC runtime is
+value-independent, so shape is what matters.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, sequential_pcc_numpy, timeit, timeit_host
+from repro.configs import lightpcc
+from repro.core.pcc import flops_allpairs, pearson_gemm
+from repro.data.expression import ExpressionSpec, coexpressed
+
+
+def run() -> None:
+    cfg = lightpcc.REAL_CPU
+    x = coexpressed(ExpressionSpec(n=cfg.n, l=cfg.l, seed=1,
+                                   planted_modules=20))
+    t_seq = timeit_host(sequential_pcc_numpy, x)
+    xj = jnp.asarray(x)
+    t_fast = timeit(lambda: pearson_gemm(xj))
+    err = float(np.max(np.abs(np.asarray(pearson_gemm(xj))
+                              - sequential_pcc_numpy(x))))
+    emit(f"table2/real_cpu_n{cfg.n}_l{cfg.l}", t_fast * 1e6,
+         f"seq_s={t_seq:.3f};speedup={t_seq / t_fast:.1f}x;maxerr={err:.1e}")
+    full = lightpcc.REAL_SEEK
+    emit("table2/projected_seek", 0.0,
+         f"unit_ops={flops_allpairs(full.n, full.l):.3e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""End-to-end gene co-expression network construction (the paper's target
+application, SSI/SSV): expression matrix -> all-pairs PCC -> thresholded
+network -> module recovery.
+
+    PYTHONPATH=src python examples/coexpression_network.py [--n 400] [--l 200]
+
+Data has planted co-expression modules, so we can score how well the
+PCC network recovers ground truth (precision/recall of intra-module edges).
+"""
+
+import argparse
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.allpairs import allpairs_pcc
+from repro.data.expression import ExpressionSpec, coexpressed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=300)
+    ap.add_argument("--l", type=int, default=200)
+    ap.add_argument("--modules", type=int, default=10)
+    ap.add_argument("--threshold", type=float, default=0.5)
+    args = ap.parse_args()
+
+    spec = ExpressionSpec(n=args.n, l=args.l, seed=1,
+                          planted_modules=args.modules,
+                          module_strength=0.8)
+    x = coexpressed(spec)
+    # ground-truth module labels (same RNG stream as the generator)
+    rng = np.random.default_rng(spec.seed)
+    _ = rng.standard_normal((spec.n, spec.l))
+    module = rng.integers(0, spec.planted_modules, size=spec.n)
+
+    r = np.asarray(allpairs_pcc(jnp.asarray(x), t=32, l_blk=64))
+    adj = (np.abs(r) >= args.threshold) & ~np.eye(args.n, dtype=bool)
+
+    same = np.equal.outer(module, module) & ~np.eye(args.n, dtype=bool)
+    tp = int((adj & same).sum())
+    fp = int((adj & ~same).sum())
+    fn = int((~adj & same).sum())
+    precision = tp / max(tp + fp, 1)
+    recall = tp / max(tp + fn, 1)
+
+    degrees = adj.sum(1)
+    print(f"n={args.n} genes, l={args.l} samples, "
+          f"{args.modules} planted modules")
+    print(f"edges={int(adj.sum()) // 2}  mean_degree={degrees.mean():.1f}")
+    print(f"module recovery: precision={precision:.3f} recall={recall:.3f}")
+    assert precision > 0.9, "planted modules should dominate the network"
+    print("OK — co-expression network recovers planted structure")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with the
+per-run KV caches (ring buffers for SWA layers).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch hymba-1.5b --smoke]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import steps
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cap = args.prompt_len + args.gen
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                       (args.batch, args.prompt_len),
+                                       dtype=np.int32))
+
+    prefill = jax.jit(steps.make_prefill_step(cfg, cache_capacity=cap))
+    decode = jax.jit(steps.make_decode_step(cfg))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, tokens=prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for t in range(args.gen - 1):
+        logits, cache = decode(params, token=tok, cache=cache,
+                               cache_index=jnp.int32(args.prompt_len + t))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    tput = args.batch * (args.gen - 1) / t_decode
+    print(f"arch={cfg.arch} batch={args.batch} "
+          f"prefill({args.prompt_len} tok)={t_prefill * 1e3:.0f}ms "
+          f"decode={t_decode * 1e3:.0f}ms ({tput:.0f} tok/s)")
+    print(f"sample continuation: {gen[0][:16].tolist()}")
+    assert gen.shape == (args.batch, args.gen)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end LM training driver on the fault-tolerant runtime.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 200
+    PYTHONPATH=src python examples/train_lm.py --arch llama3.2-3b ...  # full
+
+Presets:
+  tiny  — ~1M params, runs a few hundred steps on this CPU container in
+          minutes, demonstrating the full production loop (sharded params,
+          async checkpointing, straggler monitor, deterministic resume).
+  100m  — ~100M-param dense LM (the assignment's end-to-end scale; needs
+          real accelerators to finish in reasonable wall-time).
+Any assigned arch id is also accepted via --arch (config from repro.configs).
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.synthetic import TokenStreamSpec
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.runtime.train_loop import LoopConfig, TrainLoop
+
+PRESETS = {
+    "tiny": ModelConfig(
+        arch="tiny-lm", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=512, vocab=2048, dtype="float32", logits_chunk=0),
+    "100m": ModelConfig(
+        arch="lm-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=3072, vocab=32768, logits_chunk=512),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--arch", default=None, help="assigned arch id (overrides preset)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="data mesh size (0 = all devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.arch else PRESETS[args.preset]
+    n_dev = len(jax.devices())
+    data = args.data_axis or n_dev
+    mesh = jax.make_mesh((data, n_dev // data), ("data", "model")) \
+        if n_dev > 1 else jax.make_mesh((1, 1), ("data", "model"))
+
+    loop = TrainLoop(
+        cfg,
+        adamw.AdamWConfig(peak_lr=3e-4, warmup_steps=20,
+                          total_steps=args.steps),
+        LoopConfig(total_steps=args.steps, ckpt_every=50,
+                   ckpt_dir=args.ckpt_dir, log_every=20),
+        mesh,
+        data_spec=TokenStreamSpec(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch),
+    )
+    summary = loop.run()
+    first = loop.metrics_log[0]["loss"]
+    last = loop.metrics_log[-1]["loss"]
+    print(f"steps={args.steps} loss {first:.3f} -> {last:.3f}  "
+          f"step_time p50={summary.get('p50_s', 0):.3f}s")
+    assert last < first, "training should reduce loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

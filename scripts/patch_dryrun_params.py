@@ -1,0 +1,15 @@
+"""Fix params/active_params fields in dryrun JSONs (int32-overflow bug)."""
+import glob, json, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import get_config
+from repro.models.registry import build_model
+for path in glob.glob(os.path.join(os.path.dirname(__file__), "..",
+                                   "experiments", "dryrun", "*.json")):
+    rec = json.load(open(path))
+    if rec.get("kind") == "pcc":
+        continue
+    model = build_model(get_config(rec["arch"]))
+    rec["params"] = model.param_count()
+    rec["active_params"] = model.active_param_count()
+    json.dump(rec, open(path, "w"), indent=1)
+print("dryrun params patched")

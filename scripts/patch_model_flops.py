@@ -1,0 +1,28 @@
+"""Recompute model_flops fields in existing roofline JSONs after the
+param-count fixes (hlo costs in the records are unaffected)."""
+import glob, json, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import get_config
+from repro.models.config import SHAPES
+from repro.models.registry import build_model
+
+PEAK = 197e12
+for path in glob.glob(os.path.join(os.path.dirname(__file__), "..",
+                                   "experiments", "roofline", "*.json")):
+    rec = json.load(open(path))
+    cfg = get_config(rec["arch"])
+    seq, batch, kind = SHAPES[rec["shape"]]
+    tokens = seq * batch if kind != "decode" else batch
+    n_active = build_model(cfg).active_param_count()
+    mf = (6 if kind == "train" else 2) * n_active * tokens
+    chips = rec["chips"]
+    useful_t = (mf / chips) / PEAK
+    bound_t = max(rec["terms_s"].values())
+    rec["model_flops_global"] = mf
+    rec["model_flops_per_chip"] = mf / chips
+    rec["useful_fraction"] = useful_t / bound_t if bound_t else 0.0
+    rec["model_vs_hlo_flops"] = (mf / chips) / rec["hlo_flops_per_chip"] \
+        if rec["hlo_flops_per_chip"] else 0.0
+    json.dump(rec, open(path, "w"), indent=1)
+    print(f"{rec['label']}: useful={rec['useful_fraction']:.2%} "
+          f"model/hlo={rec['model_vs_hlo_flops']:.3f}")

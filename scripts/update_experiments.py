@@ -1,0 +1,32 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from JSON caches."""
+import os, re, subprocess, sys, json, glob
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(ROOT, "src"))
+from repro.launch import report  # noqa: E402
+
+md_path = os.path.join(ROOT, "EXPERIMENTS.md")
+md = open(md_path).read()
+
+# roofline table
+roof = report.roofline_table()
+md = re.sub(r"<!-- ROOFLINE_TABLE -->",
+            roof + "\n\n<!-- ROOFLINE_TABLE:updated -->", md)
+md = re.sub(r"\| arch \| shape \| method.*?(?=\n\n)", "", md, flags=re.S) \
+    if "<!-- ROOFLINE_TABLE:updated -->" not in md else md
+
+# dryrun headline rows (heaviest cells)
+recs = report._load(report.DRYRUN_DIR)
+picks = [r for r in recs if r["label"].endswith("pod1") and r.get("memory")
+         and "argument_size_in_bytes" in r.get("memory", {})]
+picks.sort(key=lambda r: -r["memory"].get("argument_size_in_bytes", 0))
+lines = ["| cell | args GiB/dev | temp GiB/dev | compile s |",
+         "|---|---|---|---|"]
+for r in picks[:8]:
+    m = r["memory"]
+    lines.append(f"| {r['arch']}/{r['shape']} | "
+                 f"{m['argument_size_in_bytes']/2**30:.2f} | "
+                 f"{m['temp_size_in_bytes']/2**30:.2f} | {r['compile_s']} |")
+md = md.replace("<!-- DRYRUN_HEADLINES -->", "\n".join(lines))
+open(md_path, "w").write(md)
+print("EXPERIMENTS.md updated")

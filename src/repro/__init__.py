@@ -1,0 +1,7 @@
+"""repro — LightPCC (Liu/Pan/Aluru 2016) as a production JAX framework.
+
+Distributed SIMD all-pairs Pearson correlation on TPU pods, plus the
+bijective triangular job-scheduling framework applied to LM workloads.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from repro.checkpoint import io
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["io", "CheckpointManager"]

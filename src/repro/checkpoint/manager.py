@@ -1,0 +1,97 @@
+"""Checkpoint manager: retention, async save, resume policy.
+
+Production behaviours needed at 1000+ nodes:
+  * background saves (training never blocks on disk) with at-most-one
+    in-flight save and completion draining;
+  * retention (keep_last N + keep_every K "anchor" steps, so a bad-data
+    incident can roll back far while bounding storage);
+  * resume picks the newest complete step, restores data cursor + rng from
+    metadata, and GCs debris from interrupted saves (crash-consistent).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import io
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep_last: int = 3,
+                 keep_every: int = 0, async_save: bool = True):
+        self.root = root
+        self.keep_last = keep_last
+        self.keep_every = keep_every
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_save else None
+        self._inflight: Optional[Future] = None
+        os.makedirs(root, exist_ok=True)
+        io.gc_tmp(root)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None,
+             block: bool = False) -> None:
+        """Save (async by default).  Device arrays are fetched to host
+        *before* handing off, so the training loop can donate its buffers."""
+        host_tree = jax.tree.map(lambda a: jax.device_get(a), tree)
+        if self._pool is None or block:
+            self.wait()
+            io.save(self.root, step, host_tree, metadata=metadata)
+            self._retain()
+        else:
+            self.wait()  # at most one in-flight save
+            self._inflight = self._pool.submit(self._save_job, step,
+                                               host_tree, metadata)
+
+    def _save_job(self, step, host_tree, metadata):
+        io.save(self.root, step, host_tree, metadata=metadata)
+        self._retain()
+
+    def wait(self) -> None:
+        if self._inflight is not None:
+            self._inflight.result()
+            self._inflight = None
+
+    # -- retention ----------------------------------------------------------
+
+    def _retain(self) -> None:
+        steps = io.available_steps(self.root)
+        if len(steps) <= self.keep_last:
+            return
+        keep = set(steps[-self.keep_last:])
+        if self.keep_every:
+            keep |= {s for s in steps if s % self.keep_every == 0}
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                              ignore_errors=True)
+
+    # -- resume ---------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        steps = io.available_steps(self.root)
+        return steps[-1] if steps else None
+
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> Optional[Tuple[Any, dict, int]]:
+        """Returns (tree, metadata, step) or None if no checkpoint exists."""
+        step = self.latest_step()
+        if step is None:
+            return None
+        path = os.path.join(self.root, f"step_{step:08d}")
+        tree, meta = io.restore(path, like=like, shardings=shardings)
+        return tree, meta, step
+
+    def close(self) -> None:
+        self.wait()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,31 @@
+"""repro.core — the paper's contribution as a composable JAX library.
+
+Public API:
+  mapping      bijective job-id <-> coordinate functions (C1)
+  pcc          PCC reformulation + reference implementations (C2)
+  tiling       tile plans, pass partitioning, PE ranges (C3, C4, C5)
+  allpairs     single-accelerator multi-pass driver
+  distributed  shard_map mesh driver
+  permutation  batched permutation testing
+"""
+
+from repro.core import allpairs, distributed, mapping, pcc, permutation, tiling
+from repro.core.allpairs import allpairs_pcc, allpairs_pcc_streamed
+from repro.core.distributed import allpairs_pcc_sharded, allpairs_pcc_sharded_u
+from repro.core.pcc import pearson_gemm, pearson_literal, transform
+
+__all__ = [
+    "allpairs",
+    "distributed",
+    "mapping",
+    "pcc",
+    "permutation",
+    "tiling",
+    "allpairs_pcc",
+    "allpairs_pcc_streamed",
+    "allpairs_pcc_sharded",
+    "allpairs_pcc_sharded_u",
+    "pearson_gemm",
+    "pearson_literal",
+    "transform",
+]

@@ -1,0 +1,175 @@
+"""Single-accelerator all-pairs PCC driver (paper Alg. 2 analogue).
+
+Pipeline (paper SSIII-A..C):
+  1. transform X -> U (Eq. 4), zero-pad to tile/block alignment;
+  2. iterate tile-id passes [J_start, J_end) over the upper triangle
+     (multi-pass model, C4), invoking the Pallas triangular-grid kernel
+     (kernels/pcc_tile.py) once per pass with a *runtime* J_start —
+     one compilation serves all passes;
+  3. scatter the (t, t) tile results into the symmetric R.
+
+Double-buffering: the paper overlaps device compute with host-side result
+processing via offload signal/wait.  JAX's async dispatch gives the same
+overlap for free — `allpairs_pcc_streamed` dispatches pass k+1 *before*
+blocking on pass k's host transfer (see the loop ordering there).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping, tiling
+from repro.core.pcc import transform
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
+
+Array = jax.Array
+
+
+def pad_u(u: Array, t: int, l_blk: int) -> Array:
+    """Zero-pad transformed variables to (n_pad, l_pad) kernel alignment.
+    Zero rows correlate to 0 with everything, so padding is inert."""
+    n, l = u.shape
+    n_pad = -(-n // t) * t
+    l_pad = -(-l // l_blk) * l_blk
+    if (n_pad, l_pad) == (n, l):
+        return u
+    return jnp.pad(u, ((0, n_pad - n), (0, l_pad - l)))
+
+
+def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
+            dtype=None) -> Tuple[Array, tiling.TilePlan]:
+    """Transform (Eq. 4) + pad; returns (u_pad, plan)."""
+    n, l = x.shape
+    u = transform(x, dtype=dtype or jnp.float32)
+    plan = tiling.TilePlan.create(n, l, t)
+    return pad_u(u, t, l_blk), plan
+
+
+def _tile_coords_arrays(m: int, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    ys = np.empty_like(ids)
+    xs = np.empty_like(ids)
+    for i, jt in enumerate(ids):
+        y, x = mapping.job_coord(m, int(jt))
+        ys[i], xs[i] = y, x
+    return ys, xs
+
+
+def scatter_tiles(r_pad: Array, tiles: Array, ids: np.ndarray, t: int,
+                  m: int) -> Array:
+    """Scatter (t, t) tiles into the padded upper-triangle of R (jnp scan)."""
+    ys, xs = _tile_coords_arrays(m, ids)
+    coords = jnp.stack([jnp.asarray(ys, jnp.int32) * t,
+                        jnp.asarray(xs, jnp.int32) * t], axis=1)
+
+    def body(r, args):
+        tile, yx = args
+        r = jax.lax.dynamic_update_slice(r, tile, (yx[0], yx[1]))
+        return r, None
+
+    r_pad, _ = jax.lax.scan(body, r_pad, (tiles, coords))
+    return r_pad
+
+
+def symmetrize(r_pad: Array, n: int) -> Array:
+    """Mirror the scattered upper blocks into the lower triangle and crop."""
+    idx = jnp.arange(r_pad.shape[0])
+    upper = idx[:, None] <= idx[None, :]
+    r_full = jnp.where(upper, r_pad, r_pad.T)
+    return r_full[:n, :n]
+
+
+def allpairs_pcc(
+    x: Array,
+    *,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    max_tiles_per_pass: Optional[int] = None,
+    interpret: bool = True,
+    clip: bool = True,
+) -> Array:
+    """All-pairs PCC via the triangular-grid Pallas kernel.  Returns (n, n) R.
+
+    interpret=True by default: this container is CPU-only; on real TPU the
+    launcher passes interpret=False.
+    """
+    n = x.shape[0]
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+    total = plan.total_tiles
+    pass_tiles = min(total, max_tiles_per_pass or total)
+    r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+    for lo, hi in tiling.passes(0, total, pass_tiles):
+        out = pcc_tiles(u_pad, lo, t=t, l_blk=l_blk, pass_tiles=pass_tiles,
+                        interpret=interpret)
+        ids = np.minimum(np.arange(lo, lo + pass_tiles), total - 1)
+        valid = hi - lo
+        r_pad = scatter_tiles(r_pad, out[:valid], ids[:valid], t, plan.m)
+    r = symmetrize(r_pad, n)
+    return jnp.clip(r, -1.0, 1.0) if clip else r
+
+
+def allpairs_pcc_streamed(
+    x: Array,
+    *,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    max_tiles_per_pass: int = 1024,
+    interpret: bool = True,
+) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Memory-bounded streaming variant (paper Alg. 2 with double buffering).
+
+    Yields (tile_ids, tiles) per pass as *host* numpy arrays, while the next
+    pass is already dispatched on device (async dispatch = signal/wait).
+    Host-side R never materialises on the accelerator — the caller assembles
+    (or reduces) the stream, e.g. into an n x n memmap.
+    """
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+    total = plan.total_tiles
+    spans = list(tiling.passes(0, total, max_tiles_per_pass))
+
+    def launch(lo):
+        return pcc_tiles(u_pad, lo, t=t, l_blk=l_blk,
+                         pass_tiles=max_tiles_per_pass, interpret=interpret)
+
+    pending = None  # (lo, hi, device_buffer)
+    for lo, hi in spans:
+        buf = launch(lo)  # dispatch current pass (async)
+        if pending is not None:
+            plo, phi, pbuf = pending
+            ids = np.arange(plo, phi)
+            yield ids, np.asarray(pbuf)[: phi - plo]  # blocks on *previous*
+        pending = (lo, hi, buf)
+    if pending is not None:
+        plo, phi, pbuf = pending
+        yield np.arange(plo, phi), np.asarray(pbuf)[: phi - plo]
+
+
+def assemble_from_stream(n: int, t: int, m: int,
+                         stream: Iterator[Tuple[np.ndarray, np.ndarray]],
+                         out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Assemble a streamed tile sequence into a full symmetric host R."""
+    n_pad = m * t
+    r = out if out is not None else np.zeros((n_pad, n_pad), np.float32)
+    for ids, tiles in stream:
+        for jt, tile in zip(ids, tiles):
+            y, x = mapping.job_coord(m, int(jt))
+            r[y * t:(y + 1) * t, x * t:(x + 1) * t] = tile
+            if x != y:
+                r[x * t:(x + 1) * t, y * t:(y + 1) * t] = tile.T
+    r = r[:n, :n]
+    np.clip(r, -1.0, 1.0, out=r)
+    return r
+
+
+__all__ = [
+    "prepare",
+    "pad_u",
+    "scatter_tiles",
+    "symmetrize",
+    "allpairs_pcc",
+    "allpairs_pcc_streamed",
+    "assemble_from_stream",
+]

@@ -1,0 +1,151 @@
+"""Distributed all-pairs PCC over a device mesh (paper SSIII-D, C5).
+
+The paper assigns MPI process i the contiguous tile-id range
+[i*ceil(T/p), (i+1)*ceil(T/p)).  Here each mesh device plays that role under
+`shard_map`:
+
+* U (transformed, padded) is replicated across the mesh (it is small
+  relative to R: n*l vs n^2 — e.g. 64K x 5K f32 = 1.3 GB, fits v5e HBM);
+  an optional row-sharded + all-gather path covers U beyond HBM.
+* Device i computes `per_dev` tiles starting at runtime offset i*per_dev via
+  the same Pallas kernel (scalar-prefetch J_start — identical to the paper
+  reusing one Phi kernel with different J ranges).
+* The output is a (p*per_dev, t, t) global array sharded on the tile axis;
+  no collective is needed for the compute itself (embarrassingly balanced,
+  exactly the paper's design point).  Assembly into R happens host-side or
+  stays sharded for downstream reduction (e.g. thresholded edge counts).
+
+Because the bijection is stateless, *elastic* re-partitioning after a node
+loss is a pure renumbering: new p' -> new contiguous ranges; no job table to
+rebuild or migrate (runtime/elastic.py exploits this).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tiling
+from repro.core.allpairs import prepare, scatter_tiles, symmetrize
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
+
+
+def _flat_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def tiles_per_device(total: int, p: int) -> int:
+    """ceil(T/p) — uniform per-device tile count (paper SSIII-D)."""
+    return -(-total // p)
+
+
+def allpairs_pcc_sharded(
+    x: jax.Array,
+    mesh: Mesh,
+    *,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    interpret: bool = True,
+    max_tiles_per_pass: Optional[int] = None,
+) -> jax.Array:
+    """Distributed all-pairs PCC.  Returns the full (n, n) R (replicated).
+
+    All mesh axes are flattened into one logical "PE rank" axis: rank =
+    row-major index over mesh axes, matching the paper's flat MPI ranks.
+    """
+    n = x.shape[0]
+    axes = _flat_axes(mesh)
+    p = int(np.prod(mesh.devices.shape))
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+    total = plan.total_tiles
+    per_dev = tiles_per_device(total, p)
+    pass_tiles = min(per_dev, max_tiles_per_pass or per_dev)
+    n_pass = -(-per_dev // pass_tiles)
+
+    def device_fn(u_rep: jax.Array) -> jax.Array:
+        # flat rank from the (possibly multi-axis) mesh position
+        rank = jnp.int32(0)
+        for ax in axes:
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        outs = []
+        for k in range(n_pass):
+            j0 = rank * per_dev + k * pass_tiles
+            j0 = jnp.minimum(j0, total - 1)
+            outs.append(
+                pcc_tiles(u_rep, j0, t=t, l_blk=l_blk,
+                          pass_tiles=pass_tiles, interpret=interpret))
+        return jnp.concatenate(outs, axis=0)[:per_dev]
+
+    spec_rep = P(*([None] * u_pad.ndim))
+    out_spec = P(axes)  # tile axis sharded over all mesh axes (flat rank order)
+    fn = jax.shard_map(device_fn, mesh=mesh, in_specs=(spec_rep,),
+                       out_specs=out_spec, check_vma=False)
+    u_rep = jax.device_put(u_pad, NamedSharding(mesh, spec_rep))
+    tiles = fn(u_rep)  # (p*per_dev, t, t), tile-axis sharded
+
+    # Assemble (host-side semantics; small n in tests, streamed in prod).
+    ids = np.minimum(np.arange(p * per_dev), total - 1)
+    r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+    r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
+    return jnp.clip(symmetrize(r_pad, n), -1.0, 1.0)
+
+
+def allpairs_pcc_sharded_u(
+    x: jax.Array,
+    mesh: Mesh,
+    *,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Row-sharded-U variant: U is sharded over the flat rank axis and
+    all-gathered once inside shard_map (for U too large to replicate from
+    host; the gather is the only collective and is amortised over the whole
+    triangle).  Semantics identical to allpairs_pcc_sharded."""
+    n = x.shape[0]
+    axes = _flat_axes(mesh)
+    p = int(np.prod(mesh.devices.shape))
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+    # pad rows to p for even row-sharding
+    rows = u_pad.shape[0]
+    rows_pad = -(-rows // p) * p
+    if rows_pad != rows:
+        u_pad = jnp.pad(u_pad, ((0, rows_pad - rows), (0, 0)))
+    total = plan.total_tiles
+    per_dev = tiles_per_device(total, p)
+
+    def device_fn(u_shard: jax.Array) -> jax.Array:
+        # Gather minor axis first so the row order reassembles major-to-minor
+        # (P(("a","b")) shards rows a-major, b-minor).
+        u_rep = u_shard
+        for ax in reversed(axes):
+            u_rep = jax.lax.all_gather(u_rep, ax, axis=0, tiled=True)
+        u_rep = u_rep[: plan.n_pad]
+        rank = jnp.int32(0)
+        for ax in axes:
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        j0 = jnp.minimum(rank * per_dev, total - 1)
+        return pcc_tiles(u_rep, j0, t=t, l_blk=l_blk, pass_tiles=per_dev,
+                         interpret=interpret)
+
+    fn = jax.shard_map(device_fn, mesh=mesh, in_specs=(P(axes, None),),
+                       out_specs=P(axes), check_vma=False)
+    u_in = jax.device_put(u_pad, NamedSharding(mesh, P(axes, None)))
+    tiles = fn(u_in)
+
+    ids = np.minimum(np.arange(p * per_dev), total - 1)
+    r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+    r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
+    return jnp.clip(symmetrize(r_pad, n), -1.0, 1.0)
+
+
+__all__ = [
+    "allpairs_pcc_sharded",
+    "allpairs_pcc_sharded_u",
+    "tiles_per_device",
+]

@@ -1,0 +1,308 @@
+"""Bijective job-identifier <-> coordinate mappings (paper SSIII-B).
+
+The paper's central framework contribution: for symmetric all-pairs
+computation only the upper triangle (incl. main diagonal) of the n x n job
+matrix must be computed.  Jobs are numbered row-major within the triangle:
+
+    J_n(y, x) = F_n(y) + x - y,        0 <= y <= x < n          (Eq. 9)
+    F_n(y)    = y * (2n - y + 1) / 2                            (Eq. 10)
+
+and the closed-form inverse (Eq. 14/15):
+
+    y = ceil(n - 0.5 - sqrt(n^2 + n + 0.25 - 2*(J+1)))
+    x = J + y - F_n(y)
+
+This gives O(1), memory-free, perfectly balanced workload distribution for
+triangular workloads.  Both host (Python int, exact) and device (jnp,
+vectorised) implementations are provided; the device variant powers Pallas
+grid index_maps and shard_map job partitioning.
+
+Numerical-robustness note: for n up to ~2**25 the float64 sqrt inverse is
+exact after the correction step below; the jnp variant adds a one-step
+Newton-style clamp so that the bijection round-trips bit-exactly for every
+job id (property-tested in tests/test_mapping.py).
+
+Also provided, for completeness of the framework (paper SSIII-B.1):
+the trivial non-symmetric mapping J = y*n + x and its inverse, and a banded
+variant (beyond-paper) used for sliding-window-attention job matrices.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Host-side (exact integer) implementations
+# ---------------------------------------------------------------------------
+
+
+def tri_count(n: int) -> int:
+    """Total number of jobs in the upper triangle incl. diagonal: n(n+1)/2."""
+    return n * (n + 1) // 2
+
+
+def f_n(n: int, y: int) -> int:
+    """F_n(y): number of upper-triangle cells strictly before row y (Eq. 10)."""
+    return y * (2 * n - y + 1) // 2
+
+
+def job_id(n: int, y: int, x: int) -> int:
+    """Job identifier for coordinate (y, x) in the upper triangle (Eq. 9)."""
+    if not (0 <= y <= x < n):
+        raise ValueError(f"(y={y}, x={x}) not in upper triangle of n={n}")
+    return f_n(n, y) + x - y
+
+
+def job_coord(n: int, j: int) -> Tuple[int, int]:
+    """Inverse mapping: job identifier -> (y, x) (Eq. 14/15), exact.
+
+    Uses math.isqrt for exactness at any n (no float involved), which is the
+    integer-robust form of  y = ceil(n - 0.5 - sqrt(n^2+n+0.25 - 2(J+1))).
+    """
+    if not (0 <= j < tri_count(n)):
+        raise ValueError(f"job id {j} out of range for n={n}")
+    # Solve y = smallest integer with F_n(y+1) > j.  The float closed form is
+    #   y = ceil(n - 0.5 - sqrt(n^2 + n + 0.25 - 2(j+1)))
+    # Multiply the radicand by 4 to stay integral: sqrt(4n^2+4n+1-8(j+1)).
+    disc = 4 * n * n + 4 * n + 1 - 8 * (j + 1)
+    # y = ceil(((2n - 1) - sqrt(disc)) / 2)
+    s = math.isqrt(disc)
+    y = ((2 * n - 1) - s + 1) // 2  # ceil of ((2n-1)-s)/2 when s*s <= disc
+    # isqrt floors the sqrt, which can under-shoot ceil by one; clamp exactly:
+    while f_n(n, y + 1) <= j:  # y too small
+        y += 1
+    while f_n(n, y) > j:  # y too large
+        y -= 1
+    x = j + y - f_n(n, y)
+    return y, x
+
+
+# -- non-symmetric (full square) mapping, Eq. 7/8 ---------------------------
+
+
+def square_job_id(n: int, y: int, x: int) -> int:
+    """Non-symmetric all-pairs job id (Eq. 7)."""
+    if not (0 <= y < n and 0 <= x < n):
+        raise ValueError(f"(y={y}, x={x}) outside {n}x{n} job matrix")
+    return y * n + x
+
+
+def square_job_coord(n: int, j: int) -> Tuple[int, int]:
+    """Inverse of Eq. 7 (Eq. 8)."""
+    if not (0 <= j < n * n):
+        raise ValueError(f"job id {j} out of range for n={n}")
+    return j // n, j % n
+
+
+# -- banded variant (beyond-paper): jobs with y <= x < y + w ----------------
+
+
+def band_count(n: int, w: int) -> int:
+    """Number of jobs in the banded upper triangle {(y,x): y <= x < min(n, y+w)}.
+
+    Rows 0..n-w have w jobs each; the trailing rows shrink (triangular tail).
+    """
+    if w >= n:
+        return tri_count(n)
+    full_rows = n - w + 1
+    return full_rows * w + tri_count(w - 1)
+
+
+def band_job_id(n: int, w: int, y: int, x: int) -> int:
+    """Job id within the banded triangle, rows numbered top-to-bottom."""
+    if not (0 <= y <= x < min(n, y + w)):
+        raise ValueError(f"(y={y}, x={x}) outside band w={w} of n={n}")
+    if w >= n:
+        return job_id(n, y, x)
+    boundary = n - w + 1  # first row whose band is truncated by the edge
+    if y < boundary:
+        return y * w + (x - y)
+    # tail: rows boundary..n-1 form a (w-1)-triangle
+    ty = y - boundary
+    return boundary * w + f_n(w - 1, ty) + (x - y)
+
+
+def band_job_coord(n: int, w: int, j: int) -> Tuple[int, int]:
+    """Inverse banded mapping."""
+    if not (0 <= j < band_count(n, w)):
+        raise ValueError(f"job id {j} out of range for band w={w}, n={n}")
+    if w >= n:
+        return job_coord(n, j)
+    boundary = n - w + 1
+    head = boundary * w
+    if j < head:
+        y, dx = j // w, j % w
+        return y, y + dx
+    # tail rows form an upper (w-1)-triangle; its x-coordinate is already
+    # absolute within the tail block
+    ty, tx = job_coord(w - 1, j - head)
+    return boundary + ty, boundary + tx
+
+
+# ---------------------------------------------------------------------------
+# Device-side (jnp) implementations — vectorised, traceable
+# ---------------------------------------------------------------------------
+
+
+def f_n_jnp(n, y):
+    """F_n(y) with 32/64-bit-safe integer arithmetic (traceable)."""
+    y = jnp.asarray(y)
+    n = jnp.asarray(n, dtype=y.dtype)
+    return (y * (2 * n - y + 1)) // 2
+
+
+@partial(jax.jit, static_argnums=0)
+def job_id_jnp(n: int, y: Array, x: Array) -> Array:
+    """Vectorised Eq. 9."""
+    return f_n_jnp(n, y) + x - y
+
+
+@partial(jax.jit, static_argnums=0)
+def job_coord_jnp(n: int, j: Array) -> Tuple[Array, Array]:
+    """Vectorised closed-form inverse (Eq. 14/15) with exactness correction.
+
+    float64 sqrt is exact for the radicand only up to ~2^52; the two
+    where-clamps below repair any off-by-one from floating rounding so the
+    round-trip J -> (y,x) -> J is exact for all n tested (property tests
+    push n to 10**7).  All arithmetic besides the sqrt stays in integers.
+    """
+    j = jnp.asarray(j)
+    it = j.dtype
+    # radicand of Eq. 14 scaled by 4: 4n^2 + 4n + 1 - 8(J+1)
+    disc = (4 * n * n + 4 * n + 1) - 8 * (j.astype(jnp.int64) + 1)
+    s = jnp.floor(jnp.sqrt(disc.astype(jnp.float64))).astype(jnp.int64)
+    # repair float rounding of the sqrt itself (s must satisfy s^2 <= disc)
+    s = jnp.where(s * s > disc, s - 1, s)
+    s = jnp.where((s + 1) * (s + 1) <= disc, s + 1, s)
+    y = ((2 * n - 1) - s + 1) // 2
+    y = y.astype(it)
+    # exact clamp (each correction needed at most once):
+    y = jnp.where(f_n_jnp(n, y + 1) <= j, y + 1, y)
+    y = jnp.where(f_n_jnp(n, y) > j, y - 1, y)
+    x = j + y - f_n_jnp(n, y)
+    return y, x
+
+
+def lower_job_id(y: int, x: int) -> int:
+    """Row-major numbering of the lower triangle {(y,x): x <= y}:
+    J = T(y) + x with T(y) = y(y+1)/2.  This is the transpose-order twin of
+    Eq. 9 — used where consumers need *row-contiguous* job order (e.g. flash
+    attention accumulates per query row, so all of row y must be consecutive).
+    """
+    if not (0 <= x <= y):
+        raise ValueError(f"(y={y}, x={x}) not in lower triangle")
+    return y * (y + 1) // 2 + x
+
+
+def lower_job_coord(j: int) -> Tuple[int, int]:
+    """Exact inverse of lower_job_id: y = floor((sqrt(8J+1)-1)/2)."""
+    if j < 0:
+        raise ValueError("job id must be non-negative")
+    s = math.isqrt(8 * j + 1)
+    y = (s - 1) // 2
+    while (y + 1) * (y + 2) // 2 <= j:
+        y += 1
+    while y * (y + 1) // 2 > j:
+        y -= 1
+    return y, j - y * (y + 1) // 2
+
+
+def lower_job_coord_f32(j):
+    """f32 inverse of lower_job_id for Pallas index_maps (int32-safe,
+    integer-clamped like job_coord_f32).  Valid for y up to ~2000 blocks."""
+    jf = j.astype(jnp.float32)
+    y = jnp.floor((jnp.sqrt(8.0 * jf + 1.0) - 1.0) * 0.5).astype(jnp.int32)
+    j32 = j.astype(jnp.int32)
+    y = jnp.where((y + 1) * (y + 2) // 2 <= j32, y + 1, y)
+    y = jnp.where(y * (y + 1) // 2 > j32, y - 1, y)
+    x = j32 - y * (y + 1) // 2
+    return y, x
+
+
+def band_lower_count(m: int, w: int) -> int:
+    """Jobs in the banded lower triangle {(y,x): max(0,y-w+1) <= x <= y}."""
+    if w >= m:
+        return tri_count(m)
+    return tri_count(w) + (m - w) * w
+
+
+def band_lower_job_coord(m: int, w: int, j: int) -> Tuple[int, int]:
+    """Inverse row-major numbering of the banded lower triangle."""
+    if not (0 <= j < band_lower_count(m, w)):
+        raise ValueError(f"job id {j} out of range for band w={w}, m={m}")
+    head = tri_count(min(w, m))
+    if j < head:
+        return lower_job_coord(j)
+    q, r = divmod(j - head, w)
+    y = w + q
+    return y, (y - w + 1) + r
+
+
+def band_lower_job_coord_f32(m: int, w: int, j):
+    """f32/int32 inverse for Pallas index_maps (banded lower triangle)."""
+    head = tri_count(min(w, m))
+    j32 = j.astype(jnp.int32)
+    ty, tx = lower_job_coord_f32(j)
+    q = (j32 - head) // w
+    r = (j32 - head) - q * w
+    by = w + q
+    bx = by - w + 1 + r
+    in_head = j32 < head
+    y = jnp.where(in_head, ty, by)
+    x = jnp.where(in_head, tx, bx)
+    return y, x
+
+
+def job_coord_f32(n: int, j):
+    """float32-only inverse for Pallas index_maps (no f64 inside kernels).
+
+    Safe for n up to ~2000 tiles (n^2 within f32 exact-integer range after
+    the integer clamp).  Used by the triangular-grid kernels where the grid
+    is over *tiles*, so n = m = ceil(matrix/t) stays small.
+    """
+    jf = j.astype(jnp.float32)
+    nf = jnp.float32(n)
+    disc = nf * nf + nf + jnp.float32(0.25) - 2.0 * (jf + 1.0)
+    disc = jnp.maximum(disc, 0.0)
+    z = nf - jnp.float32(0.5) - jnp.sqrt(disc)
+    y = jnp.ceil(z).astype(jnp.int32)
+    y = jnp.clip(y, 0, n - 1)
+    # integer clamp for exactness
+    fy = (y * (2 * n - y + 1)) // 2
+    fy1 = ((y + 1) * (2 * n - (y + 1) + 1)) // 2
+    j32 = j.astype(jnp.int32)
+    y = jnp.where(fy1 <= j32, y + 1, y)
+    y = jnp.where(fy > j32, y - 1, y)
+    fy = (y * (2 * n - y + 1)) // 2
+    x = j32 + y - fy
+    return y, x
+
+
+__all__ = [
+    "tri_count",
+    "f_n",
+    "job_id",
+    "job_coord",
+    "square_job_id",
+    "square_job_coord",
+    "band_count",
+    "band_job_id",
+    "band_job_coord",
+    "lower_job_id",
+    "lower_job_coord",
+    "lower_job_coord_f32",
+    "band_lower_count",
+    "band_lower_job_coord",
+    "band_lower_job_coord_f32",
+    "f_n_jnp",
+    "job_id_jnp",
+    "job_coord_jnp",
+    "job_coord_f32",
+]

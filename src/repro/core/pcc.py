@@ -1,0 +1,99 @@
+"""Pearson correlation: reformulation (paper SSIII-A) and reference forms.
+
+Three implementations, in decreasing order of fidelity to the paper:
+
+* ``pearson_literal``   — Eq. (1), the per-pair formula.  This plays the role
+  of the paper's ALGLIB sequential baseline (f64).  O(n^2 l) with redundant
+  per-variable stats, exactly like literal computing.
+* ``transform``         — Eq. (4): X_i -> U_i = (X_i - mean) / l2norm(X_i - mean),
+  the one-off variable transformation (paper Alg. 3).
+* ``pearson_gemm``      — Eq. (5): R = U @ U^T, full square GEMM.  The
+  "wasteful" dense formulation the paper improves on; used as oracle and as
+  the XLA-native fast path for small n.
+
+The production triangular path lives in core/allpairs.py + kernels/pcc_tile.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Degenerate (zero-variance) variables produce 0/0; the paper does not treat
+# them (random gene-expression data never degenerates).  We define r = 0 for
+# any pair involving a zero-variance variable, and guard with this epsilon.
+_VAR_EPS = 0.0  # exact zero check; see transform()
+
+
+def transform(x: Array, *, dtype=None) -> Array:
+    """Variable transformation, Eq. (4) / Alg. 3.
+
+    x: (n, l) matrix of n variables with l samples each.
+    Returns U with rows U_i = (X_i - mean_i) / ||X_i - mean_i||_2 such that
+    r(X_i, X_j) = <U_i, U_j>.  Zero-variance rows map to all-zeros (r = 0
+    convention).  Stats are computed in f32 at minimum for stability.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, l) matrix, got shape {x.shape}")
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    mean = jnp.mean(xa, axis=1, keepdims=True)
+    centered = xa - mean
+    norm = jnp.sqrt(jnp.sum(centered * centered, axis=1, keepdims=True))
+    u = jnp.where(norm > _VAR_EPS, centered / jnp.maximum(norm, 1e-300), 0.0)
+    return u.astype(dtype or x.dtype)
+
+
+def pearson_pair_literal(u: Array, v: Array) -> Array:
+    """Eq. (1) verbatim for a single pair (the ALGLIB role), f64 on CPU."""
+    u = u.astype(jnp.float64)
+    v = v.astype(jnp.float64)
+    du = u - jnp.mean(u)
+    dv = v - jnp.mean(v)
+    num = jnp.sum(du * dv)
+    den = jnp.sqrt(jnp.sum(du * du) * jnp.sum(dv * dv))
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-300), 0.0)
+
+
+def pearson_literal(x: Array) -> Array:
+    """All-pairs Eq. (1) with per-pair redundant stats — the sequential
+    baseline semantics (vmapped for tolerable test runtimes; the *benchmark*
+    sequential baseline in benchmarks/ additionally runs single-core numpy).
+    """
+    n = x.shape[0]
+    pair = jax.vmap(jax.vmap(pearson_pair_literal, (None, 0)), (0, None))
+    return pair(x, x).reshape(n, n)
+
+
+def pearson_gemm(x: Array, *, precision=None) -> Array:
+    """Eq. (5): transform then full R = U U^T (dense; wastes half the FLOPs —
+    kept as oracle / small-n fast path)."""
+    u = transform(x, dtype=jnp.promote_types(x.dtype, jnp.float32))
+    r = jnp.dot(u, u.T, precision=precision)
+    return jnp.clip(r, -1.0, 1.0)
+
+
+def pearson_from_u(u: Array, *, precision=None) -> Array:
+    """R = U U^T for pre-transformed U (Eq. 5)."""
+    return jnp.clip(jnp.dot(u, u.T, precision=precision), -1.0, 1.0)
+
+
+def flops_allpairs(n: int, l: int) -> int:
+    """Paper SSIII-E cost model: 5 l n (transform) + l n(n+1)/2 unit FMA ops.
+
+    A unit op is one fused multiply-add; in FLOPs (mul+add counted separately)
+    the GEMM part is ~ l * n * (n+1).
+    """
+    return 5 * l * n + l * n * (n + 1) // 2
+
+
+__all__ = [
+    "transform",
+    "pearson_pair_literal",
+    "pearson_literal",
+    "pearson_gemm",
+    "pearson_from_u",
+    "flops_allpairs",
+]

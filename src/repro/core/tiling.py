@@ -1,0 +1,148 @@
+"""Tiled triangular computation plans (paper SSIII-C, SSIII-D).
+
+The job matrix (n x n, upper triangle) is partitioned into t x t tiles,
+yielding an m x m tile matrix with m = ceil(n / t).  The same bijective
+mapping (core.mapping) applies at tile granularity.  This module computes
+*plans*: which tile ids a device owns (C5), how the id range is split into
+memory-bounded passes (C4), and padded tile geometry for the MXU kernels.
+
+Everything here is host-side planning (pure Python ints) — cheap, exact, and
+reusable by the single-device driver, the shard_map distributed driver, and
+the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, List, Sequence, Tuple
+
+from repro.core import mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Geometry of a tiled symmetric all-pairs computation."""
+
+    n: int          # number of variables (rows of U)
+    l: int          # samples per variable (cols of U)
+    t: int          # tile side
+    m: int          # tiles per side = ceil(n / t)
+    n_pad: int      # n rounded up to a multiple of t
+    total_tiles: int  # m(m+1)/2
+
+    @classmethod
+    def create(cls, n: int, l: int, t: int) -> "TilePlan":
+        if n <= 0 or l <= 0 or t <= 0:
+            raise ValueError(f"invalid plan n={n} l={l} t={t}")
+        m = -(-n // t)
+        return cls(n=n, l=l, t=t, m=m, n_pad=m * t,
+                   total_tiles=mapping.tri_count(m))
+
+    def tile_coord(self, jt: int) -> Tuple[int, int]:
+        return mapping.job_coord(self.m, jt)
+
+    def tile_id(self, yt: int, xt: int) -> int:
+        return mapping.job_id(self.m, yt, xt)
+
+    def tile_rows(self, jt: int) -> range:
+        yt, _ = self.tile_coord(jt)
+        return range(yt * self.t, min(self.n, (yt + 1) * self.t))
+
+    def tile_cols(self, jt: int) -> range:
+        _, xt = self.tile_coord(jt)
+        return range(xt * self.t, min(self.n, (xt + 1) * self.t))
+
+
+# ---------------------------------------------------------------------------
+# C5: distribution of the tile-id range over p processing elements
+# ---------------------------------------------------------------------------
+
+
+def contiguous_ranges(total: int, p: int) -> List[Tuple[int, int]]:
+    """Paper SSIII-D partition: PE i owns [i*ceil(T/p), (i+1)*ceil(T/p)) ∩ [0,T).
+
+    Every tile costs the same (identical job cost), so contiguous equal-count
+    ranges are balanced up to the ceil remainder.
+    """
+    if p <= 0:
+        raise ValueError("p must be positive")
+    chunk = -(-total // p)
+    out = []
+    for i in range(p):
+        lo = min(total, i * chunk)
+        hi = min(total, (i + 1) * chunk)
+        out.append((lo, hi))
+    return out
+
+
+def balanced_counts(total: int, p: int) -> List[Tuple[int, int]]:
+    """Beyond-paper variant: distribute the remainder one-per-PE instead of
+    giving PE 0..k full ceil chunks and the tail PEs nothing.  Max-min
+    difference is 1 tile instead of up to ceil(T/p).  Returned as ranges.
+    """
+    if p <= 0:
+        raise ValueError("p must be positive")
+    base, rem = divmod(total, p)
+    out, lo = [], 0
+    for i in range(p):
+        hi = lo + base + (1 if i < rem else 0)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def strided_ids(total: int, p: int, i: int) -> range:
+    """Round-robin (strided) assignment — Alg. 1's thread-group pattern
+    (J_t = start + gid; J_t += numGroups).  Useful when passes truncate the
+    range: stride keeps per-pass per-PE counts within 1 of each other."""
+    return range(i, total, p)
+
+
+# ---------------------------------------------------------------------------
+# C4: multi-pass partitioning of a tile-id range (device-memory bound)
+# ---------------------------------------------------------------------------
+
+
+def passes(lo: int, hi: int, max_tiles_per_pass: int) -> Iterator[Tuple[int, int]]:
+    """Split [lo, hi) into consecutive passes of at most max_tiles_per_pass
+    tiles (paper Alg. 2's J_start/J_end loop)."""
+    if max_tiles_per_pass <= 0:
+        raise ValueError("max_tiles_per_pass must be positive")
+    j = lo
+    while j < hi:
+        yield (j, min(hi, j + max_tiles_per_pass))
+        j = min(hi, j + max_tiles_per_pass)
+
+
+def max_tiles_for_bytes(t: int, budget_bytes: int, itemsize: int = 4,
+                        double_buffered: bool = True) -> int:
+    """How many t*t result tiles fit in a result-buffer byte budget
+    (R' in Alg. 1; x2 buffers when double-buffering per Alg. 2)."""
+    per_tile = t * t * itemsize * (2 if double_buffered else 1)
+    return max(1, budget_bytes // per_tile)
+
+
+# ---------------------------------------------------------------------------
+# Banded variant (beyond-paper; sliding-window job matrices)
+# ---------------------------------------------------------------------------
+
+
+def band_tile_count(m: int, w_tiles: int) -> int:
+    return mapping.band_count(m, w_tiles)
+
+
+def band_tile_coord(m: int, w_tiles: int, jt: int) -> Tuple[int, int]:
+    return mapping.band_job_coord(m, w_tiles, jt)
+
+
+__all__ = [
+    "TilePlan",
+    "contiguous_ranges",
+    "balanced_counts",
+    "strided_ids",
+    "passes",
+    "max_tiles_for_bytes",
+    "band_tile_count",
+    "band_tile_coord",
+]

@@ -1,0 +1,5 @@
+from repro.data import expression, synthetic
+from repro.data.expression import ExpressionSpec
+from repro.data.synthetic import TokenStreamSpec
+
+__all__ = ["expression", "synthetic", "ExpressionSpec", "TokenStreamSpec"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  pcc_tile.py         triangular-grid all-pairs correlation tiles (C1+C3)
+  flash_attention.py  causal/banded flash attention on the same bijective
+                      grid (beyond-paper application of C1)
+  ops.py              jit'd public wrappers (impl dispatch)
+  ref.py              pure-jnp oracles
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

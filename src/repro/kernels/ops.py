@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Every op dispatches between the Pallas kernel (TPU, or interpret=True on
+CPU) and the pure-jnp oracle in ref.py, controlled by `impl`:
+
+  impl="kernel"     pallas_call, compiled for TPU (the production path)
+  impl="interpret"  pallas_call with interpret=True (CPU-correctness path;
+                    default on this CPU-only container)
+  impl="ref"        the jnp oracle (XLA-fused; also the fastest CPU path)
+
+The model code and drivers call these wrappers only — never pallas_call
+directly — so the implementation choice is a config knob, not a code change.
+"""
+
+from __future__ import annotations
+
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+from repro.kernels.pcc_tile import pcc_tiles as _pcc_tiles
+
+Impl = Literal["kernel", "interpret", "ref"]
+
+# CPU containers default to interpret; launch scripts flip this to "kernel".
+_DEFAULT_IMPL: Impl = "interpret"
+
+
+def set_default_impl(impl: Impl) -> None:
+    global _DEFAULT_IMPL
+    if impl not in ("kernel", "interpret", "ref"):
+        raise ValueError(f"unknown impl {impl!r}")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> Impl:
+    return _DEFAULT_IMPL
+
+
+def pcc_tiles(u_pad: jax.Array, j_start, *, t: int = DEFAULT_TILE,
+              l_blk: int = DEFAULT_LBLK, pass_tiles: int,
+              impl: Optional[Impl] = None) -> jax.Array:
+    """Triangular all-pairs correlation tiles (see kernels/pcc_tile.py)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "ref":
+        return ref.pcc_tiles_ref(u_pad, int(j_start), t=t,
+                                 pass_tiles=pass_tiles)
+    return _pcc_tiles(u_pad, j_start, t=t, l_blk=l_blk,
+                      pass_tiles=pass_tiles, interpret=impl == "interpret")
+
+
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              window: Optional[int] = None, blk: int = 128,
+              impl: Optional[Impl] = None) -> jax.Array:
+    """Causal/sliding-window GQA flash attention, triangular grid.
+    q: (B, H, S, D); k, v: (B, Hkv, S, D)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "ref":
+        return ref.mha_ref(q, k, v, causal=True, window=window)
+    return _flash(q, k, v, window=window, blk_q=blk, blk_k=blk,
+                  interpret=impl == "interpret")
+
+
+__all__ = ["pcc_tiles", "flash_mha", "set_default_impl", "get_default_impl",
+           "Impl"]

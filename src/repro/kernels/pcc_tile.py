@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: triangular-grid all-pairs correlation tiles.
+
+This is the MXU adaptation of the paper's Algorithm 1 (mtPearsonR):
+
+* Paper: a thread group picks tile id J_t, inverts it to (y_t, x_t) with the
+  closed-form bijection, and 4 threads/core each compute one column of the
+  t x t tile with 512-bit SIMD FMAs over the sample axis l.
+* Here: a 1-D Pallas grid runs over tile ids [J_start, J_end).  The BlockSpec
+  index_map *is* the bijection — it inverts the tile id to (y_t, x_t) and
+  pulls the two (t, l_blk) operand blocks of U into VMEM.  The innermost
+  SIMD loop becomes one MXU matmul (t, l_blk) x (l_blk, t) accumulated in
+  f32 over a second grid axis that blocks the sample dimension l.
+
+Like the paper's kernel, J_start is a *runtime* argument (scalar prefetch),
+so the multi-pass driver (core/allpairs.py, Alg. 2 analogue) reuses one
+compiled kernel for every pass and every device-local tile range.
+
+Grid layout: (num_tiles_per_pass, l_blocks) — the l axis iterates fastest,
+so each output tile's accumulator stays resident in VMEM across its k-steps
+(revisited-block accumulation).
+
+VMEM budget at the default t=256, l_blk=512, f32:
+  2 operand blocks (256*512*4 = 512 KiB each) + 1 accumulator
+  (256*256*4 = 256 KiB) ~= 1.3 MiB  << 16 MiB/core.
+
+Out-of-range grid steps (padding when a pass is shorter than the compiled
+pass length) clamp to the last valid tile; the driver discards those tiles.
+
+Diagonal tiles compute their full t x t block although only t(t+1)/2 jobs are
+needed: on the MXU a partial tile costs the same as a full one, so unlike the
+paper's scalar `if (y <= x)` guard we keep the redundant half-tile — a
+fraction ~1/m of the total work (documented in DESIGN.md SS2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.mapping import job_coord_f32
+
+DEFAULT_TILE = 256
+DEFAULT_LBLK = 512
+
+
+def _kernel(jstart_ref, urow_ref, ucol_ref, out_ref, *, l_blocks: int):
+    """Body: accumulate one (t, t) tile over the l (sample) axis."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # (t, l_blk) . (t, l_blk)^T on the MXU, f32 accumulation.
+    part = jax.lax.dot_general(
+        urow_ref[...],
+        ucol_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += part
+
+
+def _row_map(i, k, jstart_ref, *, m: int, total: int):
+    """BlockSpec index_map for the row operand: tile id -> y_t (Eq. 18)."""
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    y_t, _ = job_coord_f32(m, jt)
+    return y_t, k
+
+
+def _col_map(i, k, jstart_ref, *, m: int, total: int):
+    """BlockSpec index_map for the column operand: tile id -> x_t (Eq. 19)."""
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    _, x_t = job_coord_f32(m, jt)
+    return x_t, k
+
+
+def _out_map(i, k, jstart_ref, *, m: int, total: int):
+    del k, jstart_ref
+    return i, 0, 0
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t", "l_blk", "pass_tiles", "interpret"),
+)
+def pcc_tiles(
+    u_pad: jax.Array,
+    j_start: jax.Array,
+    *,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    pass_tiles: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compute `pass_tiles` consecutive upper-triangle tiles starting at
+    tile id `j_start` (runtime scalar), following paper Alg. 1.
+
+    u_pad: (n_pad, l_pad) pre-transformed variables (Eq. 4), zero-padded so
+           n_pad % t == 0 and l_pad % l_blk == 0.
+    j_start: int32 scalar — first tile id of this pass (J_start in Alg. 1).
+    Returns (pass_tiles, t, t) f32 tile results (R' in Alg. 1).
+    """
+    n_pad, l_pad = u_pad.shape
+    if n_pad % t or l_pad % l_blk:
+        raise ValueError(f"u_pad {u_pad.shape} not aligned to t={t}, l_blk={l_blk}")
+    m = n_pad // t
+    total = m * (m + 1) // 2
+    l_blocks = l_pad // l_blk
+
+    grid = (pass_tiles, l_blocks)
+    kernel = functools.partial(_kernel, l_blocks=l_blocks)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (t, l_blk),
+                    functools.partial(_row_map, m=m, total=total),
+                ),
+                pl.BlockSpec(
+                    (t, l_blk),
+                    functools.partial(_col_map, m=m, total=total),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, t, t), functools.partial(_out_map, m=m, total=total)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((pass_tiles, t, t), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(j_start, jnp.int32).reshape(1), u_pad, u_pad)
+    return out
+
+
+__all__ = ["pcc_tiles", "DEFAULT_TILE", "DEFAULT_LBLK"]

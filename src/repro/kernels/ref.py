@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests).
+
+Each function mirrors one kernel's semantics exactly — including padding and
+tile-id clamping — so tests can compare bit-for-tolerance without re-deriving
+driver logic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping
+
+
+# ---------------------------------------------------------------------------
+# pcc_tile oracle
+# ---------------------------------------------------------------------------
+
+
+def pcc_tiles_ref(u_pad: jax.Array, j_start: int, *, t: int,
+                  pass_tiles: int) -> jax.Array:
+    """Oracle for kernels.pcc_tile.pcc_tiles: gather the (t, t) blocks of
+    R = U_pad @ U_pad^T addressed by tile ids [j_start, j_start+pass_tiles),
+    clamping out-of-range ids to the last tile (kernel padding semantics)."""
+    n_pad = u_pad.shape[0]
+    m = n_pad // t
+    total = m * (m + 1) // 2
+    r_full = jnp.dot(u_pad.astype(jnp.float32), u_pad.astype(jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+    out = []
+    for i in range(pass_tiles):
+        jt = min(int(j_start) + i, total - 1)
+        y_t, x_t = mapping.job_coord(m, jt)
+        out.append(r_full[y_t * t:(y_t + 1) * t, x_t * t:(x_t + 1) * t])
+    return jnp.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle (causal / sliding window), one head
+# ---------------------------------------------------------------------------
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+            window: int | None = None, scale: float | None = None) -> jax.Array:
+    """Multi-head attention oracle.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with H % Hkv == 0 (GQA).
+    window: sliding-window size (key j visible to query i iff
+            i - window < j <= i under causal masking).
+    """
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    sk = k.shape[2]
+    qi = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned for decode
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> zeros
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+__all__ = ["pcc_tiles_ref", "mha_ref"]

@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, multi-pod dry-run, roofline analysis,
+training/serving entry points, report generation.
+
+NOTE: importing repro.launch.dryrun or repro.launch.roofline sets XLA_FLAGS
+for 512 host devices — only do that in dedicated processes.
+"""

@@ -1,0 +1,78 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""SSPerf hillclimbing: named experiments = (cell, config transform).
+
+Each experiment re-runs the roofline analysis compile with one change and a
+tag, so EXPERIMENTS.md SSPerf can cite before/after terms from JSON records
+(experiments/roofline/<arch>__<shape>__pod1__<tag>.json).
+
+    python -m repro.launch.hillclimb --exp qwen3-pe
+    python -m repro.launch.hillclimb --list
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro.launch.roofline import RESULTS_DIR, analyze_cell
+
+# name -> (arch, shape, tag, transform)
+EXPERIMENTS = {}
+
+
+def _exp(name, arch, shape, tag, **cfg_changes):
+    def tf(cfg):
+        return dataclasses.replace(cfg, **cfg_changes)
+    EXPERIMENTS[name] = (arch, shape, tag, tf)
+
+
+# --- cell 1: qwen3-moe train_4k (worst useful fraction / most
+#     collective-bound: 18.5 TB of all-reduce from scatter into a
+#     REPLICATED (E*C, D) dispatch buffer under the global-sort router) ----
+_exp("qwen3-pe", "qwen3-moe-30b-a3b", "train_4k", "pe",
+     moe_impl="per_example")
+_exp("qwen3-pe-prefill", "qwen3-moe-30b-a3b", "prefill_32k", "pe",
+     moe_impl="per_example")
+
+# --- cell 2: nemotron-4-340b train_4k (most collective-bound dense cell:
+#     FSDP param all-gathers run in f32 and repeat across fwd/remat/bwd) ---
+_exp("nemotron-bf16-params", "nemotron-4-340b", "train_4k", "bf16p",
+     param_dtype="bfloat16")
+_exp("nemotron-bf16-noaccum", "nemotron-4-340b", "train_4k", "bf16p-ga1",
+     param_dtype="bfloat16", grad_accum=1)
+
+# --- cell 3: llama3.2-3b prefill_32k (paper-representative: causal
+#     attention = triangular job matrix; C1 realized as prefix slicing) ----
+_exp("llama-causal-sliced", "llama3.2-3b", "prefill_32k", "cs",
+     attn_impl="causal_sliced")
+_exp("llama-train-causal-sliced", "llama3.2-3b", "train_4k", "cs",
+     attn_impl="causal_sliced")
+# sharding alternative for the 3B-dense cell: FSDP instead of 16-way TP
+_exp("llama-train-fsdp", "llama3.2-3b", "train_4k", "fsdp",
+     param_sharding="fsdp_tp")
+
+
+def run_experiment(name: str) -> dict:
+    arch, shape, tag, tf = EXPERIMENTS[name]
+    rec = analyze_cell(arch, shape, cfg_extra=tf, tag=tag)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", action="append", default=[])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for k, (a, s, t, _) in EXPERIMENTS.items():
+            print(f"{k}: {a} x {s} [{t}]")
+        return
+    names = list(EXPERIMENTS) if args.all else args.exp
+    for n in names:
+        run_experiment(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+device query, and smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """v5e production mesh: one pod = 16x16 = 256 chips ("data", "model");
+    multi-pod = 2 pods = 512 chips ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None) -> Mesh:
+    """Arbitrary mesh over explicit devices (tests, elastic re-mesh)."""
+    if devices is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    arr = np.asarray(devices).reshape(tuple(shape))
+    return Mesh(arr, tuple(axes))
+
+
+def describe(mesh: Mesh) -> str:
+    dims = " x ".join(f"{n}={s}" for n, s in
+                      zip(mesh.axis_names, mesh.devices.shape))
+    return f"Mesh({dims}; {mesh.devices.size} devices)"
+
+
+__all__ = ["make_production_mesh", "make_mesh", "describe"]

@@ -1,0 +1,18 @@
+"""Model zoo: every assigned architecture family as composable JAX modules.
+
+  config.py       ModelConfig + shape cells + input_specs (dry-run stand-ins)
+  layers.py       norms / RoPE variants / GQA+SWA attention / MLPs / MoE
+  ssm.py          mamba-1 chunked selective scan + O(1) decode
+  transformer.py  decoder-only trunk (run-grouped scan-over-layers)
+  encdec.py       encoder-decoder trunk (seamless backbone)
+  steps.py        train / prefill / decode step builders
+  sharding.py     parameter + activation sharding policy
+  registry.py     build_model(cfg) facade
+"""
+
+from repro.models.config import SHAPES, ModelConfig, cache_specs, input_specs
+from repro.models.registry import Model, build_model
+from repro.models.sharding import ShardingPolicy, make_policy
+
+__all__ = ["ModelConfig", "SHAPES", "input_specs", "cache_specs",
+           "Model", "build_model", "ShardingPolicy", "make_policy"]

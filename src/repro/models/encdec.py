@@ -1,0 +1,232 @@
+"""Encoder-decoder trunk (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention stack over precomputed frame
+embeddings (the audio frontend is a stub per the assignment — input_specs
+supplies (B, S, D) embeddings).  Decoder: causal self-attention +
+cross-attention over the encoder output.  Decode caches: per-run self-attn
+KV ring + one cross-attn KV computed once from enc_out at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import (_slice_run, init_block, layer_runs,
+                                      project_logits)
+
+Array = jax.Array
+
+
+def init_enc_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    p = init_block(ks[0], cfg)
+    p["lnx"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["xattn"] = L.init_attention(ks[1], cfg, cross=True)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    p = {
+        "embed": L.dense_init(ks[2], (cfg.vocab, cfg.d_model)),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[3], (cfg.d_model, cfg.vocab))
+    if not cfg.embed_inputs:
+        p["src_embed"] = L.dense_init(ks[4], (cfg.vocab, cfg.d_model))
+    return p
+
+
+def _enc_block_apply(cfg: ModelConfig, p: dict, x: Array,
+                     positions: Array) -> Array:
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = L._project_qkv(cfg, p["attn"], h, h)
+    q = L.apply_rope(cfg, q, positions)
+    k = L.apply_rope(cfg, k, positions)
+    b, s = q.shape[0], q.shape[1]
+    c = cfg.attn_chunk
+    if c > 0 and s > c and s % c == 0:
+        # q-chunked bidirectional attention (bounded score memory)
+        nc = s // c
+        qs = q.reshape(b, nc, c, *q.shape[2:]).swapaxes(0, 1)
+        ps = positions.reshape(b, nc, c).swapaxes(0, 1)
+
+        def body(_, inp):
+            qi, pi = inp
+            return None, L.sdpa(cfg, qi, k, v, q_pos=pi, k_pos=positions,
+                                window=0, causal=False)
+
+        body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+        _, outs = L.maybe_scan(cfg, body_fn, None, (qs, ps))
+        out = outs.swapaxes(0, 1).reshape(b, s, -1)
+    else:
+        out = L.sdpa(cfg, q, k, v, q_pos=positions, k_pos=positions,
+                     window=0, causal=False)
+    x = x + out @ p["attn"]["wo"].astype(out.dtype)
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp_apply(cfg, p["mlp"], h2)
+
+
+def encode(cfg: ModelConfig, params: dict, src: Array,
+           policy=None) -> Array:
+    """src: (B, S, D) embeddings (stub frontend) or (B, S) token ids."""
+    if src.ndim == 2:
+        x = params["src_embed"].astype(cfg.activation_dtype())[src]
+    else:
+        x = src.astype(cfg.activation_dtype())
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(L.default_positions(b, s), (b, s))
+    if policy is not None:
+        x = policy.constrain_residual(x)
+
+    def body(h, bp):
+        h = _enc_block_apply(cfg, bp, h, positions)
+        if policy is not None:
+            h = policy.constrain_residual(h)
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.enc_layers):
+            bp = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+            x, _ = body(x, bp)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block_apply(cfg: ModelConfig, p: dict, x: Array, positions: Array,
+                     enc_kv: Tuple[Array, Array], return_cache: bool):
+    piece: dict = {}
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, kv = L.attention_apply(cfg, p["attn"], h, positions, 0)
+    if return_cache:
+        piece["k"], piece["v"] = kv
+    x = x + attn_out
+    hx = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+    x = x + L.cross_attention_apply(cfg, p["xattn"], hx, enc_kv[0], enc_kv[1])
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(cfg, p["mlp"], h2)
+    return x, piece
+
+
+def forward(cfg: ModelConfig, params: dict, *, src: Array, tokens: Array,
+            cache_capacity: Optional[int] = None, policy=None):
+    """Teacher-forced enc-dec forward.  Returns (hidden, aux, cache|None)."""
+    enc_out = encode(cfg, params, src, policy=policy)
+    x = params["embed"].astype(cfg.activation_dtype())[tokens]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(L.default_positions(b, s), (b, s))
+
+    # cross K/V once per layer (shared across decoder positions)
+    def xkv(bp):
+        return L.cross_kv(cfg, bp["xattn"], enc_out)
+
+    def body(h, bp, _want=cache_capacity is not None):
+        enc_kv = xkv(bp)
+        h, piece = _dec_block_apply(cfg, bp, h, positions, enc_kv, _want)
+        if policy is not None:
+            h = policy.constrain_residual(h)
+        return h, piece
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, pieces = jax.lax.scan(body, x, params["blocks"])
+    else:
+        plist = []
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, piece = body(x, bp)
+            plist.append(piece)
+        pieces = (jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+                  if cache_capacity is not None else None)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    cache = None
+    if cache_capacity is not None:
+        k, v = pieces["k"], pieces["v"]  # (L, B, S, Hkv, hd)
+        cap = cache_capacity
+        take = min(s, cap)
+        buf = jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, cap, cfg.hd),
+                        k.dtype)
+        cache = {
+            "k": buf.at[:, :, :, :take].set(
+                k[:, :, s - take:].transpose(0, 1, 3, 2, 4)),
+            "v": buf.at[:, :, :, :take].set(
+                v[:, :, s - take:].transpose(0, 1, 3, 2, 4)),
+            "enc_out": enc_out,
+        }
+    return x, jnp.float32(0.0), cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               enc_len: int) -> dict:
+    dt = cfg.activation_dtype()
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, capacity, cfg.hd),
+                       dt),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, capacity, cfg.hd),
+                       dt),
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dt),
+    }
+
+
+def decode(cfg: ModelConfig, params: dict, cache: dict, token: Array,
+           cache_index: Array, positions=None, policy=None):
+    """One decoder step against cached self-attn KV + encoder output."""
+    x = params["embed"].astype(cfg.activation_dtype())[token]
+    enc_out = cache["enc_out"]
+
+    def body(h, inp):
+        bp, k_c, v_c = inp
+        hh = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        attn_out, k_c, v_c = L.attention_decode(
+            cfg, bp["attn"], hh, positions, 0, k_c, v_c, cache_index)
+        h = h + attn_out
+        hx = L.rms_norm(h, bp["lnx"], cfg.norm_eps)
+        ek, ev = L.cross_kv(cfg, bp["xattn"], enc_out)
+        h = h + L.cross_attention_apply(cfg, bp["xattn"], hx, ek, ev)
+        h2 = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        h = h + L.mlp_apply(cfg, bp["mlp"], h2)
+        return h, (k_c, v_c)
+
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                             cache["v"]))
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, (k_i, v_i) = body(x, (bp, cache["k"][i], cache["v"][i]))
+            nks.append(k_i)
+            nvs.append(v_i)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = project_logits(cfg, params, x, policy=policy)
+    return logits, {"k": nk, "v": nv, "enc_out": enc_out}
+
+
+__all__ = ["init_params", "forward", "decode", "init_cache", "encode"]

@@ -1,0 +1,533 @@
+"""Model building blocks (pure JAX, pytree params, scan-friendly).
+
+All blocks follow the same convention:
+  init_*(key, cfg)  -> param dict for ONE layer (callers vmap over layers
+                       to build stacked (L, ...) params for lax.scan)
+  *_apply(cfg, p, x, ...) -> output(s)
+
+Dtypes: params live in cfg.param_dtype; activations are cast to cfg.dtype at
+block entry; softmax/normalization statistics always accumulate in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def maybe_scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan, or an unrolled python loop when cfg.analysis_unroll (the
+    roofline-compile mode: every iteration's ops land in the HLO so
+    cost_analysis counts them; lax.scan bodies are counted once)."""
+    if not cfg.analysis_unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _norm_init(shape):
+    return jnp.ones(shape, jnp.float32)
+
+
+def dense_init(key, shape, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, w: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard / half / m-rope)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions: Array, n_freq: int, theta: float) -> Array:
+    """positions (..., S) -> angles (..., S, n_freq), f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(n_freq, dtype=jnp.float32) / n_freq))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def _rotate(x: Array, angles: Array) -> Array:
+    """x (..., S, H, 2*n_freq) rotated pairwise by angles (..., S, n_freq)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def apply_rope(cfg: ModelConfig, x: Array, positions: Array) -> Array:
+    """x: (B, S, Hx, hd).  positions: (B, S) int, or (B, 3, S) for m-rope.
+
+    standard: rotate all hd dims.  half: rotate the first hd/2 dims only
+    (ChatGLM 2d-RoPE).  mrope: three position streams rotate disjoint
+    frequency sections (Qwen2-VL M-RoPE).
+    """
+    hd = x.shape[-1]
+    dt = x.dtype
+    if cfg.rope == "none":
+        return x
+    if cfg.rope == "standard":
+        ang = _rope_angles(positions, hd // 2, cfg.rope_theta)
+        return _rotate(x, ang).astype(dt)
+    if cfg.rope == "half":
+        half = hd // 2
+        ang = _rope_angles(positions, half // 2, cfg.rope_theta)
+        rotated = _rotate(x[..., :half], ang)
+        return jnp.concatenate(
+            [rotated, x[..., half:].astype(jnp.float32)], axis=-1).astype(dt)
+    if cfg.rope == "mrope":
+        # positions (B, 3, S); sections partition the hd/2 frequency axis
+        sections = cfg.mrope_sections
+        n_freq = hd // 2
+        if sum(sections) != n_freq:
+            raise ValueError(f"mrope sections {sections} != hd/2 = {n_freq}")
+        angs = []
+        for comp, sec in enumerate(sections):
+            freqs_idx = jnp.arange(sum(sections[:comp]),
+                                   sum(sections[:comp + 1]))
+            freqs = 1.0 / (cfg.rope_theta **
+                           (freqs_idx.astype(jnp.float32) / n_freq))
+            pos = positions[:, comp, :].astype(jnp.float32)
+            angs.append(pos[..., None] * freqs)
+        ang = jnp.concatenate(angs, axis=-1)  # (B, S, n_freq)
+        return _rotate(x, ang).astype(dt)
+    raise ValueError(f"unknown rope mode {cfg.rope}")
+
+
+def default_positions(batch: int, seq: int, offset=0) -> Array:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + optional sliding window; XLA einsum path)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    hd, h, hkv, d = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, hkv * hd)),
+        "wv": dense_init(ks[2], (d, hkv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d), scale=0.02 / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.attn_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = _norm_init((hd,))
+        p["k_norm"] = _norm_init((hd,))
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, xq: Array, xkv: Array):
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    hd, h, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = xq @ p["wq"].astype(xq.dtype)
+    k = xkv @ p["wk"].astype(xkv.dtype)
+    v = xkv @ p["wv"].astype(xkv.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, sq, h, hd)
+    k = k.reshape(b, skv, hkv, hd)
+    v = v.reshape(b, skv, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array, *,
+         q_pos: Array, k_pos: Array, window, causal: bool,
+         k_valid: Optional[Array] = None) -> Array:
+    """Grouped-head attention.  q (B,Sq,H,hd); k,v (B,Sk,Hkv,hd).
+
+    window: traced scalar (0 = unlimited).  q_pos (B,Sq) / k_pos (B,Sk) are
+    absolute token positions (mask built from them, so ring-buffer caches
+    just pass the right positions).  k_valid (B,Sk) masks dead cache slots.
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, hd)
+    logits = jnp.einsum("bqgrh,bkgh->bgrqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    mask = jnp.ones((b, sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    w = jnp.asarray(window)
+    mask &= (w <= 0) | (k_pos[:, None, :] > q_pos[:, :, None] - w)
+    if k_valid is not None:
+        mask &= k_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h * hd).astype(q.dtype)
+
+
+def attention_apply(cfg: ModelConfig, p: dict, x: Array, positions: Array,
+                    window) -> Array:
+    """Full-sequence self-attention (train/prefill).
+
+    cfg.attn_chunk > 0 selects the q-chunked path: an S/C-step scan whose
+    body attends one query block — the XLA stand-in for the Pallas
+    triangular-grid flash kernel (bounded score memory; SWA layers slice a
+    static (C + window)-key band, making banded attention sub-quadratic in
+    the compiled HLO as well).
+    """
+    rope_pos = positions if positions.ndim == 3 else positions
+    q, k, v = _project_qkv(cfg, p, x, x)
+    q = apply_rope(cfg, q, rope_pos)
+    k = apply_rope(cfg, k, rope_pos)
+    pos1d = positions[:, 0, :] if positions.ndim == 3 else positions
+    c = cfg.attn_chunk
+    s = q.shape[1]
+    if c > 0 and s > c and s % c == 0:
+        out = _chunked_sdpa(cfg, q, k, v, pos1d, window, c)
+    else:
+        out = sdpa(cfg, q, k, v, q_pos=pos1d, k_pos=pos1d, window=window,
+                   causal=True)
+    return out @ p["wo"].astype(out.dtype), (k, v)
+
+
+def _chunked_sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array,
+                  pos: Array, window, c: int) -> Array:
+    """Scan over query chunks of size c.  Static-window layers (cfg.window
+    > 0 uniformly) additionally slice keys to a (c + window) band.
+
+    attn_impl == "causal_sliced": unrolled chunk loop where chunk i's keys
+    are statically sliced to the causal prefix [0, (i+1)*c) — attention
+    FLOPs drop from S^2 to the triangle S(S+c)/2, the paper's C1 insight
+    expressed in static-shape XLA (the Pallas kernel goes further on TPU).
+    """
+    b, s, h, hd = q.shape
+    nc = s // c
+    qs = q.reshape(b, nc, c, h, hd).swapaxes(0, 1)       # (nc, B, C, H, hd)
+    ps = pos.reshape(b, nc, c).swapaxes(0, 1)            # (nc, B, C)
+    # band slicing only when the window is a static python int and the
+    # band is actually narrower than the full sequence
+    band = (cfg.window > 0 and not cfg.global_layers
+            and not cfg.global_layer_stride and cfg.window + c < s)
+    kw = cfg.window + c if band else None
+
+    if cfg.attn_impl == "causal_sliced" and not band:
+        outs = []
+        for i in range(nc):
+            hi = (i + 1) * c
+            kk, vv = k[:, :hi], v[:, :hi]
+            kp = jnp.broadcast_to(pos[:, :hi], (b, hi))
+            oi = sdpa(cfg, qs[i], kk, vv, q_pos=ps[i], k_pos=kp,
+                      window=window, causal=True)
+            outs.append(oi)
+        return jnp.concatenate(outs, axis=1).reshape(b, s, h * hd)
+
+    def body(_, inp):
+        qi, pi, idx = inp
+        if band:
+            start = jnp.maximum(idx * c - cfg.window, 0)
+            start = jnp.minimum(start, s - kw)
+            kk = jax.lax.dynamic_slice_in_dim(k, start, kw, axis=1)
+            vv = jax.lax.dynamic_slice_in_dim(v, start, kw, axis=1)
+            kp = start[None] + jnp.arange(kw)[None, :]
+            kp = jnp.broadcast_to(kp, (b, kw))
+        else:
+            kk, vv = k, v
+            kp = jnp.broadcast_to(pos[:, :s], (b, s))
+        oi = sdpa(cfg, qi, kk, vv, q_pos=pi, k_pos=kp, window=window,
+                  causal=True)
+        return None, oi
+
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    _, outs = maybe_scan(cfg, body_fn, None,
+                         (qs, ps, jnp.arange(nc, dtype=jnp.int32)))
+    return outs.swapaxes(0, 1).reshape(b, s, h * hd)
+
+
+def attention_decode(cfg: ModelConfig, p: dict, x: Array, positions: Array,
+                     window, k_cache: Array, v_cache: Array,
+                     cache_index: Array) -> Tuple[Array, Array, Array]:
+    """Single-token decode against a (B, Hkv, cap, hd) cache.
+
+    Full-attention layers use cap = max context (slot = position); SWA
+    layers use cap = window (ring buffer, slot = position % cap).  Either
+    way absolute slot positions are reconstructed in closed form, so masking
+    is uniform.
+    """
+    b = x.shape[0]
+    cap = k_cache.shape[2]
+    q, k, v = _project_qkv(cfg, p, x, x)  # sq = 1
+    t = cache_index  # scalar int32: number of tokens already cached
+    rope_pos = positions if (positions is not None and positions.ndim == 3) \
+        else jnp.full((b, 1), t, jnp.int32)
+    q = apply_rope(cfg, q, rope_pos)
+    k = apply_rope(cfg, k, rope_pos)
+    slot = jnp.mod(t, cap)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.transpose(0, 2, 1, 3).astype(k_cache.dtype),
+        (0, 0, slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.transpose(0, 2, 1, 3).astype(v_cache.dtype),
+        (0, 0, slot, 0))
+    # absolute position of each slot s given t+1 total tokens written:
+    #   p(s) = t - ((t - s) mod cap)   (newest written at slot t%cap holds t)
+    s_idx = jnp.arange(cap, dtype=jnp.int32)
+    slot_pos = t - jnp.mod(t - s_idx, cap)
+    valid = slot_pos >= 0
+    q_pos = jnp.full((b, 1), t, jnp.int32)
+    k_pos = jnp.broadcast_to(slot_pos[None, :], (b, cap))
+    k_valid = jnp.broadcast_to(valid[None, :], (b, cap))
+    kc = k_cache.transpose(0, 2, 1, 3)  # (B, cap, Hkv, hd)
+    vc = v_cache.transpose(0, 2, 1, 3)
+    out = sdpa(cfg, q, kc, vc, q_pos=q_pos, k_pos=k_pos, window=window,
+               causal=True, k_valid=k_valid)
+    return out @ p["wo"].astype(out.dtype), k_cache, v_cache
+
+
+def cross_attention_apply(cfg: ModelConfig, p: dict, x: Array,
+                          k: Array, v: Array) -> Array:
+    """Cross-attention against precomputed enc K/V (B, S_enc, Hkv, hd).
+    q-chunked like self-attention when cfg.attn_chunk > 0."""
+    b, sq, _ = x.shape
+    hd, h = cfg.hd, cfg.n_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, sq, h, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    sk = k.shape[1]
+    k_pos = jnp.zeros((b, sk), jnp.int32)
+    c = cfg.attn_chunk
+
+    def attend(qi):
+        q_pos = jnp.zeros((b, qi.shape[1]), jnp.int32)
+        return sdpa(cfg, qi, k, v, q_pos=q_pos, k_pos=k_pos, window=0,
+                    causal=False)
+
+    if c > 0 and sq > c and sq % c == 0:
+        nc = sq // c
+        qs = q.reshape(b, nc, c, h, hd).swapaxes(0, 1)
+        body = lambda _, qi: (None, attend(qi))
+        body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+        _, outs = maybe_scan(cfg, body_fn, None, qs)
+        out = outs.swapaxes(0, 1).reshape(b, sq, h * hd)
+    else:
+        out = attend(q)
+    return out @ p["wo"].astype(out.dtype)
+
+
+def cross_kv(cfg: ModelConfig, p: dict, enc_out: Array):
+    b, sk, _ = enc_out.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, sk, hkv, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, sk, hkv, hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, f)),
+         "w2": dense_init(ks[1], (f, d), scale=0.02 / max(cfg.n_layers, 1) ** 0.5)}
+    if cfg.activation == "swiglu":
+        p["w3"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    h = x @ p["w1"].astype(x.dtype)
+    if cfg.activation == "swiglu":
+        g = x @ p["w3"].astype(x.dtype)
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g
+    elif cfg.activation == "squared_relu":
+        r = jnp.maximum(h, 0)
+        h = r * r
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown activation {cfg.activation}")
+    return h @ p["w2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based capacity routing; no one-hot dispatch einsum)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, fm, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), scale=0.02),
+        "w1": dense_init(ks[1], (e, d, fm)),
+        "w2": dense_init(ks[2], (e, fm, d), scale=0.02 / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.activation == "swiglu":
+        p["w3"] = dense_init(ks[3], (e, d, fm))
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: Array) -> Tuple[Array, Array]:
+    if cfg.moe_impl == "per_example":
+        return moe_apply_per_example(cfg, p, x)
+    return moe_apply_global(cfg, p, x)
+
+
+def moe_apply_global(cfg: ModelConfig, p: dict, x: Array) -> Tuple[Array, Array]:
+    """Token-choice top-k MoE with sort-based dispatch.
+
+    Tokens are flattened, routed top-k, sorted by expert id, and packed into
+    an (E, C, D) capacity buffer via scatter (zero matmul FLOPs for routing,
+    unlike the GShard one-hot dispatch einsum whose cost is quadratic in
+    tokens).  Over-capacity tokens are dropped (standard capacity-factor
+    semantics).  Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = b * s
+    xf = x.reshape(tokens, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)           # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, k)            # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(cfg.capacity_factor * tokens * k / e))
+    flat_e = top_i.reshape(-1)                         # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(tokens, dtype=jnp.int32), k)
+    flat_w = top_p.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    group_start = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(tokens * k, dtype=jnp.int32) - group_start[se]
+    keep = pos < cap
+    dest = jnp.where(keep, se * cap + pos, e * cap)   # drop -> scratch row
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[dest].set(xf[st])
+    xe = buf[: e * cap].reshape(e, cap, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w1"].astype(x.dtype))
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w3"].astype(x.dtype))
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g
+    elif cfg.activation == "squared_relu":
+        r = jnp.maximum(h, 0)
+        h = r * r
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))
+
+    y_sorted = ye.reshape(e * cap, d)[jnp.clip(dest, 0, e * cap - 1)]
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    out = jnp.zeros((tokens, d), x.dtype)
+    out = out.at[st].add(y_sorted * sw[:, None].astype(x.dtype))
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=0)                                   # mean router prob
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (tokens * k)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+    return out.reshape(b, s, d), aux
+
+
+def moe_apply_per_example(cfg: ModelConfig, p: dict,
+                          x: Array) -> Tuple[Array, Array]:
+    """Per-example (batch-local) top-k routing: argsort / searchsorted /
+    scatter run independently per batch row, so when the batch is
+    data-sharded NO routing op crosses devices — the only collective left is
+    the expert-parallel exchange for the expert einsums (the unavoidable EP
+    traffic).  Capacity is per-example: C = cf * S * k / E.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * s * k / e))
+
+    def route_one(xe):  # (S, D) -> (out (S, D), dispatch info)
+        logits = xe.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)            # (S, E)
+        top_p, top_i = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        flat_e = top_i.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+        flat_w = top_p.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        group_start = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+        pos = jnp.arange(s * k, dtype=jnp.int32) - group_start[se]
+        keep = pos < cap
+        dest = jnp.where(keep, se * cap + pos, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), xe.dtype)
+        buf = buf.at[dest].set(xe[st])
+        return buf[:e * cap].reshape(e, cap, d), (dest, st, sw, keep, probs,
+                                                  flat_e)
+
+    xe_b, (dest, st, sw, keep, probs, flat_e) = jax.vmap(route_one)(
+        x.reshape(b, s, d))
+    # expert einsums over the (B, E, C, D) buffer — E shards expert-parallel
+    h = jnp.einsum("becd,edf->becf", xe_b, p["w1"].astype(x.dtype))
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xe_b, p["w3"].astype(x.dtype))
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g
+    elif cfg.activation == "squared_relu":
+        r = jnp.maximum(h, 0)
+        h = r * r
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    ye = jnp.einsum("becf,efd->becd", h, p["w2"].astype(x.dtype))
+
+    def gather_one(ye_e, dest_e, st_e, sw_e, keep_e):
+        flat = ye_e.reshape(e * cap, d)
+        y = flat[jnp.clip(dest_e, 0, e * cap - 1)]
+        y = jnp.where(keep_e[:, None], y, 0)
+        out = jnp.zeros((s, d), ye_e.dtype)
+        return out.at[st_e].add(y * sw_e[:, None].astype(ye_e.dtype))
+
+    out = jax.vmap(gather_one)(ye, dest, st, sw, keep)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(1.0) / (
+        b * s * k)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+    return out.reshape(b, s, d), aux
+
+
+__all__ = [
+    "dense_init", "rms_norm", "apply_rope", "default_positions",
+    "init_attention", "attention_apply", "attention_decode",
+    "cross_attention_apply", "cross_kv", "sdpa",
+    "init_mlp", "mlp_apply", "init_moe", "moe_apply",
+]

@@ -1,0 +1,71 @@
+"""Model registry: build a family-dispatched Model facade from a config."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, steps, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key) -> dict:
+        if self.cfg.enc_dec:
+            return encdec.init_params(key, self.cfg)
+        return transformer.init_params(key, self.cfg)
+
+    def init_shapes(self):
+        """Param ShapeDtypeStructs without allocating (for dry-run/specs)."""
+        key = jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: self.init(k), key)
+
+    def init_cache(self, batch: int, capacity: int):
+        return steps.init_cache(self.cfg, batch, capacity)
+
+    def cache_shapes(self, batch: int, capacity: int):
+        return jax.eval_shape(
+            lambda: steps.init_cache(self.cfg, batch, capacity))
+
+    def forward(self, params, **kw):
+        if self.cfg.enc_dec:
+            return encdec.forward(self.cfg, params, **kw)
+        return transformer.forward(self.cfg, params, **kw)
+
+    def param_count(self) -> int:
+        shapes = self.init_shapes()
+        return sum(math.prod(p.shape) for p in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (experts scaled by top_k / E)."""
+        cfg = self.cfg
+        if not cfg.uses_moe:
+            return self.param_count()
+        shapes = self.init_shapes()
+        total = 0
+        def visit(path, leaf):
+            nonlocal total
+            keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            n = math.prod(leaf.shape)
+            if any(f"/{w}" in keys or keys.endswith(w)
+                   for w in ("w1", "w2", "w3")) and "moe" in keys:
+                n = n * cfg.top_k // max(cfg.n_experts, 1)
+            total += n
+        jax.tree_util.tree_map_with_path(visit, shapes)
+        return total
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    cfg.validate()
+    return Model(cfg)
+
+
+__all__ = ["Model", "build_model"]

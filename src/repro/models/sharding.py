@@ -1,0 +1,225 @@
+"""Sharding policy: parameter PartitionSpecs + activation constraints.
+
+One policy object describes how a config maps onto the production mesh:
+
+* tensor parallelism ("model" axis): attention head dims, ffn hidden dims,
+  MoE experts (expert-parallel when E divides the axis, intra-expert TP
+  otherwise), vocab dim of embeddings/head when divisible;
+* ZeRO-3 / FSDP ("data" axes, optional): the largest remaining axis of each
+  >=2D weight is additionally sharded over the batch axes — required for
+  340B/72B-class params on 16 GB v5e chips;
+* activation constraints: residual stream (B, S, D) batch-sharded, with
+  optional sequence parallelism (S over "model") for activation-memory
+  relief; logits vocab-sharded when the head is.
+
+Rules are path-pattern based so they cover every model family uniformly;
+anything unmatched is replicated (safe default — GSPMD propagates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fsdp: bool = False
+    seq_shard: bool = False
+
+    # --- sizes ----------------------------------------------------------
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _div(self, dim: int, size: int) -> bool:
+        return dim % size == 0 and dim >= size
+
+    # --- activation constraints ------------------------------------------
+
+    def constrain(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def constrain_residual(self, x):
+        """(B, S, D) or (B, 1, D): batch over dp; optionally seq over tp."""
+        if x.ndim != 3:
+            return x
+        seq_ax = self.tp_axis if (
+            self.seq_shard and self._div(x.shape[1], self.tp_size)) else None
+        return self.constrain(x, P(self.dp_axes, seq_ax, None))
+
+    def constrain_logits(self, x, vocab_sharded: bool = True):
+        if x.ndim != 3:
+            return x
+        v_ax = self.tp_axis if (
+            vocab_sharded and self._div(x.shape[-1], self.tp_size)) else None
+        return self.constrain(x, P(self.dp_axes, None, v_ax))
+
+    def batch_spec(self, ndim: int) -> P:
+        return P(self.dp_axes, *([None] * (ndim - 1)))
+
+    # --- parameter specs --------------------------------------------------
+
+    def param_spec(self, path: str, shape: Tuple[int, ...],
+                   cfg: ModelConfig) -> P:
+        """Spec for one weight.  `path` is a '/'-joined pytree path; stacked
+        block weights have a leading L axis, detected via 'blocks' in path."""
+        stacked = "blocks" in path
+        core = shape[1:] if stacked else shape
+        spec = self._core_spec(path, core, cfg)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    def _core_spec(self, path: str, shape: Tuple[int, ...],
+                   cfg: ModelConfig) -> P:
+        tp, ts = self.tp_axis, self.tp_size
+        leaf = path.rsplit("/", 1)[-1]
+
+        out: list = [None] * len(shape)
+        if leaf in ("embed", "src_embed"):           # (V, D)
+            if self._div(shape[0], ts):
+                out[0] = tp
+            elif self._div(shape[1], ts):
+                out[1] = tp
+        elif leaf == "lm_head":                       # (D, V)
+            if self._div(shape[1], ts):
+                out[1] = tp
+            elif self._div(shape[0], ts):
+                out[0] = tp
+        elif leaf in ("wq", "wk", "wv", "w1", "w3", "in_proj"):
+            if len(shape) == 3:                       # experts (E, D, F)
+                if self._div(shape[0], ts):
+                    out[0] = tp                        # expert parallel
+                elif self._div(shape[2], ts):
+                    out[2] = tp                        # intra-expert TP
+            elif self._div(shape[1], ts):
+                out[1] = tp
+        elif leaf in ("wo", "w2", "out_proj", "x_proj"):
+            if len(shape) == 3:                       # experts (E, F, D)
+                if self._div(shape[0], ts):
+                    out[0] = tp
+                elif self._div(shape[1], ts):
+                    out[1] = tp
+            elif self._div(shape[0], ts):
+                out[0] = tp
+        elif leaf in ("bq", "bk", "bv"):
+            if self._div(shape[0], ts):
+                out[0] = tp
+        elif leaf in ("dt_proj",):                    # (r, di)
+            if self._div(shape[1], ts):
+                out[1] = tp
+        elif leaf in ("A_log",):                      # (di, n)
+            if self._div(shape[0], ts):
+                out[0] = tp
+        elif leaf in ("conv_w",):                     # (K, di)
+            if self._div(shape[1], ts):
+                out[1] = tp
+        elif leaf in ("conv_b", "dt_bias", "D"):      # (di,)
+            if self._div(shape[0], ts):
+                out[0] = tp
+        # router, norms, scalars: replicated
+
+        if self.fsdp and len(shape) >= 2:
+            out = self._add_fsdp(out, shape)
+        return P(*out)
+
+    def _add_fsdp(self, out: list, shape: Tuple[int, ...]) -> list:
+        """Shard the largest not-yet-sharded axis over the dp axes."""
+        ds = self.dp_size
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if out[i] is None and self._div(shape[i], ds):
+                out[i] = self.dp_axes
+                break
+        return out
+
+    def params_shardings(self, cfg: ModelConfig, shapes) -> dict:
+        """Pytree of NamedShardings matching a params shape pytree."""
+        def visit(path, leaf):
+            keys = "/".join(_key_str(k) for k in path)
+            return NamedSharding(self.mesh,
+                                 self.param_spec(keys, leaf.shape, cfg))
+        return jax.tree_util.tree_map_with_path(visit, shapes)
+
+    def cache_shardings(self, cfg: ModelConfig, cache_shapes,
+                        kv_seq_axis: bool = False):
+        """Decode-cache shardings: batch over dp; KV-heads or sequence over
+        tp per cfg.kv_cache_shard ('sequence' = flash-decoding style — the
+        right choice when Hkv < tp_size or the cache dominates HBM)."""
+        seq_mode = cfg.kv_cache_shard == "sequence" or kv_seq_axis
+
+        def batch_axes(dim: int):
+            """dp sharding for the batch axis only when it divides (the
+            long_500k cells have batch 1 -> replicate)."""
+            return self.dp_axes if self._div(dim, self.dp_size) else None
+
+        def visit(path, leaf):
+            keys = "/".join(_key_str(k) for k in path)
+            shape = leaf.shape
+            last = keys.rsplit("/", 1)[-1]
+            if last in ("k", "v"):
+                # (L, B, Hkv, cap, hd)
+                out = [None, batch_axes(shape[1]), None, None, None]
+                if seq_mode and self._div(shape[3], self.tp_size):
+                    out[3] = self.tp_axis
+                elif self._div(shape[2], self.tp_size):
+                    out[2] = self.tp_axis
+                return NamedSharding(self.mesh, P(*out))
+            if "ssm_h" in keys:  # (L, B, di, n)
+                out = [None, batch_axes(shape[1]), None, None]
+                if self._div(shape[2], self.tp_size):
+                    out[2] = self.tp_axis
+                return NamedSharding(self.mesh, P(*out))
+            if "conv" in keys:   # (L, B, K-1, di)
+                out = [None, batch_axes(shape[1]), None, None]
+                if self._div(shape[3], self.tp_size):
+                    out[3] = self.tp_axis
+                return NamedSharding(self.mesh, P(*out))
+            if "enc_out" in keys:  # (B, S, D)
+                return NamedSharding(self.mesh,
+                                     P(batch_axes(shape[0]), None, None))
+            return NamedSharding(self.mesh, P())
+        return jax.tree_util.tree_map_with_path(visit, cache_shapes)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def make_policy(cfg: ModelConfig, mesh: Mesh) -> ShardingPolicy:
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    return ShardingPolicy(
+        mesh=mesh,
+        dp_axes=dp or (names[0],),
+        tp_axis="model" if "model" in names else names[-1],
+        fsdp=cfg.param_sharding == "fsdp_tp",
+        seq_shard=cfg.seq_shard_activations,
+    )
+
+
+__all__ = ["ShardingPolicy", "make_policy"]

@@ -1,0 +1,141 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba SSM heads).
+
+TPU adaptation notes (DESIGN.md SS2): the CUDA selective-scan kernel does a
+fused sequential scan in shared memory.  The TPU-idiomatic equivalent is a
+*chunked* scan: an outer lax.scan carries the (B, d_inner, state) boundary
+state across sequence chunks, and each chunk runs a log-depth associative
+scan that only materialises (B, Q, d_inner, state) transiently — O(S/Q)
+sequential steps instead of O(S), with the chunk body under jax.checkpoint
+so the backward pass recomputes instead of storing per-step states.
+
+Decode is the O(1) recurrence h' = exp(dt*A) h + dt*B*x with a (d_conv-1)
+ring of raw inputs for the causal depthwise conv.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation of A: A[d, j] = -(j + 1)
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), scale=0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, r + 2 * n)),
+        "dt_proj": dense_init(ks[3], (r, di), scale=r ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d),
+                               scale=0.02 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, prefix: Array = None) -> Array:
+    """Depthwise causal conv.  x (B, S, di); w (K, di).  prefix: (B, K-1, di)
+    carried inputs for decode continuity (None -> zero history)."""
+    k = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    s = x.shape[1]
+    out = sum(xp[:, i:i + s, :] * w[i].astype(x.dtype) for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def _ssm_inputs(cfg: ModelConfig, p: dict, xc: Array):
+    """Common projections: xc (B, S, di) (post-conv, post-silu)."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    proj = xc @ p["x_proj"].astype(xc.dtype)  # (B, S, r + 2n)
+    dt_raw, b_mat, c_mat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"])                                   # (B, S, di) f32
+    a = -jnp.exp(p["A_log"])                              # (di, n) f32
+    return dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def ssm_apply(cfg: ModelConfig, p: dict, x: Array,
+              h0: Array = None) -> Tuple[Array, Tuple[Array, Array]]:
+    """Full-sequence scan.  x (B, S, D) -> (y, (h_final, conv_tail)).
+    conv_tail is the last (d_conv - 1) pre-conv inputs — the decode
+    continuation state for the causal depthwise conv."""
+    b, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, a, bm, cm = _ssm_inputs(cfg, p, xc)
+
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        q = s  # ragged seq (tests): fall back to a single chunk
+    nc = s // q
+
+    def reshape_c(t):  # (B, S, ...) -> (nc, B, Q, ...)
+        return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xcs, dts, bms, cms = map(reshape_c, (xc.astype(jnp.float32), dt, bm, cm))
+
+    def chunk_body(h, inp):
+        xck, dtk, bmk, cmk = inp             # (B, Q, di) / (B, Q, n)
+        da = jnp.exp(dtk[..., None] * a)     # (B, Q, di, n)
+        db = dtk[..., None] * bmk[:, :, None, :] * xck[..., None]
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(op, (da, db), axis=1)
+        hk = a_cum * h[:, None] + b_cum      # (B, Q, di, n)
+        yk = jnp.einsum("bqdn,bqn->bqd", hk, cmk)
+        return hk[:, -1], yk
+
+    if cfg.remat != "none":
+        chunk_body = jax.checkpoint(chunk_body)
+    h0 = h0 if h0 is not None else jnp.zeros((b, di, n), jnp.float32)
+    from repro.models.layers import maybe_scan
+    h_last, ys = maybe_scan(cfg, chunk_body, h0, (xcs, dts, bms, cms))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    conv_tail = xi[:, -(cfg.ssm_conv - 1):, :]
+    return y @ p["out_proj"].astype(x.dtype), (h_last, conv_tail)
+
+
+def ssm_decode(cfg: ModelConfig, p: dict, x: Array, h: Array,
+               conv_cache: Array) -> Tuple[Array, Array, Array]:
+    """Single-token step.  x (B, 1, D); h (B, di, n); conv_cache
+    (B, K-1, di) raw pre-conv inputs.  Returns (y, h', conv_cache')."""
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)      # (B, 1, di)
+    xc = _causal_conv(xi, p["conv_w"], p["conv_b"], prefix=conv_cache)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    conv_cache = jnp.concatenate([conv_cache[:, 1:], xi.astype(conv_cache.dtype)],
+                                 axis=1)
+    dt, a, bm, cm = _ssm_inputs(cfg, p, xc)
+    da = jnp.exp(dt[:, 0, :, None] * a)                      # (B, di, n)
+    db = dt[:, 0, :, None] * bm[:, 0, None, :] * xc[:, 0, :, None].astype(jnp.float32)
+    h = da * h + db
+    y = jnp.einsum("bdn,bn->bd", h, cm[:, 0])[:, None, :]    # (B, 1, di)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"].astype(x.dtype), h, conv_cache
+
+
+__all__ = ["init_ssm", "ssm_apply", "ssm_decode"]

@@ -1,0 +1,193 @@
+"""Step functions: train / prefill / decode, for every model family.
+
+These are the functions the launcher jits and the dry-run lowers.  They are
+built per-config (closures over ModelConfig + ShardingPolicy) and take only
+pytrees of arrays, so `.lower(**input_specs(cfg, shape))` works unchanged
+across all 10 architectures.
+
+Memory discipline:
+* loss is computed in sequence chunks (cfg.logits_chunk tokens) so the
+  (B, S, V) logits tensor never materialises — decisive for 128K-256K
+  vocabularies;
+* gradient accumulation (cfg.grad_accum) scans micro-batches, bounding
+  activation memory at micro-batch scale;
+* donated params/opt-state buffers (launcher passes donate_argnums).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(cfg: ModelConfig, params: dict, hidden: Array,
+                 labels: Array, policy=None) -> Array:
+    """Next-token cross-entropy without materialising (B, S, V) logits.
+
+    hidden: (B, S, D) post-final-norm.  labels: (B, S) int32 (-1 = pad).
+    Chunks along S; each chunk projects to logits, takes logsumexp, and
+    gathers the label logit.  Mean over non-pad tokens.
+    """
+    b, s, d = hidden.shape
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(hidden.dtype)
+    chunk = cfg.logits_chunk if cfg.logits_chunk > 0 else s
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fall back to unchunked for ragged seqs (tests)
+    nc = s // chunk
+
+    hs = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)   # (nc, B, C, D)
+    ls = labels.reshape(b, nc, chunk).swapaxes(0, 1)      # (nc, B, C)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, lc = inp
+        logits = (hc @ head).astype(jnp.float32)          # (B, C, V)
+        if policy is not None:
+            logits = policy.constrain_logits(logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - lab) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    from repro.models.layers import maybe_scan
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    (tot, cnt), _ = maybe_scan(cfg, body_fn,
+                               (jnp.float32(0), jnp.float32(0)), (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            policy=None) -> tuple:
+    """Forward + loss for one (micro-)batch.  Returns (loss, metrics)."""
+    if cfg.enc_dec:
+        hidden, aux, _ = encdec.forward(
+            cfg, params, src=batch["src"], tokens=batch["tokens"],
+            policy=policy)
+    else:
+        hidden, aux, _ = transformer.forward(
+            cfg, params,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+            policy=policy)
+    xent = chunked_xent(cfg, params, hidden, batch["labels"], policy=policy)
+    loss = xent + aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    policy=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, policy=policy),
+            has_aux=True)(params)
+
+    def step(params, opt_state, **batch):
+        if cfg.grad_accum > 1:
+            k = cfg.grad_accum
+
+            def micro(b_i):
+                return jax.tree.map(
+                    lambda a: a.reshape(k, a.shape[0] // k, *a.shape[1:]),
+                    b_i)
+
+            micro_batch = micro(batch)
+
+            def body(carry, mb):
+                acc, _ = carry
+                (loss, metrics), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, metrics), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, metrics), _ = jax.lax.scan(
+                body, (zero, _zero_metrics()), micro_batch)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        params, opt_state, om = adamw.update(opt_cfg, grads, opt_state,
+                                             params)
+        metrics = dict(metrics, **om)
+        return params, opt_state, metrics
+
+    return step
+
+
+def _zero_metrics():
+    z = jnp.float32(0)
+    return {"loss": z, "xent": z, "aux": z}
+
+
+def make_prefill_step(cfg: ModelConfig, policy=None,
+                      cache_capacity: Optional[int] = None):
+    """(params, **inputs) -> (last_logits, cache)."""
+
+    def step(params, **batch):
+        cap = cache_capacity
+        if cfg.enc_dec:
+            hidden, _, cache = encdec.forward(
+                cfg, params, src=batch["src"], tokens=batch["tokens"],
+                cache_capacity=cap, policy=policy)
+        else:
+            hidden, _, caches = transformer.forward(
+                cfg, params,
+                tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                positions=batch.get("positions"),
+                cache_capacity=cap, policy=policy)
+            cache = caches
+        last = hidden[:, -1:, :]
+        logits = transformer.project_logits(cfg, params, last, policy=policy)
+        return logits, cache
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, policy=None):
+    """(params, token, cache, cache_index) -> (logits, new_cache)."""
+
+    def step(params, *, token, cache, cache_index, positions=None):
+        if cfg.enc_dec:
+            return encdec.decode(cfg, params, cache, token, cache_index,
+                                 positions=positions, policy=policy)
+        return transformer.decode(cfg, params, cache, token, cache_index,
+                                  positions=positions, policy=policy)
+
+    return step
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int):
+    if cfg.enc_dec:
+        return encdec.init_cache(cfg, batch, capacity, capacity)
+    return transformer.init_cache(cfg, batch, capacity)
+
+
+__all__ = ["loss_fn", "chunked_xent", "make_train_step", "make_prefill_step",
+           "make_decode_step", "init_cache"]

@@ -1,0 +1,311 @@
+"""Decoder-only LM trunk: scan-over-layers with run grouping.
+
+Layers are grouped into maximal *runs* of consecutive layers sharing an
+attention-window class (full vs SWA) — hymba's {global, swa, ..., global}
+pattern yields 5 runs; uniform archs yield 1.  Params are stored stacked over
+ALL layers (one (L, ...) leaf per weight — small HLO, fast compile); each run
+scans over its slice.  Decode caches are kept per-run so SWA layers carry
+window-bounded ring buffers while global layers carry full-context caches —
+this is what makes long_500k feasible for mixtral/hymba (DESIGN.md SS5).
+
+Remat: with cfg.remat == "block", each scan body is jax.checkpoint'ed, so
+backward recomputes a layer from its (B, S, D) input.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def layer_runs(cfg: ModelConfig) -> Tuple[Tuple[int, int, int], ...]:
+    """Maximal runs of consecutive layers with equal window.
+    Returns ((window, start, count), ...)."""
+    ws = cfg.layer_windows() if cfg.family != "ssm" else (0,) * cfg.n_layers
+    runs: List[Tuple[int, int, int]] = []
+    for i, w in enumerate(ws):
+        if runs and runs[-1][0] == w:
+            w0, s0, c0 = runs[-1]
+            runs[-1] = (w0, s0, c0 + 1)
+        else:
+            runs.append((w, i, 1))
+    return tuple(runs)
+
+
+def _has_attn(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"
+
+
+def _has_ssm(cfg: ModelConfig) -> bool:
+    return cfg.family == "ssm" or cfg.hybrid
+
+
+def _has_mlp(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if _has_attn(cfg):
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if _has_ssm(cfg):
+        p["ssm"] = S.init_ssm(ks[1], cfg)
+    if _has_mlp(cfg):
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if cfg.uses_moe:
+            p["moe"] = L.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    block_keys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    p = {
+        "embed": L.dense_init(ks[1], (cfg.vocab, cfg.d_model)),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[2], (cfg.d_model, cfg.vocab))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block application (single layer)
+# ---------------------------------------------------------------------------
+
+
+def block_apply(cfg: ModelConfig, p: dict, x: Array, positions: Array,
+                window, return_cache: bool = False):
+    """One decoder layer, full-sequence.  Returns (x, aux, cache_piece|None).
+    cache_piece holds raw per-layer state: kv (B,S,Hkv,hd) and/or ssm state."""
+    aux = jnp.float32(0.0)
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    delta = jnp.zeros_like(x)
+    piece: dict = {}
+    if _has_attn(cfg):
+        attn_out, kv = L.attention_apply(cfg, p["attn"], h, positions, window)
+        delta = delta + attn_out
+        if return_cache:
+            piece["k"], piece["v"] = kv
+    if _has_ssm(cfg):
+        ssm_out, (h_last, conv_tail) = S.ssm_apply(cfg, p["ssm"], h)
+        delta = delta + ssm_out
+        if return_cache:
+            piece["ssm_h"], piece["conv"] = h_last, conv_tail
+    x = x + delta
+    if _has_mlp(cfg):
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.uses_moe:
+            mo, aux = L.moe_apply(cfg, p["moe"], h2)
+            x = x + mo
+        else:
+            x = x + L.mlp_apply(cfg, p["mlp"], h2)
+    return x, aux, (piece if return_cache else None)
+
+
+def block_decode(cfg: ModelConfig, p: dict, x: Array, positions, window,
+                 block_cache: dict, cache_index):
+    """One decoder layer, single token.  Returns (x, new_block_cache)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    delta = jnp.zeros_like(x)
+    new_cache = dict(block_cache)
+    if _has_attn(cfg):
+        attn_out, k_c, v_c = L.attention_decode(
+            cfg, p["attn"], h, positions, window,
+            block_cache["k"], block_cache["v"], cache_index)
+        new_cache["k"], new_cache["v"] = k_c, v_c
+        delta = delta + attn_out
+    if _has_ssm(cfg):
+        ssm_out, h_s, conv_c = S.ssm_decode(
+            cfg, p["ssm"], h, block_cache["ssm_h"], block_cache["conv"])
+        new_cache["ssm_h"], new_cache["conv"] = h_s, conv_c
+        delta = delta + ssm_out
+    x = x + delta
+    if _has_mlp(cfg):
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.uses_moe:
+            mo, _ = L.moe_apply(cfg, p["moe"], h2)
+            x = x + mo
+        else:
+            x = x + L.mlp_apply(cfg, p["mlp"], h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# trunk forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _slice_run(blocks, start: int, count: int):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + count,
+                                                       axis=0), blocks)
+
+
+def forward(cfg: ModelConfig, params: dict, *,
+            tokens: Optional[Array] = None,
+            embeds: Optional[Array] = None,
+            positions: Optional[Array] = None,
+            cache_capacity: Optional[int] = None,
+            policy=None):
+    """Full-sequence forward.  Returns (logits_fn_input, aux, caches).
+
+    `caches` is a per-run list of decode caches (or None) when
+    cache_capacity is given (prefill).  The returned hidden state is
+    post-final-norm; callers project to logits (steps.py chunks the loss).
+    """
+    if embeds is not None:
+        x = embeds.astype(cfg.activation_dtype())
+        b, s = x.shape[0], x.shape[1]
+    else:
+        x = params["embed"].astype(cfg.activation_dtype())[tokens]
+        b, s = tokens.shape
+    if positions is None:
+        positions = L.default_positions(b, s)
+        positions = jnp.broadcast_to(positions, (b, s))
+    if policy is not None:
+        x = policy.constrain_residual(x)
+
+    total_aux = jnp.float32(0.0)
+    caches = []
+    for (w, start, cnt) in layer_runs(cfg):
+        run_blocks = _slice_run(params["blocks"], start, cnt)
+        want = cache_capacity is not None
+
+        def body(carry, bp, _w=w, _want=want):
+            h, aux = carry
+            h, a, piece = block_apply(cfg, bp, h, positions, _w,
+                                      return_cache=_want)
+            if policy is not None:
+                h = policy.constrain_residual(h)
+            return (h, aux + a), piece
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            (x, total_aux), pieces = jax.lax.scan(body, (x, total_aux),
+                                                  run_blocks)
+        else:
+            plist = []
+            for i in range(cnt):
+                bp = jax.tree.map(lambda a: a[i], run_blocks)
+                (x, total_aux), piece = body((x, total_aux), bp)
+                plist.append(piece)
+            pieces = (jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+                      if want else None)
+        if cache_capacity is not None:
+            caches.append(_prefill_cache(cfg, pieces, w, s, cache_capacity,
+                                         cnt, b))
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, total_aux, (caches if cache_capacity is not None else None)
+
+
+def _prefill_cache(cfg: ModelConfig, pieces: dict, window: int, s: int,
+                   capacity: int, cnt: int, b: int):
+    """Convert stacked per-layer prefill state into decode caches."""
+    cache: dict = {}
+    if pieces and "k" in pieces:
+        cap = min(window, capacity) if window > 0 else capacity
+
+        def to_cache(t):  # (cnt, B, S, Hkv, hd) -> (cnt, B, Hkv, cap, hd)
+            t = t.transpose(0, 1, 3, 2, 4)
+            buf = jnp.zeros((cnt, b, cfg.n_kv_heads, cap, cfg.hd), t.dtype)
+            take = min(s, cap)
+            src = t[:, :, :, s - take:, :]
+            slots = (jnp.arange(s - take, s) % cap) if window > 0 else \
+                jnp.arange(take)
+            return buf.at[:, :, :, slots, :].set(src)
+
+        cache["k"], cache["v"] = to_cache(pieces["k"]), to_cache(pieces["v"])
+    if pieces and "ssm_h" in pieces:
+        cache["ssm_h"] = pieces["ssm_h"]
+        cache["conv"] = pieces["conv"].astype(cfg.activation_dtype())
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> list:
+    """Zeroed per-run decode caches; SWA runs get window-sized ring buffers."""
+    caches = []
+    dt = cfg.activation_dtype()
+    for (w, start, cnt) in layer_runs(cfg):
+        c: dict = {}
+        if _has_attn(cfg):
+            cap = min(w, capacity) if w > 0 else capacity
+            shape = (cnt, batch, cfg.n_kv_heads, cap, cfg.hd)
+            c["k"] = jnp.zeros(shape, dt)
+            c["v"] = jnp.zeros(shape, dt)
+        if _has_ssm(cfg):
+            c["ssm_h"] = jnp.zeros((cnt, batch, cfg.d_inner, cfg.ssm_state),
+                                   jnp.float32)
+            c["conv"] = jnp.zeros((cnt, batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                  dt)
+        caches.append(c)
+    return caches
+
+
+def decode(cfg: ModelConfig, params: dict, cache: list, token: Array,
+           cache_index: Array, positions: Optional[Array] = None,
+           policy=None):
+    """One decode step.  token (B, 1) -> (logits (B, 1, V), new_cache)."""
+    x = params["embed"].astype(cfg.activation_dtype())[token]
+    new_caches = []
+    for run_idx, (w, start, cnt) in enumerate(layer_runs(cfg)):
+        run_blocks = _slice_run(params["blocks"], start, cnt)
+        run_cache = cache[run_idx]
+
+        def body(h, inp, _w=w):
+            bp, bc = inp
+            h, nc = block_decode(cfg, bp, h, positions, _w, bc, cache_index)
+            return h, nc
+
+        if cfg.scan_layers:
+            x, nc = jax.lax.scan(body, x, (run_blocks, run_cache))
+        else:
+            ncs = []
+            for i in range(cnt):
+                bp = jax.tree.map(lambda a: a[i], run_blocks)
+                bc = jax.tree.map(lambda a: a[i], run_cache)
+                x, c_i = body(x, (bp, bc))
+                ncs.append(c_i)
+            nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        new_caches.append(nc)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = project_logits(cfg, params, x, policy=policy)
+    return logits, new_caches
+
+
+def project_logits(cfg: ModelConfig, params: dict, x: Array, policy=None):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = (x @ head).astype(jnp.dtype(cfg.logits_dtype))
+    if policy is not None:
+        logits = policy.constrain_logits(logits)
+    return logits
+
+
+__all__ = ["layer_runs", "init_params", "init_block", "forward", "decode",
+           "init_cache", "project_logits", "block_apply", "block_decode"]

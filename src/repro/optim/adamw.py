@@ -1,0 +1,95 @@
+"""Functional AdamW with global-norm clipping and configurable moment dtype.
+
+Moments can live in bf16 (cfg.opt_state_dtype) — at 340B params on 16 GB
+chips the f32->bf16 moment saving (8 vs 12 bytes/param of optimizer+param
+state under full FSDP) is what makes single-pod training fit; see
+EXPERIMENTS.md SSDry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init(cfg: AdamWConfig, params):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+    lr = schedule(cfg, step)
+    c1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in
+            zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, state, {"grad_norm": gnorm, "lr": lr}
+
+
+__all__ = ["AdamWConfig", "init", "update", "schedule", "global_norm"]

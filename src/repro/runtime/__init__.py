@@ -1,0 +1,5 @@
+from repro.runtime import elastic, hlo, straggler, train_loop
+from repro.runtime.train_loop import FailureInjected, LoopConfig, TrainLoop
+
+__all__ = ["elastic", "hlo", "straggler", "train_loop",
+           "TrainLoop", "LoopConfig", "FailureInjected"]

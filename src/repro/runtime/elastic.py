@@ -1,0 +1,87 @@
+"""Elastic scaling: shrink/regrow the mesh around failed hosts.
+
+The key property the paper's bijection buys us (DESIGN.md SS6): PCC work
+assignment is *stateless* — tile ranges are pure functions of (total, p, i)
+— so elastic re-partitioning after a failure is a renumbering, not a
+job-table migration.  For LM training, re-meshing keeps the model (TP) axis
+intact (its collectives are latency-critical and its sharding determines
+param layout) and shrinks the data axis, resharding params from the last
+checkpoint.
+
+This container has no real failures; tests drive these plans directly and
+the train loop exposes an injection hook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import tiling
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_devices: int                # devices idled beyond the failures
+    new_tile_ranges: Optional[Tuple[Tuple[int, int], ...]] = None
+
+
+def shrink_data_axis(mesh: Mesh, n_failed: int,
+                     data_axis: str = "data") -> ElasticPlan:
+    """Shrink the data axis to the largest size whose device requirement is
+    met by the survivors; the model axis is preserved."""
+    names = tuple(mesh.axis_names)
+    shape = tuple(mesh.devices.shape)
+    sizes = dict(zip(names, shape))
+    if data_axis not in sizes:
+        raise ValueError(f"mesh has no axis {data_axis!r}")
+    total = int(np.prod(shape))
+    alive = total - n_failed
+    other = total // sizes[data_axis]
+    new_data = alive // other
+    if new_data < 1:
+        raise RuntimeError(
+            f"cannot re-mesh: only {alive} devices left, model plane "
+            f"needs {other}")
+    new_sizes = dict(sizes)
+    new_sizes[data_axis] = new_data
+    new_shape = tuple(new_sizes[a] for a in names)
+    dropped = alive - int(np.prod(new_shape))
+    return ElasticPlan(old_shape=shape, new_shape=new_shape,
+                       axis_names=names, dropped_devices=dropped)
+
+
+def build_mesh(plan: ElasticPlan, devices: Optional[Sequence] = None) -> Mesh:
+    """Materialise the plan over surviving devices (first-N policy here;
+    a real deployment passes the post-failure device list)."""
+    devs = list(devices if devices is not None else jax.devices())
+    need = int(np.prod(plan.new_shape))
+    if len(devs) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devs)}")
+    arr = np.asarray(devs[:need]).reshape(plan.new_shape)
+    return Mesh(arr, plan.axis_names)
+
+
+def replan_pcc(total_tiles: int, new_p: int) -> Tuple[Tuple[int, int], ...]:
+    """Stateless re-partition of PCC tile ranges for the new PE count —
+    a pure renumbering thanks to the bijection (C1/C5)."""
+    return tuple(tiling.balanced_counts(total_tiles, new_p))
+
+
+def elastic_pcc_plan(mesh: Mesh, n_failed: int, total_tiles: int,
+                     data_axis: str = "data") -> ElasticPlan:
+    plan = shrink_data_axis(mesh, n_failed, data_axis)
+    p_new = int(np.prod(plan.new_shape))
+    return dataclasses.replace(
+        plan, new_tile_ranges=replan_pcc(total_tiles, p_new))
+
+
+__all__ = ["ElasticPlan", "shrink_data_axis", "build_mesh", "replan_pcc",
+           "elastic_pcc_plan"]

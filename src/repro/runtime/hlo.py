@@ -1,0 +1,117 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+`compiled.cost_analysis()` reports FLOPs and bytes-accessed but NOT
+collective traffic, so we parse the (S)HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute /
+ragged-all-to-all instruction contributes its *operand* bytes (per the
+assignment's definition).  HLO under SPMD is a per-device program, so the
+sums below are per-device wire bytes; the roofline divides by per-link
+bandwidth (equivalent to global_bytes / (chips * link_bw)).
+
+Also counts op occurrences and flags *redundant* collectives (identical
+(kind, shape, replica_groups) tuples appearing more than once) — the primary
+smell the SSPerf hillclimb hunts.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+    redundant: List[Tuple[str, str, int]]  # (kind, signature, occurrences)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by = collections.Counter()
+    count_by = collections.Counter()
+    signatures = collections.Counter()
+
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        kind = None
+        for c in _COLLECTIVES:
+            # match `= <type> all-gather(`-style instruction, incl. -start
+            if f" {c}(" in s or f" {c}-start(" in s:
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand types live inside the call parens; fall back to result type
+        lhs, _, rhs = s.partition(f" {kind}")
+        paren = rhs[rhs.find("(") + 1: _matching_paren(rhs)]
+        op_shapes = _SHAPE_RE.findall(paren)
+        if not op_shapes:
+            op_shapes = _SHAPE_RE.findall(lhs)
+        b = sum(shape_bytes(dt, dims) for dt, dims in op_shapes)
+        bytes_by[kind] += b
+        count_by[kind] += 1
+        groups = ""
+        m = re.search(r"replica_groups=\{[^}]*\}|replica_groups=\[[^\]]*\]",
+                      s)
+        if m:
+            groups = m.group(0)
+        signatures[(kind, str(sorted(op_shapes)), groups)] += 1
+
+    redundant = [(k, sig, n) for (k, sig, g), n in signatures.items()
+                 if n > 1]
+    return CollectiveStats(dict(bytes_by), dict(count_by), redundant)
+
+
+def _matching_paren(s: str) -> int:
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s)
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> List[Tuple[str, int]]:
+    """Rough op-name histogram of an HLO module (remat/redundancy smell)."""
+    counts = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+[a-z0-9\[\],{}() ]*?\b([a-z][a-z0-9-]*)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return counts.most_common(top)
+
+
+__all__ = ["collective_stats", "CollectiveStats", "op_histogram",
+           "shape_bytes"]

@@ -1,0 +1,80 @@
+"""Checkpoint IO + manager: atomicity, retention, resume."""
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io
+from repro.checkpoint.manager import CheckpointManager
+
+
+@pytest.fixture
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32),
+                  "d": jnp.float32(3.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path, tree):
+    path = io.save(str(tmp_path), 7, tree, metadata={"x": 1})
+    got, meta = io.restore(path, like=tree)
+    assert meta == {"x": 1}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_tmp_never_visible(tmp_path, tree):
+    io.save(str(tmp_path), 1, tree)
+    # interrupted save: a .tmp dir without manifest must be invisible + GC'd
+    stale = tmp_path / "step_00000002.tmp-dead"
+    stale.mkdir()
+    (stale / "arr_00000.npy").write_bytes(b"garbage")
+    assert io.available_steps(str(tmp_path)) == [1]
+    assert io.gc_tmp(str(tmp_path)) == 1
+    assert not stale.exists()
+
+
+def test_incomplete_step_ignored(tmp_path, tree):
+    io.save(str(tmp_path), 1, tree)
+    broken = tmp_path / "step_00000005"
+    broken.mkdir()  # no manifest.json
+    assert io.available_steps(str(tmp_path)) == [1]
+
+
+def test_manager_retention(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, async_save=False)
+    for s in range(6):
+        mgr.save(s, tree)
+    assert io.available_steps(str(tmp_path)) == [4, 5]
+    mgr.close()
+
+
+def test_manager_keep_every_anchors(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep_last=1, keep_every=4,
+                            async_save=False)
+    for s in range(9):
+        mgr.save(s, tree)
+    assert io.available_steps(str(tmp_path)) == [0, 4, 8]
+    mgr.close()
+
+
+def test_manager_async_and_resume(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    mgr.save(3, tree, metadata={"cursor": 42})
+    mgr.wait()
+    out = mgr.restore_latest(like=tree)
+    assert out is not None
+    got, meta, step = out
+    assert step == 3 and meta["cursor"] == 42
+    mgr.close()
+
+
+def test_restore_latest_empty(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    assert mgr.restore_latest(like=tree) is None
+    mgr.close()

@@ -1,0 +1,131 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allpairs import pad_u, prepare
+from repro.core.pcc import transform
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention, grid_savings
+from repro.kernels.pcc_tile import pcc_tiles
+from repro.core import mapping
+
+
+def _u_pad(n, l, t, lblk, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+    u = transform(x, dtype=dtype)
+    return pad_u(u, t, lblk)
+
+
+TOL = {jnp.float32: 2e-6, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("n,l,t,lblk", [
+    (16, 16, 8, 8),        # exact fit
+    (20, 40, 8, 16),       # padded rows
+    (33, 17, 16, 8),       # padded both
+    (64, 24, 8, 8),        # many tiles
+    (7, 100, 8, 32),       # single tile row
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pcc_tiles_sweep(n, l, t, lblk, dtype):
+    u = _u_pad(n, l, t, lblk, dtype)
+    m = u.shape[0] // t
+    total = m * (m + 1) // 2
+    out = pcc_tiles(u, 0, t=t, l_blk=lblk, pass_tiles=total, interpret=True)
+    want = ref.pcc_tiles_ref(u, 0, t=t, pass_tiles=total)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_pcc_tiles_runtime_jstart():
+    """One compiled kernel serves every pass (scalar-prefetch J_start) —
+    the paper's Alg. 1 J_start/J_end contract."""
+    u = _u_pad(40, 32, 8, 16)
+    m = u.shape[0] // 8
+    total = m * (m + 1) // 2
+    full = pcc_tiles(u, 0, t=8, l_blk=16, pass_tiles=total, interpret=True)
+    for start in [0, 3, 7, total - 2]:
+        part = pcc_tiles(u, start, t=8, l_blk=16, pass_tiles=4,
+                         interpret=True)
+        take = min(4, total - start)
+        np.testing.assert_allclose(np.asarray(part)[:take],
+                                   np.asarray(full)[start:start + take],
+                                   atol=1e-6)
+
+
+def test_pcc_tiles_clamping():
+    """Out-of-range pass tiles clamp to the last tile (padding semantics)."""
+    u = _u_pad(16, 16, 8, 8)
+    total = 3
+    out = pcc_tiles(u, 2, t=8, l_blk=8, pass_tiles=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out)[1], np.asarray(out)[2],
+                               atol=0)  # clamped duplicates of tile 2
+
+
+def test_pcc_diagonal_tiles_symmetric():
+    u = _u_pad(24, 16, 8, 8)
+    out = np.asarray(pcc_tiles(u, 0, t=8, l_blk=8, pass_tiles=6,
+                               interpret=True))
+    m = 3
+    for yt in range(m):
+        jt = mapping.job_id(m, yt, yt)
+        np.testing.assert_allclose(out[jt], out[jt].T, atol=1e-6)
+
+
+# -- flash attention ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d,blk", [
+    (1, 2, 2, 32, 16, 16),     # MHA, exact blocks
+    (2, 4, 2, 70, 16, 16),     # GQA, padded seq
+    (1, 8, 1, 64, 32, 16),     # MQA
+    (2, 2, 2, 17, 8, 16),      # seq < block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, hkv, s, d, blk, dtype):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    out = flash_attention(q, k, v, blk_q=blk, blk_k=blk, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True)
+    tol = 2e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 32, 48])
+def test_flash_attention_windowed(window):
+    rng = np.random.default_rng(2)
+    b, h, s, d = 2, 4, 96, 16
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, 2, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, 2, s, d)).astype(np.float32))
+    out = flash_attention(q, k, v, window=window, blk_q=16, blk_k=16,
+                          interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-6)
+
+
+def test_grid_savings():
+    """Triangular grid halves dense-grid steps asymptotically (paper C1)."""
+    assert grid_savings(4096, 128) == pytest.approx(0.484, abs=1e-2)
+    assert grid_savings(32768, 128, 4096) > 0.8
+    assert grid_savings(128, 128) == 0.0  # single block: no savings
+
+
+def test_ops_dispatch():
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((20, 24)).astype(np.float32))
+    u = pad_u(transform(x), 8, 8)
+    a = ops.pcc_tiles(u, 0, t=8, l_blk=8, pass_tiles=6, impl="interpret")
+    b = ops.pcc_tiles(u, 0, t=8, l_blk=8, pass_tiles=6, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert ops.get_default_impl() in ("kernel", "interpret", "ref")

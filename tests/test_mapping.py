@@ -1,0 +1,152 @@
+"""Property tests for the paper's core contribution: the bijective mappings.
+
+These are the exact invariants the paper proves in SSIII-B (and 'also wrote
+a computer program to test'); hypothesis drives n into the millions.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mapping
+
+
+# -- upper-triangle bijection (Eq. 9/10/14/15) -------------------------------
+
+
+@given(st.integers(1, 10**7), st.data())
+@settings(max_examples=200, deadline=None)
+def test_job_roundtrip(n, data):
+    j = data.draw(st.integers(0, mapping.tri_count(n) - 1))
+    y, x = mapping.job_coord(n, j)
+    assert 0 <= y <= x < n
+    assert mapping.job_id(n, y, x) == j
+
+
+@given(st.integers(1, 2000), st.data())
+@settings(max_examples=100, deadline=None)
+def test_coord_roundtrip(n, data):
+    y = data.draw(st.integers(0, n - 1))
+    x = data.draw(st.integers(y, n - 1))
+    j = mapping.job_id(n, y, x)
+    assert 0 <= j < mapping.tri_count(n)
+    assert mapping.job_coord(n, j) == (y, x)
+
+
+@given(st.integers(1, 500))
+@settings(max_examples=30, deadline=None)
+def test_bijection_exhaustive(n):
+    """Every job id maps to a distinct upper-triangle cell: true bijection."""
+    seen = set()
+    for j in range(mapping.tri_count(n)):
+        c = mapping.job_coord(n, j)
+        assert c not in seen
+        seen.add(c)
+    assert len(seen) == mapping.tri_count(n)
+
+
+@given(st.integers(1, 10**6), st.data())
+@settings(max_examples=100, deadline=None)
+def test_f_n_prefix_property(n, data):
+    """F_n(y) counts cells before row y; boundary cases per the paper."""
+    assert mapping.f_n(n, 0) == 0
+    assert mapping.f_n(n, n) == mapping.tri_count(n)
+    y = data.draw(st.integers(0, n - 1))
+    # row y holds exactly n - y cells
+    assert mapping.f_n(n, y + 1) - mapping.f_n(n, y) == n - y
+
+
+def test_row_major_ordering():
+    """Jobs are numbered left-to-right, top-to-bottom (paper Fig. 1)."""
+    n = 5
+    expected = [(0, 0), (0, 1), (0, 2), (0, 3), (0, 4),
+                (1, 1), (1, 2), (1, 3), (1, 4),
+                (2, 2), (2, 3), (2, 4),
+                (3, 3), (3, 4),
+                (4, 4)]
+    got = [mapping.job_coord(n, j) for j in range(mapping.tri_count(n))]
+    assert got == expected
+
+
+# -- jnp variants ------------------------------------------------------------
+
+
+@given(st.integers(1, 1500))
+@settings(max_examples=20, deadline=None)
+def test_job_coord_f32_matches_host(n):
+    js = jnp.arange(mapping.tri_count(min(n, 1500)))[:4096]
+    y, x = mapping.job_coord_f32(n, js)
+    for i, j in enumerate(np.asarray(js)[:200]):
+        assert (int(y[i]), int(x[i])) == mapping.job_coord(n, int(j))
+
+
+@given(st.integers(1, 20_000), st.data())
+@settings(max_examples=50, deadline=None)
+def test_job_coord_jnp_roundtrip(n, data):
+    # n capped at 20k: without jax_enable_x64 the device mapping is
+    # int32-internal (4n^2 must stay < 2^31); larger n uses the exact
+    # host mapping (test_job_roundtrip covers n to 10^7)
+    j = data.draw(st.integers(0, mapping.tri_count(n) - 1))
+    y, x = mapping.job_coord_jnp(n, jnp.asarray([j]))
+    assert (int(y[0]), int(x[0])) == mapping.job_coord(n, j)
+
+
+# -- square (non-symmetric) mapping, Eq. 7/8 ---------------------------------
+
+
+@given(st.integers(1, 10**6), st.data())
+@settings(max_examples=100, deadline=None)
+def test_square_roundtrip(n, data):
+    j = data.draw(st.integers(0, n * n - 1))
+    y, x = mapping.square_job_coord(n, j)
+    assert mapping.square_job_id(n, y, x) == j
+
+
+# -- lower-triangle + banded variants (flash attention grids) ----------------
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=100, deadline=None)
+def test_lower_roundtrip(j):
+    y, x = mapping.lower_job_coord(j)
+    assert 0 <= x <= y
+    assert mapping.lower_job_id(y, x) == j
+
+
+@given(st.integers(1, 300), st.integers(1, 300))
+@settings(max_examples=100, deadline=None)
+def test_band_lower_bijection(m, w):
+    w = min(w, m)
+    total = mapping.band_lower_count(m, w)
+    seen = set()
+    for j in range(total):
+        y, x = mapping.band_lower_job_coord(m, w, j)
+        assert max(0, y - w + 1) <= x <= y < m
+        seen.add((y, x))
+    assert len(seen) == total
+
+
+@given(st.integers(1, 200), st.integers(1, 50))
+@settings(max_examples=50, deadline=None)
+def test_band_lower_f32_matches_host(m, w):
+    w = min(w, m)
+    total = mapping.band_lower_count(m, w)
+    js = jnp.arange(total)
+    y, x = mapping.band_lower_job_coord_f32(m, w, js)
+    for j in range(min(total, 100)):
+        assert (int(y[j]), int(x[j])) == mapping.band_lower_job_coord(m, w, j)
+
+
+@given(st.integers(1, 500), st.integers(1, 100))
+@settings(max_examples=100, deadline=None)
+def test_band_upper_bijection_roundtrip(n, w):
+    w = min(w, n)
+    total = mapping.band_count(n, w)
+    for j in [0, total // 2, total - 1]:
+        y, x = mapping.band_job_coord(n, w, j)
+        assert y <= x < min(n, y + w)
+        assert mapping.band_job_id(n, w, y, x) == j

@@ -1,0 +1,100 @@
+"""Optimizer substrate: AdamW, schedule, clipping, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import adamw
+from repro.optim.compression import (dequantize_int8, quantize_int8,
+                                     topk_sparsify)
+
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(peak_lr=0.1, warmup_steps=5, total_steps=200,
+                            weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw.init(cfg, params)
+    target = jnp.asarray([1.0, 2.0])
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw.update(cfg, g, state, params)
+
+    for _ in range(200):
+        params, state, m = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_schedule_shape():
+    cfg = adamw.AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(adamw.schedule(cfg, s)) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert lrs[10] == pytest.approx(1.0)
+    assert max(lrs) == pytest.approx(1.0)
+    assert lrs[100] == pytest.approx(0.1, abs=1e-3)
+    assert all(b <= a + 1e-6 for a, b in zip(lrs[10:], lrs[11:]))  # decays
+
+
+def test_clipping_bounds_update():
+    cfg = adamw.AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(cfg, params)
+    g = {"w": jnp.full((4,), 1e6)}
+    _, _, m = adamw.update(cfg, g, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+    # moments were built from the CLIPPED gradient
+    assert float(jnp.max(jnp.abs(state["m"]["w"]))) < 1e6
+
+
+def test_moment_dtype_bf16():
+    cfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(cfg, params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(4)}
+    _, state, _ = adamw.update(cfg, g, state, params)
+    assert state["v"]["w"].dtype == jnp.bfloat16
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_int8_quant_roundtrip_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    # max quantisation error is half a step
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_topk_sparsify():
+    x = jnp.asarray(np.arange(-10, 10, dtype=np.float32))
+    y = np.asarray(topk_sparsify(x, 0.25))
+    assert (y != 0).sum() == 5
+    assert set(np.abs(y[y != 0])) <= {10, 9, 8, 7, 6}
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the accumulated compressed sum tracks the true
+    sum (bias does not accumulate)."""
+    rng = np.random.default_rng(0)
+    from repro.optim.compression import quantize_int8, dequantize_int8
+    err = jnp.zeros(64)
+    total_true = np.zeros(64)
+    total_comp = np.zeros(64)
+    for step in range(50):
+        g = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+        gi = g + err
+        q, s = quantize_int8(gi)
+        out = dequantize_int8(q, s)
+        err = gi - out
+        total_true += np.asarray(g)
+        total_comp += np.asarray(out)
+    # residual bounded by one quantisation step, not growing with steps
+    assert np.abs(total_true - total_comp).max() < 0.1

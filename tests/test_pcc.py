@@ -1,0 +1,83 @@
+"""PCC reformulation correctness (paper SSIII-A) + statistical properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import pcc
+
+
+def _rand(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+def test_gemm_matches_literal():
+    x = _rand(40, 33)
+    r_g = pcc.pearson_gemm(x)
+    r_l = pcc.pearson_literal(x)
+    np.testing.assert_allclose(np.asarray(r_g), np.asarray(r_l),
+                               atol=2e-6, rtol=0)
+
+
+def test_matches_numpy_corrcoef():
+    x = _rand(25, 60, seed=3)
+    r = np.asarray(pcc.pearson_gemm(x))
+    ref = np.corrcoef(np.asarray(x, np.float64))
+    np.testing.assert_allclose(r, ref, atol=2e-6)
+
+
+@given(st.integers(2, 30), st.integers(3, 50), st.integers(0, 10))
+@settings(max_examples=30, deadline=None)
+def test_properties(n, l, seed):
+    x = _rand(n, l, seed)
+    r = np.asarray(pcc.pearson_gemm(x))
+    # |r| <= 1, diag == 1, symmetric
+    assert np.all(np.abs(r) <= 1.0 + 1e-6)
+    np.testing.assert_allclose(np.diag(r), 1.0, atol=1e-5)
+    np.testing.assert_allclose(r, r.T, atol=1e-6)
+
+
+def test_transform_unit_norm():
+    x = _rand(10, 31)
+    u = np.asarray(pcc.transform(x))
+    np.testing.assert_allclose((u * u).sum(1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(u.sum(1), 0.0, atol=1e-4)
+
+
+def test_zero_variance_convention():
+    x = np.ones((3, 16), np.float32)
+    x[1] = np.linspace(0, 1, 16)
+    r = np.asarray(pcc.pearson_gemm(jnp.asarray(x)))
+    # zero-variance rows correlate 0 with everything (incl. themselves)
+    assert r[0, 1] == 0.0 and r[0, 2] == 0.0
+
+
+def test_linear_association_sign():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(100).astype(np.float32)
+    x = jnp.asarray(np.stack([a, 2 * a + 1, -3 * a + 2]))
+    r = np.asarray(pcc.pearson_gemm(x))
+    np.testing.assert_allclose(r[0, 1], 1.0, atol=1e-5)   # positive assoc
+    np.testing.assert_allclose(r[0, 2], -1.0, atol=1e-5)  # negative assoc
+
+
+def test_flops_model():
+    # paper SSIII-E: 5ln + l n(n+1)/2 unit ops
+    assert pcc.flops_allpairs(10, 7) == 5 * 7 * 10 + 7 * 10 * 11 // 2
+
+
+def test_permutation_pvalues():
+    from repro.core.permutation import permutation_pvalues
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal(64).astype(np.float32)
+    noise = rng.standard_normal((3, 64)).astype(np.float32)
+    x = jnp.asarray(np.vstack([a, a + 0.05 * noise[0], noise[1:]]))
+    r, p = permutation_pvalues(x, iterations=200, chunk=50)
+    p = np.asarray(p)
+    assert p[0, 1] < 0.05      # strongly correlated pair: significant
+    assert p[2, 3] > 0.05      # independent noise: not significant
+    assert np.all((p > 0) & (p <= 1))

@@ -1,0 +1,142 @@
+"""Runtime substrate: straggler detection, elastic plans, HLO parsing,
+data determinism."""
+
+import numpy as np
+import pytest
+
+from repro.data.expression import ExpressionSpec, artificial, coexpressed, row_shards
+from repro.data.synthetic import TokenStreamSpec, batch_at
+from repro.runtime import hlo, straggler
+from repro.runtime.elastic import replan_pcc, shrink_data_axis
+
+
+# -- straggler ---------------------------------------------------------------
+
+
+def test_straggler_flags_slow_host():
+    cfg = straggler.StragglerConfig(threshold=1.5, patience=3,
+                                    warmup_steps=1)
+    state = straggler.StragglerState()
+    flagged_at = None
+    for step in range(10):
+        times = [1.0, 1.0, 1.0, 1.0]
+        if step >= 2:
+            times[2] = 3.0  # host 2 goes bad at step 2
+        state, flagged = straggler.update(cfg, state, times)
+        if flagged and flagged_at is None:
+            flagged_at = step
+    assert flagged_at is not None and flagged == [2]
+
+
+def test_straggler_no_false_positives():
+    cfg = straggler.StragglerConfig()
+    state = straggler.StragglerState()
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        state, flagged = straggler.update(
+            cfg, state, 1.0 + 0.05 * rng.standard_normal(8))
+        assert flagged == []
+
+
+def test_straggler_recovers():
+    cfg = straggler.StragglerConfig(threshold=1.5, patience=2,
+                                    warmup_steps=0, alpha=1.0)
+    state = straggler.StragglerState()
+    for _ in range(4):
+        state, _ = straggler.update(cfg, state, [1.0, 3.0, 1.0])
+    state, flagged = straggler.update(cfg, state, [1.0, 1.0, 1.0])
+    assert flagged == []  # strike counter reset on recovery
+
+
+# -- HLO parsing ---------------------------------------------------------------
+
+
+SAMPLE_HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[16,512]{1,0} parameter(0)
+  %ag = f32[256,512]{1,0} all-gather(f32[16,512]{1,0} %p0), replica_groups={{0,1}}, dimensions={0}
+  %ar = bf16[128,128]{1,0} all-reduce(bf16[128,128]{1,0} %ag2), replica_groups={{0,1,2,3}}
+  %ar2 = bf16[128,128]{1,0} all-reduce(bf16[128,128]{1,0} %ag3), replica_groups={{0,1,2,3}}
+  %rs = f32[8,512]{1,0} reduce-scatter(f32[64,512]{1,0} %x), dimensions={0}
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %y), source_target_pairs={{0,1}}
+  %a2a = f32[32,32]{1,0} all-to-all(f32[32,32]{1,0} %z), dimensions={0}
+  %dot = f32[16,16]{1,0} dot(f32[16,512]{1,0} %p0, f32[512,16]{1,0} %w)
+}
+"""
+
+
+def test_collective_stats_bytes():
+    st = hlo.collective_stats(SAMPLE_HLO)
+    assert st.count_by_kind["all-gather"] == 1
+    assert st.count_by_kind["all-reduce"] == 2
+    assert st.bytes_by_kind["all-gather"] == 16 * 512 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 64 * 512 * 4
+    assert st.bytes_by_kind["all-to-all"] == 32 * 32 * 4
+    assert st.bytes_by_kind["collective-permute"] == 4 * 4
+    # identical all-reduces flagged as redundant
+    assert any(k == "all-reduce" and n == 2 for k, _, n in st.redundant)
+
+
+def test_shape_bytes():
+    assert hlo.shape_bytes("bf16", "128,128") == 128 * 128 * 2
+    assert hlo.shape_bytes("f32", "") == 4  # scalar
+    assert hlo.shape_bytes("s8", "1000") == 1000
+
+
+def test_op_histogram():
+    h = dict(hlo.op_histogram(SAMPLE_HLO))
+    assert h.get("all-reduce") == 2
+    assert h.get("dot") == 1
+
+
+# -- elastic (host-side logic; mesh-based tests live in test_distributed) -----
+
+
+def test_replan_pcc_balanced():
+    ranges = replan_pcc(1001, 7)
+    sizes = [hi - lo for lo, hi in ranges]
+    assert sum(sizes) == 1001
+    assert max(sizes) - min(sizes) <= 1
+
+
+# -- data determinism -----------------------------------------------------------
+
+
+def test_token_stream_deterministic():
+    spec = TokenStreamSpec(vocab=100, seq_len=32, global_batch=4, seed=7)
+    b1 = batch_at(spec, 5)
+    b2 = batch_at(spec, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = batch_at(spec, 6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_expression_shards_deterministic():
+    spec = ExpressionSpec(n=100, l=16, seed=3)
+    full = dict(row_shards(spec, 32))
+    again = dict(row_shards(spec, 32))
+    for k in full:
+        np.testing.assert_array_equal(full[k], again[k])
+    assert sorted(full) == [0, 32, 64, 96]
+    assert sum(v.shape[0] for v in full.values()) == 100
+
+
+def test_artificial_range():
+    x = artificial(ExpressionSpec(n=10, l=20, seed=0))
+    assert x.min() >= 0.0 and x.max() <= 1.0  # paper: uniform in [0,1]
+
+
+def test_coexpressed_modules_correlate():
+    spec = ExpressionSpec(n=40, l=200, seed=1, planted_modules=2,
+                          module_strength=0.9)
+    x = coexpressed(spec)
+    r = np.corrcoef(x)
+    rng = np.random.default_rng(1)
+    _ = rng.standard_normal((40, 200))    # consume the generator's x draw
+    module = rng.integers(0, 2, size=40)  # same stream position as generator
+    same = r[np.equal.outer(module, module) & ~np.eye(40, dtype=bool)]
+    diff = r[~np.equal.outer(module, module)]
+    assert same.mean() > 0.5 > abs(diff.mean())

@@ -1,0 +1,81 @@
+"""Tile plans, pass partitioning, PE range distribution (C3/C4/C5)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mapping, tiling
+
+
+@given(st.integers(1, 10**5), st.integers(1, 10**4), st.integers(1, 512))
+@settings(max_examples=100, deadline=None)
+def test_plan_geometry(n, l, t):
+    plan = tiling.TilePlan.create(n, l, t)
+    assert plan.n_pad >= n and plan.n_pad % t == 0
+    assert plan.m == -(-n // t)
+    assert plan.total_tiles == plan.m * (plan.m + 1) // 2
+
+
+def test_tile_cover_is_partition():
+    """Upper-triangle jobs are covered exactly once by the tile set."""
+    n, t = 21, 4
+    plan = tiling.TilePlan.create(n, 8, t)
+    covered = {}
+    for jt in range(plan.total_tiles):
+        for y in plan.tile_rows(jt):
+            for x in plan.tile_cols(jt):
+                if y <= x:
+                    key = (y, x)
+                    assert key not in covered, f"double cover {key}"
+                    covered[key] = jt
+    assert len(covered) == mapping.tri_count(n)
+
+
+@given(st.integers(0, 10**6), st.integers(1, 999))
+@settings(max_examples=200, deadline=None)
+def test_contiguous_ranges(total, p):
+    rngs = tiling.contiguous_ranges(total, p)
+    assert len(rngs) == p
+    # cover [0, total) without gaps/overlap
+    pos = 0
+    for lo, hi in rngs:
+        assert lo == pos and hi >= lo
+        pos = hi
+    assert pos == total
+    # paper property: identical ceil(T/p) chunks except the tail
+    chunk = -(-total // p) if total else 0
+    assert all(hi - lo <= chunk for lo, hi in rngs)
+
+
+@given(st.integers(0, 10**6), st.integers(1, 999))
+@settings(max_examples=200, deadline=None)
+def test_balanced_counts(total, p):
+    rngs = tiling.balanced_counts(total, p)
+    sizes = [hi - lo for lo, hi in rngs]
+    assert sum(sizes) == total
+    assert max(sizes) - min(sizes) <= 1  # beyond-paper: max imbalance 1
+
+
+@given(st.integers(0, 10000), st.integers(1, 64), st.integers(1, 500))
+@settings(max_examples=100, deadline=None)
+def test_passes_partition(lo_off, p, span):
+    lo, hi = lo_off, lo_off + span
+    out = list(tiling.passes(lo, hi, p))
+    pos = lo
+    for a, b in out:
+        assert a == pos and b - a <= p
+        pos = b
+    assert pos == hi
+
+
+def test_strided_ids_balance():
+    total, p = 103, 8
+    counts = [len(tiling.strided_ids(total, p, i)) for i in range(p)]
+    assert sum(counts) == total
+    assert max(counts) - min(counts) <= 1
+
+
+def test_max_tiles_for_bytes():
+    # 256x256 f32 tile = 256KiB; double-buffered = 512KiB per tile
+    assert tiling.max_tiles_for_bytes(256, 2**30, 4) == 2**30 // (2 * 256 * 256 * 4)
+    assert tiling.max_tiles_for_bytes(256, 1, 4) == 1  # at least one
