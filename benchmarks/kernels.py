@@ -13,6 +13,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
+from repro.core import measures
 from repro.core.allpairs import prepare
 from repro.kernels.flash_attention import grid_savings
 from repro.kernels.pcc_tile import pcc_tiles
@@ -47,6 +48,20 @@ def run() -> None:
     # production BlockSpec working set (t=256, l_blk=512 f32)
     emit("kernels/pcc_vmem_production", 0.0,
          f"t=256;l_blk=512;vmem_kib={vmem_bytes(256, 512) // 1024}")
+
+    # per-measure row-transform cost feeding the same tiled kernel: the
+    # transform is the only measure-specific device work (epilogues are
+    # elementwise), so this is the whole marginal cost of measure diversity.
+    for name in ("pearson", "spearman", "cosine", "covariance"):
+        meas = measures.get(name)
+        t_tr = timeit(lambda meas=meas:
+                      meas.transform(x, dtype=jnp.float32))
+        emit(f"kernels/transform_{name}", t_tr * 1e6, "n=256;l=128")
+    # Kendall widens l -> l(l-1)/2; benchmarked at small l (see docs).
+    xk = x[:, :48]
+    t_tr = timeit(lambda: measures.KENDALL.transform(xk, dtype=jnp.float32))
+    emit("kernels/transform_kendall", t_tr * 1e6,
+         f"n=256;l=48;pairs={48 * 47 // 2}")
 
     # triangular/banded grid savings (the C1 payoff)
     for s, blk, w in [(4096, 128, None), (32768, 128, None),

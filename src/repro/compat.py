@@ -1,0 +1,29 @@
+"""JAX version-compatibility shims.
+
+The repo targets the `jax.shard_map` public API (jax >= 0.6, keyword
+`check_vma`); older versions ship it as `jax.experimental.shard_map` with the
+keyword named `check_rep`.  All shard_map call sites import from here so the
+rest of the code is version-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_PUBLIC = getattr(jax, "shard_map", None)
+
+if _PUBLIC is not None:
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _PUBLIC(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=check_vma)
+
+else:
+    from jax.experimental.shard_map import shard_map as _experimental
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _experimental(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)
+
+
+__all__ = ["shard_map"]

@@ -3,28 +3,38 @@
 Public API:
   mapping      bijective job-id <-> coordinate functions (C1)
   pcc          PCC reformulation + reference implementations (C2)
+  measures     pluggable similarity measures (transform/epilogue pairs)
   tiling       tile plans, pass partitioning, PE ranges (C3, C4, C5)
-  allpairs     single-accelerator multi-pass driver
-  distributed  shard_map mesh driver
+  allpairs     single-accelerator multi-pass driver (any measure)
+  distributed  shard_map mesh driver (any measure)
   permutation  batched permutation testing
 """
 
-from repro.core import allpairs, distributed, mapping, pcc, permutation, tiling
-from repro.core.allpairs import allpairs_pcc, allpairs_pcc_streamed
+from repro.core import (allpairs, distributed, mapping, measures, pcc,
+                        permutation, tiling)
+from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
+                                 allpairs_similarity,
+                                 allpairs_similarity_streamed)
 from repro.core.distributed import allpairs_pcc_sharded, allpairs_pcc_sharded_u
+from repro.core.measures import Measure, dense_reference
 from repro.core.pcc import pearson_gemm, pearson_literal, transform
 
 __all__ = [
     "allpairs",
     "distributed",
     "mapping",
+    "measures",
     "pcc",
     "permutation",
     "tiling",
     "allpairs_pcc",
     "allpairs_pcc_streamed",
+    "allpairs_similarity",
+    "allpairs_similarity_streamed",
     "allpairs_pcc_sharded",
     "allpairs_pcc_sharded_u",
+    "Measure",
+    "dense_reference",
     "pearson_gemm",
     "pearson_literal",
     "transform",

@@ -1,12 +1,20 @@
-"""Single-accelerator all-pairs PCC driver (paper Alg. 2 analogue).
+"""Single-accelerator all-pairs similarity driver (paper Alg. 2 analogue).
 
-Pipeline (paper SSIII-A..C):
-  1. transform X -> U (Eq. 4), zero-pad to tile/block alignment;
+Pipeline (paper SSIII-A..C), generalized over pluggable measures
+(core/measures.py — Pearson, Spearman, cosine, covariance, Kendall tau-a):
+  1. row_transform X -> U (Eq. 4 for Pearson; rank/normalize/center/
+     pair-sign for the others), zero-pad to tile/block alignment;
   2. iterate tile-id passes [J_start, J_end) over the upper triangle
      (multi-pass model, C4), invoking the Pallas triangular-grid kernel
      (kernels/pcc_tile.py) once per pass with a *runtime* J_start —
      one compilation serves all passes;
-  3. scatter the (t, t) tile results into the symmetric R.
+  3. apply the measure's elementwise epilogue and scatter the (t, t) tile
+     results into the symmetric R.
+
+Every measure shares the one compiled kernel; only the host-side transform
+and the (cheap, elementwise) epilogue differ.  With the default
+measure="pearson" all functions here are behaviourally identical to the
+pre-measure implementation.
 
 Double-buffering: the paper overlaps device compute with host-side result
 processing via offload signal/wait.  JAX's async dispatch gives the same
@@ -22,8 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mapping, tiling
-from repro.core.pcc import transform
+from repro.core import mapping, measures, tiling
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 
 Array = jax.Array
@@ -41,10 +48,18 @@ def pad_u(u: Array, t: int, l_blk: int) -> Array:
 
 
 def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
-            dtype=None) -> Tuple[Array, tiling.TilePlan]:
-    """Transform (Eq. 4) + pad; returns (u_pad, plan)."""
+            dtype=None,
+            measure: measures.MeasureLike = "pearson",
+            ) -> Tuple[Array, tiling.TilePlan]:
+    """Row-transform (Eq. 4 analogue for the measure) + pad.
+
+    Returns (u_pad, plan); plan.l records the *original* sample count, which
+    the measure epilogue needs (e.g. covariance's 1/(l-1)) even when the
+    transform widens the sample axis (Kendall's pair expansion).
+    """
     n, l = x.shape
-    u = transform(x, dtype=dtype or jnp.float32)
+    meas = measures.get(measure)
+    u = meas.transform(x, dtype=dtype or jnp.float32)
     plan = tiling.TilePlan.create(n, l, t)
     return pad_u(u, t, l_blk), plan
 
@@ -90,14 +105,17 @@ def allpairs_pcc(
     max_tiles_per_pass: Optional[int] = None,
     interpret: bool = True,
     clip: bool = True,
+    measure: measures.MeasureLike = "pearson",
 ) -> Array:
-    """All-pairs PCC via the triangular-grid Pallas kernel.  Returns (n, n) R.
+    """All-pairs similarity via the triangular-grid Pallas kernel.
+    Returns the (n, n) similarity matrix (R for the default Pearson).
 
     interpret=True by default: this container is CPU-only; on real TPU the
     launcher passes interpret=False.
     """
     n = x.shape[0]
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+    meas = measures.get(measure)
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas)
     total = plan.total_tiles
     pass_tiles = min(total, max_tiles_per_pass or total)
     r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
@@ -108,7 +126,7 @@ def allpairs_pcc(
         valid = hi - lo
         r_pad = scatter_tiles(r_pad, out[:valid], ids[:valid], t, plan.m)
     r = symmetrize(r_pad, n)
-    return jnp.clip(r, -1.0, 1.0) if clip else r
+    return meas.finalize(r, plan.l, clip=clip)
 
 
 def allpairs_pcc_streamed(
@@ -118,6 +136,7 @@ def allpairs_pcc_streamed(
     l_blk: int = DEFAULT_LBLK,
     max_tiles_per_pass: int = 1024,
     interpret: bool = True,
+    measure: measures.MeasureLike = "pearson",
 ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     """Memory-bounded streaming variant (paper Alg. 2 with double buffering).
 
@@ -125,14 +144,22 @@ def allpairs_pcc_streamed(
     pass is already dispatched on device (async dispatch = signal/wait).
     Host-side R never materialises on the accelerator — the caller assembles
     (or reduces) the stream, e.g. into an n x n memmap.
+
+    Tiles carry the measure's epilogue already applied (on device, fused into
+    the async dispatch) but are *not* clipped — clipping happens at assembly
+    (assemble_from_stream) like the pre-measure Pearson path.
     """
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+    meas = measures.get(measure)
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas)
     total = plan.total_tiles
     spans = list(tiling.passes(0, total, max_tiles_per_pass))
 
     def launch(lo):
-        return pcc_tiles(u_pad, lo, t=t, l_blk=l_blk,
-                         pass_tiles=max_tiles_per_pass, interpret=interpret)
+        out = pcc_tiles(u_pad, lo, t=t, l_blk=l_blk,
+                        pass_tiles=max_tiles_per_pass, interpret=interpret)
+        if meas.epilogue is not None:
+            out = meas.epilogue(out, plan.l)
+        return out
 
     pending = None  # (lo, hi, device_buffer)
     for lo, hi in spans:
@@ -149,8 +176,15 @@ def allpairs_pcc_streamed(
 
 def assemble_from_stream(n: int, t: int, m: int,
                          stream: Iterator[Tuple[np.ndarray, np.ndarray]],
-                         out: Optional[np.ndarray] = None) -> np.ndarray:
-    """Assemble a streamed tile sequence into a full symmetric host R."""
+                         out: Optional[np.ndarray] = None,
+                         measure: measures.MeasureLike = "pearson",
+                         ) -> np.ndarray:
+    """Assemble a streamed tile sequence into a full symmetric host matrix.
+
+    The stream's tiles already carry the measure epilogue; assembly only
+    mirrors and (for bounded measures) clips.
+    """
+    meas = measures.get(measure)
     n_pad = m * t
     r = out if out is not None else np.zeros((n_pad, n_pad), np.float32)
     for ids, tiles in stream:
@@ -160,9 +194,15 @@ def assemble_from_stream(n: int, t: int, m: int,
             if x != y:
                 r[x * t:(x + 1) * t, y * t:(y + 1) * t] = tile.T
     r = r[:n, :n]
-    np.clip(r, -1.0, 1.0, out=r)
+    if meas.clip is not None:
+        np.clip(r, meas.clip[0], meas.clip[1], out=r)
     return r
 
+
+# Measure-agnostic aliases: the `_pcc` names are kept for history/paper
+# fidelity, but the drivers serve every registered measure.
+allpairs_similarity = allpairs_pcc
+allpairs_similarity_streamed = allpairs_pcc_streamed
 
 __all__ = [
     "prepare",
@@ -171,5 +211,7 @@ __all__ = [
     "symmetrize",
     "allpairs_pcc",
     "allpairs_pcc_streamed",
+    "allpairs_similarity",
+    "allpairs_similarity_streamed",
     "assemble_from_stream",
 ]

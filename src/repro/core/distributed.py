@@ -1,4 +1,8 @@
-"""Distributed all-pairs PCC over a device mesh (paper SSIII-D, C5).
+"""Distributed all-pairs similarity over a device mesh (paper SSIII-D, C5).
+
+Both drivers accept a `measure=` (core/measures.py) and default to Pearson;
+the row transform runs once before sharding and the elementwise epilogue
+after assembly, so the sharded kernel work is measure-agnostic.
 
 The paper assigns MPI process i the contiguous tile-id range
 [i*ceil(T/p), (i+1)*ceil(T/p)).  Here each mesh device plays that role under
@@ -30,7 +34,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core import tiling
+from repro.compat import shard_map
+from repro.core import measures, tiling
 from repro.core.allpairs import prepare, scatter_tiles, symmetrize
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 
@@ -52,16 +57,19 @@ def allpairs_pcc_sharded(
     l_blk: int = DEFAULT_LBLK,
     interpret: bool = True,
     max_tiles_per_pass: Optional[int] = None,
+    measure: measures.MeasureLike = "pearson",
 ) -> jax.Array:
-    """Distributed all-pairs PCC.  Returns the full (n, n) R (replicated).
+    """Distributed all-pairs similarity.  Returns the full (n, n) matrix
+    (replicated); Pearson R by default.
 
     All mesh axes are flattened into one logical "PE rank" axis: rank =
     row-major index over mesh axes, matching the paper's flat MPI ranks.
     """
     n = x.shape[0]
+    meas = measures.get(measure)
     axes = _flat_axes(mesh)
     p = int(np.prod(mesh.devices.shape))
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas)
     total = plan.total_tiles
     per_dev = tiles_per_device(total, p)
     pass_tiles = min(per_dev, max_tiles_per_pass or per_dev)
@@ -83,8 +91,8 @@ def allpairs_pcc_sharded(
 
     spec_rep = P(*([None] * u_pad.ndim))
     out_spec = P(axes)  # tile axis sharded over all mesh axes (flat rank order)
-    fn = jax.shard_map(device_fn, mesh=mesh, in_specs=(spec_rep,),
-                       out_specs=out_spec, check_vma=False)
+    fn = shard_map(device_fn, mesh=mesh, in_specs=(spec_rep,),
+                   out_specs=out_spec, check_vma=False)
     u_rep = jax.device_put(u_pad, NamedSharding(mesh, spec_rep))
     tiles = fn(u_rep)  # (p*per_dev, t, t), tile-axis sharded
 
@@ -92,7 +100,7 @@ def allpairs_pcc_sharded(
     ids = np.minimum(np.arange(p * per_dev), total - 1)
     r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
     r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
-    return jnp.clip(symmetrize(r_pad, n), -1.0, 1.0)
+    return meas.finalize(symmetrize(r_pad, n), plan.l)
 
 
 def allpairs_pcc_sharded_u(
@@ -102,15 +110,17 @@ def allpairs_pcc_sharded_u(
     t: int = DEFAULT_TILE,
     l_blk: int = DEFAULT_LBLK,
     interpret: bool = True,
+    measure: measures.MeasureLike = "pearson",
 ) -> jax.Array:
     """Row-sharded-U variant: U is sharded over the flat rank axis and
     all-gathered once inside shard_map (for U too large to replicate from
     host; the gather is the only collective and is amortised over the whole
     triangle).  Semantics identical to allpairs_pcc_sharded."""
     n = x.shape[0]
+    meas = measures.get(measure)
     axes = _flat_axes(mesh)
     p = int(np.prod(mesh.devices.shape))
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas)
     # pad rows to p for even row-sharding
     rows = u_pad.shape[0]
     rows_pad = -(-rows // p) * p
@@ -133,19 +143,25 @@ def allpairs_pcc_sharded_u(
         return pcc_tiles(u_rep, j0, t=t, l_blk=l_blk, pass_tiles=per_dev,
                          interpret=interpret)
 
-    fn = jax.shard_map(device_fn, mesh=mesh, in_specs=(P(axes, None),),
-                       out_specs=P(axes), check_vma=False)
+    fn = shard_map(device_fn, mesh=mesh, in_specs=(P(axes, None),),
+                   out_specs=P(axes), check_vma=False)
     u_in = jax.device_put(u_pad, NamedSharding(mesh, P(axes, None)))
     tiles = fn(u_in)
 
     ids = np.minimum(np.arange(p * per_dev), total - 1)
     r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
     r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
-    return jnp.clip(symmetrize(r_pad, n), -1.0, 1.0)
+    return meas.finalize(symmetrize(r_pad, n), plan.l)
 
+
+# Measure-agnostic aliases (the `_pcc` names serve every measure).
+allpairs_sharded = allpairs_pcc_sharded
+allpairs_sharded_u = allpairs_pcc_sharded_u
 
 __all__ = [
     "allpairs_pcc_sharded",
     "allpairs_pcc_sharded_u",
+    "allpairs_sharded",
+    "allpairs_sharded_u",
     "tiles_per_device",
 ]

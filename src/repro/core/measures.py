@@ -1,0 +1,256 @@
+"""Pluggable similarity measures for the triangular all-pairs engine.
+
+The paper's framework contribution (SSIII-B) — the bijective job-id <->
+triangle-coordinate mapping plus the transform-then-tiled-GEMM pipeline — is
+measure-agnostic: any symmetric pairwise similarity that factors as
+
+    S(X_i, X_j) = epilogue( <row_transform(X)_i, row_transform(X)_j>, l )
+
+rides the *same* compiled Pallas kernel (kernels/pcc_tile.py: runtime
+J_start, scalar prefetch, triangular grid).  This module decomposes each
+measure into that form:
+
+  measure      row_transform (X -> U)                  epilogue(v, l)   clip
+  -----------  --------------------------------------  ---------------  ------
+  pearson      center + L2-normalize (Eq. 4)           identity         [-1,1]
+  spearman     average-tie rank, then Eq. 4            identity         [-1,1]
+  cosine       L2-normalize only                       identity         [-1,1]
+  covariance   center only                             v / (l - 1)      none
+  kendall      sign(X[a]-X[b]) over sample pairs a<b   v / C(l, 2)      [-1,1]
+
+The Kendall tau-a row consumes a *widened* sample axis — the transform maps
+(n, l) -> (n, l(l-1)/2) and the concordant-minus-discordant pair count is
+exactly the inner product of the +/-1 sign vectors, so even rank correlation
+becomes a tiled sign-GEMM (cf. arXiv:1704.03767, arXiv:1705.08213).  The
+quadratic sample blow-up restricts it to small l; see docs/measures.md.
+
+Degenerate-input conventions (mirroring core/pcc.py): zero-variance rows
+(pearson/spearman/covariance) and all-zero rows (cosine) map to all-zero U
+rows, so every pair involving them scores 0 rather than NaN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pcc
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Row transforms
+# ---------------------------------------------------------------------------
+
+
+def rank_rows(x: Array) -> Array:
+    """Average-tie (fractional) ranks of each row, 1-based, float.
+
+    Equivalent to the double-argsort ordinal rank when all values are
+    distinct; ties receive the mean of the ranks they span (the convention
+    scipy.stats.rankdata / spearmanr use).  Implemented with one sort plus
+    two binary searches per row: rank(v) = (#less + #less_or_equal + 1) / 2.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, l) matrix, got shape {x.shape}")
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+
+    def one(row):
+        s = jnp.sort(row)
+        lo = jnp.searchsorted(s, row, side="left")
+        hi = jnp.searchsorted(s, row, side="right")
+        return 0.5 * (lo + hi + 1).astype(acc)
+
+    return jax.vmap(one)(xa)
+
+
+def spearman_transform(x: Array, *, dtype=None) -> Array:
+    """Rank each row, then apply the Pearson transform (Eq. 4) to the ranks:
+    Spearman(X) == Pearson(rank(X)) row-for-row."""
+    return pcc.transform(rank_rows(x), dtype=dtype or x.dtype)
+
+
+def l2_normalize_rows(x: Array, *, dtype=None) -> Array:
+    """U_i = X_i / ||X_i||_2 so that <U_i, U_j> is the cosine similarity.
+    All-zero rows map to zeros (cosine = 0 convention)."""
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, l) matrix, got shape {x.shape}")
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    norm = jnp.sqrt(jnp.sum(xa * xa, axis=1, keepdims=True))
+    u = jnp.where(norm > 0, xa / jnp.maximum(norm, 1e-300), 0.0)
+    return u.astype(dtype or x.dtype)
+
+
+def center_rows(x: Array, *, dtype=None) -> Array:
+    """U_i = X_i - mean(X_i): <U_i, U_j> / (l-1) is the sample covariance."""
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, l) matrix, got shape {x.shape}")
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    return (xa - jnp.mean(xa, axis=1, keepdims=True)).astype(dtype or x.dtype)
+
+
+def pair_sign_transform(x: Array, *, dtype=None) -> Array:
+    """Kendall tau-a row transform: widen the sample axis to all C(l, 2)
+    ordered pairs a < b and take sign(X[a] - X[b]).
+
+    <U_i, U_j> then counts concordant minus discordant pairs (ties score 0),
+    and tau-a = <U_i, U_j> / C(l, 2).  Output is (n, l(l-1)/2) — quadratic in
+    l, so this path is for small sample counts only (docs/measures.md).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, l) matrix, got shape {x.shape}")
+    l = x.shape[1]
+    if l < 2:
+        raise ValueError(f"kendall needs at least 2 samples, got l={l}")
+    ia, ib = np.triu_indices(l, k=1)
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    d = xa[:, ia] - xa[:, ib]
+    return jnp.sign(d).astype(dtype or x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Epilogues (elementwise maps on raw inner-product values)
+# ---------------------------------------------------------------------------
+
+
+def _cov_epilogue(vals: Array, l: int) -> Array:
+    return vals / max(l - 1, 1)
+
+
+def _kendall_epilogue(vals: Array, l: int) -> Array:
+    return vals / max(l * (l - 1) // 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# Measure
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Measure:
+    """A symmetric pairwise similarity decomposed for the tiled engine.
+
+    transform: (n, l) -> (n, l') row map; the kernel computes U @ U^T tiles.
+    epilogue:  elementwise map (raw_value, original_l) -> similarity, or
+               None for identity (kept as None so the Pearson path stays
+               bit-identical to the pre-measure implementation).
+    clip:      output range enforced when the caller asks for clipping
+               (guards float drift on bounded measures), or None.
+    """
+
+    name: str
+    transform: Callable[..., Array]
+    epilogue: Optional[Callable[[Array, int], Array]] = None
+    clip: Optional[Tuple[float, float]] = None
+
+    def finalize(self, vals: Array, l: int, *, clip: bool = True) -> Array:
+        """Apply the epilogue (and optional clip) to raw kernel output."""
+        if self.epilogue is not None:
+            vals = self.epilogue(vals, l)
+        if clip and self.clip is not None:
+            vals = jnp.clip(vals, *self.clip)
+        return vals
+
+PEARSON = Measure("pearson", pcc.transform, None, (-1.0, 1.0))
+SPEARMAN = Measure("spearman", spearman_transform, None, (-1.0, 1.0))
+COSINE = Measure("cosine", l2_normalize_rows, None, (-1.0, 1.0))
+COVARIANCE = Measure("covariance", center_rows, _cov_epilogue, None)
+KENDALL = Measure("kendall", pair_sign_transform, _kendall_epilogue,
+                  (-1.0, 1.0))
+
+_REGISTRY: Dict[str, Measure] = {
+    "pearson": PEARSON,
+    "pcc": PEARSON,
+    "spearman": SPEARMAN,
+    "cosine": COSINE,
+    "covariance": COVARIANCE,
+    "cov": COVARIANCE,
+    "kendall": KENDALL,
+    "kendall_tau_a": KENDALL,
+}
+
+MeasureLike = Union[str, Measure]
+
+
+def get(measure: MeasureLike) -> Measure:
+    """Resolve a measure name (or pass a Measure through)."""
+    if isinstance(measure, Measure):
+        return measure
+    try:
+        return _REGISTRY[measure]
+    except KeyError:
+        raise ValueError(
+            f"unknown measure {measure!r}; available: {available()}") from None
+
+
+def register(measure: Measure, *aliases: str) -> Measure:
+    """Register a user-defined measure (and optional aliases)."""
+    for key in (measure.name, *aliases):
+        _REGISTRY[key] = measure
+    return measure
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(set(m.name for m in _REGISTRY.values())))
+
+
+# ---------------------------------------------------------------------------
+# Dense references (oracles; also the fastest small-n XLA path)
+# ---------------------------------------------------------------------------
+
+
+def dense_reference(x: Array, measure: MeasureLike = "pearson", *,
+                    clip: bool = True) -> Array:
+    """Full (n, n) similarity via dense U @ U^T — the Eq. 5 analogue for any
+    measure.  Oracle for the tiled/streamed/sharded paths."""
+    meas = get(measure)
+    l = x.shape[1]
+    u = meas.transform(x, dtype=jnp.promote_types(x.dtype, jnp.float32))
+    s = jnp.dot(u, u.T, preferred_element_type=jnp.float32)
+    return meas.finalize(s, l, clip=clip)
+
+
+def kendall_tau_a_literal(x: Array) -> np.ndarray:
+    """O(n^2 l^2) literal Kendall tau-a reference (float64, host).
+
+    tau_a(i, j) = (concordant - discordant) / C(l, 2), ties contributing 0.
+    The sign tensor is (n, l, l); each unordered sample pair is counted twice
+    in the einsum, hence the /2.
+    """
+    xn = np.asarray(x, np.float64)
+    n, l = xn.shape
+    if l < 2:
+        raise ValueError(f"kendall needs at least 2 samples, got l={l}")
+    s = np.sign(xn[:, :, None] - xn[:, None, :])
+    g = np.einsum("iab,jab->ij", s, s) / 2.0
+    return g / (l * (l - 1) // 2)
+
+
+__all__ = [
+    "Measure",
+    "MeasureLike",
+    "PEARSON",
+    "SPEARMAN",
+    "COSINE",
+    "COVARIANCE",
+    "KENDALL",
+    "get",
+    "register",
+    "available",
+    "rank_rows",
+    "spearman_transform",
+    "l2_normalize_rows",
+    "center_rows",
+    "pair_sign_transform",
+    "dense_reference",
+    "kendall_tau_a_literal",
+]

@@ -34,6 +34,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs import get_config, list_archs
 from repro.launch.mesh import describe, make_production_mesh
 from repro.models import steps as model_steps
@@ -203,7 +204,7 @@ def run_pcc(dataset: str, multi_pod: bool, save: bool = True) -> dict:
         return pcc_tiles(u_rep, start, t=pcc_cfg.t, l_blk=pcc_cfg.l_blk,
                          pass_tiles=pass_tiles, interpret=True)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         device_fn, mesh=mesh,
         in_specs=(P(*([None] * 2)), P()),
         out_specs=P(axes), check_vma=False))

@@ -33,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.compat import shard_map
 from repro.data.synthetic import TokenStreamSpec, batch_at
 from repro.models import steps as model_steps
 from repro.models.config import ModelConfig
@@ -140,7 +141,7 @@ class TrainLoop:
 
         rep = P()
         dp = P(axis)
-        self.step_fn = jax.jit(jax.shard_map(
+        self.step_fn = jax.jit(shard_map(
             local_step, mesh=mesh,
             in_specs=(rep, rep, rep, dp, dp),
             out_specs=(rep, rep, rep, rep),

@@ -1,0 +1,101 @@
+"""hypothesis when installed, else a small deterministic property-test driver.
+
+The real library is preferred (install via requirements-dev.txt).  The
+fallback keeps the property tests *running* — not skipped — in minimal
+environments: each `@given` test is executed for a handful of deterministic
+examples (always including the all-minimums and all-maximums corner draws,
+then seeded-random draws).  Only the strategy surface this repo uses is
+implemented: `st.integers(lo, hi)` and `st.data()`.
+
+Cap the fallback example count with HYPOTHESIS_FALLBACK_EXAMPLES (default 8;
+the real hypothesis honours the per-test `max_examples` instead).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+
+except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    import os
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_EXAMPLES = int(os.environ.get("HYPOTHESIS_FALLBACK_EXAMPLES", "8"))
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            if lo > hi:
+                raise ValueError(f"empty integer range [{lo}, {hi}]")
+            self.lo, self.hi = int(lo), int(hi)
+
+        def example(self, rng, mode: int):
+            if mode == 0:
+                return self.lo
+            if mode == 1:
+                return self.hi
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _DataObject:
+        """Stand-in for hypothesis's interactive draw object."""
+
+        def __init__(self, rng, mode: int):
+            self._rng, self._mode = rng, mode
+
+        def draw(self, strategy):
+            return strategy.example(self._rng, self._mode)
+
+    class _DataStrategy:
+        def example(self, rng, mode: int):
+            return _DataObject(rng, mode)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def data() -> _DataStrategy:
+            return _DataStrategy()
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        """Records max_examples; deadline etc. are meaningless here."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            requested = getattr(fn, "_compat_max_examples", 20)
+            n_examples = max(2, min(requested, _FALLBACK_EXAMPLES))
+
+            def wrapper():
+                for mode in range(n_examples):
+                    # mode 0 draws every minimum, mode 1 every maximum; the
+                    # rest draw seeded-random values (deterministic per run).
+                    rng = _np.random.default_rng(0xC0FFEE + mode)
+                    drawn = [s.example(rng, mode) for s in strategies]
+                    fn(*drawn)
+
+            # NOT functools.wraps: exposing fn's signature would make pytest
+            # resolve the drawn parameters as fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -13,6 +13,18 @@ from repro.optim import adamw
 
 B, S = 2, 64
 
+# Archs whose smoke train step dominates the fast tier (mostly SSM/MoE/hybrid
+# scans, which compile slowly on CPU); they still run in the scheduled
+# `-m slow` job.  Two dense representatives (starcoder2, chatglm3) stay fast.
+_HEAVY_TRAIN = {"hymba-1.5b", "seamless-m4t-medium", "falcon-mamba-7b",
+                "qwen3-moe-30b-a3b", "mixtral-8x22b", "nemotron-4-340b",
+                "qwen2-vl-72b", "llama3.2-3b"}
+
+
+def _train_archs():
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_TRAIN
+            else a for a in list_archs()]
+
 
 def _batch(cfg, key):
     batch = {}
@@ -35,7 +47,7 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", _train_archs())
 def test_train_step_smoke(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)

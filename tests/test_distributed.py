@@ -58,6 +58,30 @@ def test_sharded_pcc_multipass():
     """)
 
 
+def test_sharded_measures_match_dense_oracle():
+    """Path parity for every registered measure: both sharded drivers agree
+    with the dense transform+GEMM oracle (one subprocess amortises startup)."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import (allpairs_pcc_sharded,
+                                            allpairs_pcc_sharded_u)
+        from repro.core.measures import available, dense_reference
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal((30, 17)).astype(np.float32))
+        mesh = jax.make_mesh((8,), ("d",))
+        for name in available():
+            ref = dense_reference(x, name)
+            r = allpairs_pcc_sharded(x, mesh, t=8, l_blk=8, measure=name)
+            err = float(jnp.max(jnp.abs(r - ref)))
+            assert err < 1e-5, (name, err)
+            r2 = allpairs_pcc_sharded_u(x, mesh, t=8, l_blk=8, measure=name)
+            err2 = float(jnp.max(jnp.abs(r2 - ref)))
+            assert err2 < 1e-5, (name, err2)
+        print("OK")
+    """)
+
+
+@pytest.mark.slow
 def test_pjit_train_matches_single_device_loss():
     """The sharded train step computes the same loss as unsharded."""
     _run("""
@@ -121,6 +145,7 @@ def test_compressed_psum_shard_map():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.optim.compression import compressed_psum
         mesh = jax.make_mesh((8,), ("d",))
         rng = np.random.default_rng(0)
@@ -129,9 +154,9 @@ def test_compressed_psum_shard_map():
         def f(g, e):
             avg, e2 = compressed_psum(g[0], "d", e[0])
             return avg[None], e2[None]
-        fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("d"), P("d")),
-                                   out_specs=(P("d"), P("d")),
-                                   check_vma=False))
+        fn = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("d"), P("d")),
+                               out_specs=(P("d"), P("d")),
+                               check_vma=False))
         err = jnp.zeros((8, 64), jnp.float32)
         avg, err = fn(g_all, err)
         true_avg = g_all.mean(0)

@@ -31,7 +31,10 @@ TOL = {jnp.float32: 2e-6, jnp.bfloat16: 2e-2}
     (64, 24, 8, 8),        # many tiles
     (7, 100, 8, 32),       # single tile row
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 def test_pcc_tiles_sweep(n, l, t, lblk, dtype):
     u = _u_pad(n, l, t, lblk, dtype)
     m = u.shape[0] // t
@@ -86,7 +89,10 @@ def test_pcc_diagonal_tiles_symmetric():
     (1, 8, 1, 64, 32, 16),     # MQA
     (2, 2, 2, 17, 8, 16),      # seq < block
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 def test_flash_attention_sweep(b, h, hkv, s, d, blk, dtype):
     rng = np.random.default_rng(1)
     q = jnp.asarray(rng.standard_normal((b, h, s, d)), dtype)

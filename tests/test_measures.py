@@ -1,0 +1,227 @@
+"""Measure engine: scipy/numpy oracle comparisons, adversarial inputs, and
+parity across the single-device, streamed, and dense paths.
+
+(The sharded-path parity lives in tests/test_distributed.py, which runs on 8
+simulated devices in a subprocess.)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import measures, pcc, tiling
+from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
+                                 assemble_from_stream, pad_u, prepare,
+                                 scatter_tiles, symmetrize)
+from repro.kernels.pcc_tile import pcc_tiles
+
+ALL_MEASURES = ["pearson", "spearman", "cosine", "covariance", "kendall"]
+
+
+def _x(n, l, seed=0, ties=False):
+    rng = np.random.default_rng(seed)
+    if ties:
+        # few integer levels -> heavy ties on every row
+        return jnp.asarray(
+            rng.integers(0, 4, size=(n, l)).astype(np.float32))
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Oracle comparisons (scipy.stats / numpy references)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ties", [False, True])
+def test_spearman_matches_scipy(ties):
+    stats = pytest.importorskip("scipy.stats")
+    x = _x(10, 25, seed=1, ties=ties)
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="spearman"))
+    ref = stats.spearmanr(np.asarray(x), axis=1).statistic
+    np.testing.assert_allclose(r, ref, atol=1e-5)
+
+
+def test_kendall_matches_scipy_tie_free():
+    stats = pytest.importorskip("scipy.stats")
+    x = _x(8, 15, seed=2)  # continuous draws: tie-free, tau-a == tau-b
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="kendall"))
+    xn = np.asarray(x)
+    for i in range(8):
+        for j in range(i, 8):
+            ref = stats.kendalltau(xn[i], xn[j]).statistic
+            assert abs(r[i, j] - ref) < 1e-5, (i, j)
+
+
+@pytest.mark.parametrize("ties", [False, True])
+def test_kendall_matches_literal(ties):
+    """Tiled sign-GEMM vs the O(n^2 l^2) literal tau-a (exercises ties,
+    where scipy's tau-b disagrees by construction)."""
+    x = _x(9, 12, seed=3, ties=ties)
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="kendall"))
+    ref = measures.kendall_tau_a_literal(np.asarray(x))
+    np.testing.assert_allclose(r, ref, atol=1e-6)
+
+
+def test_covariance_matches_numpy():
+    x = _x(12, 30, seed=4)
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="covariance"))
+    np.testing.assert_allclose(r, np.cov(np.asarray(x)), atol=1e-5)
+
+
+def test_cosine_matches_explicit():
+    x = _x(11, 21, seed=5)
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="cosine"))
+    xn = np.asarray(x, np.float64)
+    un = xn / np.linalg.norm(xn, axis=1, keepdims=True)
+    np.testing.assert_allclose(r, un @ un.T, atol=1e-5)
+
+
+def test_rank_rows_matches_scipy_rankdata():
+    stats = pytest.importorskip("scipy.stats")
+    x = _x(6, 40, seed=6, ties=True)
+    got = np.asarray(measures.rank_rows(x))
+    want = np.stack([stats.rankdata(row) for row in np.asarray(x)])
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Adversarial inputs
+# ---------------------------------------------------------------------------
+
+
+def test_constant_rows_convention():
+    """Zero-variance rows score 0 against everything (no NaNs) for the
+    centered measures; cosine keeps constant-nonzero rows meaningful."""
+    x = np.ones((4, 16), np.float32)
+    x[1] = np.linspace(0.0, 1.0, 16)
+    x[3] = 0.0
+    xj = jnp.asarray(x)
+    for name in ["pearson", "spearman", "covariance"]:
+        r = np.asarray(allpairs_pcc(xj, t=8, l_blk=8, measure=name))
+        assert np.all(np.isfinite(r)), name
+        assert r[0, 1] == 0.0 and r[0, 2] == 0.0, name
+    rc = np.asarray(allpairs_pcc(xj, t=8, l_blk=8, measure="cosine"))
+    assert np.all(np.isfinite(rc))
+    assert rc[0, 2] == pytest.approx(1.0)   # parallel constant rows
+    assert rc[0, 3] == 0.0                  # all-zero row scores 0
+    rk = np.asarray(allpairs_pcc(xj, t=8, l_blk=8, measure="kendall"))
+    assert np.all(np.isfinite(rk))
+    assert rk[0, 1] == 0.0  # constant row: every pair tied -> tau-a 0
+
+
+@pytest.mark.parametrize("measure", ALL_MEASURES)
+def test_single_variable(measure):
+    """n=1 edge case: a 1x1 similarity matrix, finite, correct diagonal."""
+    x = _x(1, 10, seed=7)
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure=measure))
+    assert r.shape == (1, 1) and np.isfinite(r[0, 0])
+    if measure in ("pearson", "spearman", "cosine", "kendall"):
+        assert r[0, 0] == pytest.approx(1.0, abs=1e-6)
+    else:
+        assert r[0, 0] == pytest.approx(float(np.var(np.asarray(x), ddof=1)),
+                                        abs=1e-5)
+
+
+def test_kendall_rejects_single_sample():
+    with pytest.raises(ValueError):
+        measures.pair_sign_transform(jnp.ones((3, 1)))
+
+
+def test_unknown_measure_rejected():
+    with pytest.raises(ValueError):
+        measures.get("mahalanobis")
+
+
+# ---------------------------------------------------------------------------
+# Properties
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 16), st.integers(3, 24), st.integers(0, 5))
+@settings(max_examples=6, deadline=None)
+def test_spearman_is_pearson_of_ranks(n, l, seed):
+    x = _x(n, l, seed=seed, ties=(seed % 2 == 0))
+    ranks = measures.rank_rows(x)
+    want = np.asarray(pcc.pearson_gemm(ranks))
+    got = np.asarray(measures.dense_reference(x, "spearman"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("measure", ALL_MEASURES)
+def test_symmetry_and_bounds(measure):
+    x = _x(13, 14, seed=8)
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure=measure))
+    np.testing.assert_allclose(r, r.T, atol=1e-6)
+    meas = measures.get(measure)
+    if meas.clip is not None:
+        assert np.all(r >= meas.clip[0]) and np.all(r <= meas.clip[1])
+
+
+# ---------------------------------------------------------------------------
+# Path parity: tiled == dense oracle == streamed (per measure)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("measure", ALL_MEASURES)
+def test_paths_agree(measure):
+    n, l, t = 21, 13, 8
+    x = _x(n, l, seed=9)
+    ref = np.asarray(measures.dense_reference(x, measure))
+
+    tiled = np.asarray(allpairs_pcc(x, t=t, l_blk=8, measure=measure))
+    np.testing.assert_allclose(tiled, ref, atol=1e-5)
+
+    plan = tiling.TilePlan.create(n, l, t)
+    stream = allpairs_pcc_streamed(x, t=t, l_blk=8, max_tiles_per_pass=3,
+                                   measure=measure)
+    streamed = assemble_from_stream(n, t, plan.m, stream, measure=measure)
+    np.testing.assert_allclose(streamed, ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("measure", ALL_MEASURES)
+def test_multipass_invariant_per_measure(measure):
+    x = _x(18, 10, seed=10)
+    full = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure=measure))
+    part = np.asarray(allpairs_pcc(x, t=8, l_blk=8, max_tiles_per_pass=2,
+                                   measure=measure))
+    np.testing.assert_array_equal(part, full)
+
+
+# ---------------------------------------------------------------------------
+# Pearson is unchanged by the measure refactor
+# ---------------------------------------------------------------------------
+
+
+def test_pearson_transform_is_seed_transform():
+    """The registered Pearson transform IS core.pcc.transform — the measure
+    layer adds no wrapper on the historical hot path."""
+    assert measures.PEARSON.transform is pcc.transform
+    assert measures.PEARSON.epilogue is None
+
+
+def test_pearson_bit_identical_to_seed_pipeline():
+    """allpairs_pcc(measure='pearson') reproduces the pre-measure pipeline
+    (Eq. 4 transform -> tiled kernel -> scatter -> symmetrize -> clip)
+    bit-for-bit on kernel-sweep-sized cases."""
+    for n, l, t, lblk in [(16, 16, 8, 8), (20, 40, 8, 16), (33, 17, 16, 8)]:
+        x = _x(n, l, seed=n)
+        # seed pipeline, inlined
+        u_pad = pad_u(pcc.transform(x, dtype=jnp.float32), t, lblk)
+        plan = tiling.TilePlan.create(n, l, t)
+        total = plan.total_tiles
+        out = pcc_tiles(u_pad, 0, t=t, l_blk=lblk, pass_tiles=total,
+                        interpret=True)
+        r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+        r_pad = scatter_tiles(r_pad, out, np.arange(total), t, plan.m)
+        want = np.asarray(jnp.clip(symmetrize(r_pad, n), -1.0, 1.0))
+
+        got = np.asarray(allpairs_pcc(x, t=t, l_blk=lblk, measure="pearson"))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_prepare_pearson_bit_identical():
+    x = _x(14, 11, seed=12)
+    u_new, _ = prepare(x, t=8, l_blk=8, measure="pearson")
+    u_seed = pad_u(pcc.transform(x, dtype=jnp.float32), 8, 8)
+    np.testing.assert_array_equal(np.asarray(u_new), np.asarray(u_seed))

@@ -41,23 +41,27 @@ def _check_decode(cfg, S=33, cap=48, tol=2e-2):
     assert err < tol, f"{cfg.arch}: {err}"
 
 
+@pytest.mark.slow
 def test_decode_consistency_dense():
     _check_decode(ModelConfig(arch="d", n_layers=3, d_model=64, n_heads=4,
                               n_kv_heads=2, d_ff=128, vocab=128, **F32))
 
 
+@pytest.mark.slow
 def test_decode_consistency_swa_ring():
     _check_decode(ModelConfig(arch="s", n_layers=3, d_model=64, n_heads=4,
                               n_kv_heads=2, d_ff=128, vocab=128, window=16,
                               **F32))
 
 
+@pytest.mark.slow
 def test_decode_consistency_ssm():
     _check_decode(ModelConfig(arch="m", family="ssm", n_layers=2, d_model=64,
                               n_heads=0, n_kv_heads=1, vocab=128, ssm_state=8,
                               ssm_chunk=16, **F32))
 
 
+@pytest.mark.slow
 def test_decode_consistency_hybrid_mixed_runs():
     _check_decode(ModelConfig(arch="h", family="hybrid", hybrid=True,
                               n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
@@ -65,6 +69,7 @@ def test_decode_consistency_hybrid_mixed_runs():
                               window=16, global_layers=(0, 2), **F32))
 
 
+@pytest.mark.slow
 def test_decode_consistency_encdec():
     _check_decode(ModelConfig(arch="e", family="audio", enc_dec=True,
                               embed_inputs=True, n_layers=2, d_model=64,
@@ -72,6 +77,7 @@ def test_decode_consistency_encdec():
                               **F32))
 
 
+@pytest.mark.slow
 def test_multi_step_decode_matches_forward():
     """Greedy-decode 6 tokens; hidden states must match full forward."""
     cfg = ModelConfig(arch="d", n_layers=2, d_model=64, n_heads=4,
@@ -101,6 +107,7 @@ def test_layer_runs_grouping():
     assert sum(c for _, _, c in runs) == 8
 
 
+@pytest.mark.slow
 def test_chunked_attention_equivalence():
     base = ModelConfig(arch="c", n_layers=2, d_model=64, n_heads=4,
                        n_kv_heads=2, d_ff=128, vocab=128, **F32)
@@ -116,6 +123,7 @@ def test_chunked_attention_equivalence():
         assert float(jnp.max(jnp.abs(hd - hc))) < 1e-4
 
 
+@pytest.mark.slow
 def test_analysis_unroll_equivalence():
     cfg = ModelConfig(arch="u", n_layers=2, d_model=64, n_heads=4,
                       n_kv_heads=2, d_ff=128, vocab=128, attn_chunk=16,

@@ -1,8 +1,7 @@
 """Tile plans, pass partitioning, PE range distribution (C3/C4/C5)."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import mapping, tiling
 

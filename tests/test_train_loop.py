@@ -5,6 +5,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 _ENV = dict(os.environ,
             XLA_FLAGS="--xla_force_host_platform_device_count=8",
             PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -17,6 +19,7 @@ def _run(body: str):
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
 
 
+@pytest.mark.slow
 def test_train_loop_failure_recovery_and_loss_decrease():
     _run("""
         import jax, tempfile, shutil
@@ -50,6 +53,7 @@ def test_train_loop_failure_recovery_and_loss_decrease():
     """)
 
 
+@pytest.mark.slow
 def test_train_loop_resume_from_checkpoint():
     _run("""
         import jax, tempfile, shutil
