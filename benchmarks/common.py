@@ -1,14 +1,53 @@
-"""Shared benchmark utilities: timing, CSV output, sequential baseline."""
+"""Shared benchmark utilities: timing, CSV/JSON output, sequential baseline."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
 
 ROWS: List[str] = []
+
+
+def parse_rows() -> List[dict]:
+    """The emitted CSV rows as structured records."""
+    recs = []
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        recs.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    return recs
+
+
+def save_trajectory(path: str, label: Optional[str] = None) -> str:
+    """Append this run's rows as one trajectory point to a BENCH_*.json file.
+
+    The file holds a list of points ({label, rows}); each benchmark run (CI
+    job, PR snapshot) appends one, so the file accumulates a perf trajectory
+    over time rather than overwriting the previous numbers.  A corrupt or
+    non-list existing file is not allowed to sink the whole run at its last
+    step: it is set aside (renamed *.corrupt) and a fresh trajectory starts.
+    """
+    data = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if not isinstance(data, list):
+                raise ValueError(f"expected a list of points, got {type(data)}")
+        except (json.JSONDecodeError, ValueError, OSError) as e:
+            print(f"# {path} unreadable ({e}); starting a fresh trajectory")
+            os.replace(path, path + ".corrupt")
+            data = []
+    data.append({"label": label or f"run{len(data)}", "rows": parse_rows()})
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    return path
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -3,8 +3,9 @@
 interpret-mode Pallas is a correctness vehicle, not a speed path, so we
 report (i) the XLA oracle timing across tile sizes (the CPU-executable
 proxy), (ii) interpret-kernel validation timing, and (iii) the structural
-metrics that determine TPU throughput: triangular-grid step savings and
-VMEM working-set per BlockSpec.
+metrics that determine TPU throughput: triangular-grid step savings, VMEM
+working-set per BlockSpec across operand dtypes (f32 / bf16 / int8), and
+the HBM traffic a fused vs. unfused epilogue implies per pass.
 """
 
 from __future__ import annotations
@@ -14,15 +15,34 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import measures
-from repro.core.allpairs import prepare
+from repro.core.allpairs import allpairs_pcc, prepare
 from repro.kernels.flash_attention import grid_savings
-from repro.kernels.pcc_tile import pcc_tiles
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 from repro.kernels.ref import pcc_tiles_ref
 from repro.core.mapping import tri_count
 
+# the "production" bench rows describe the shipped kernel geometry — alias
+# the kernel defaults so they can never drift apart silently
+PROD_T = DEFAULT_TILE
+PROD_LBLK = DEFAULT_LBLK
+PROD_PASS_TILES = 1024
 
-def vmem_bytes(t: int, l_blk: int, itemsize: int = 4) -> int:
-    return 2 * t * l_blk * itemsize + t * t * 4
+
+def vmem_bytes(t: int, l_blk: int, op_itemsize: int = 4,
+               acc_itemsize: int = 4) -> int:
+    """VMEM working set of one grid step: two (t, l_blk) operand blocks at
+    the operand dtype's width plus one (t, t) accumulator (f32 unless the
+    operands are int8, whose per-block accumulator is int32 — same width)."""
+    return 2 * t * l_blk * op_itemsize + t * t * acc_itemsize
+
+
+def epilogue_hbm_bytes(pass_tiles: int, t: int, fused: bool,
+                       itemsize: int = 4) -> int:
+    """HBM bytes the epilogue costs per pass: fused tiles are written once,
+    finished; an unfused epilogue re-reads and re-writes the whole
+    (pass_tiles, t, t) output as a separate elementwise op (3x traffic)."""
+    tile_bytes = pass_tiles * t * t * itemsize
+    return tile_bytes if fused else 3 * tile_bytes
 
 
 def run() -> None:
@@ -45,13 +65,50 @@ def run() -> None:
     emit("kernels/pcc_interpret_t16", t_int * 1e6,
          f"tiles={plan.total_tiles}")
 
-    # production BlockSpec working set (t=256, l_blk=512 f32)
-    emit("kernels/pcc_vmem_production", 0.0,
-         f"t=256;l_blk=512;vmem_kib={vmem_bytes(256, 512) // 1024}")
+    # production BlockSpec working set across operand dtypes: bf16 halves,
+    # int8 quarters the operand blocks (the accumulator stays 4 bytes/elt)
+    for dname, isz in [("f32", 4), ("bf16", 2), ("int8", 1)]:
+        emit(f"kernels/pcc_vmem_production_{dname}", 0.0,
+             f"t={PROD_T};l_blk={PROD_LBLK};op_itemsize={isz};"
+             f"vmem_kib={vmem_bytes(PROD_T, PROD_LBLK, isz) // 1024}")
+
+    # fused vs. unfused epilogue: interpret timing (1 iter, correctness
+    # vehicle) + the structural HBM traffic per production pass — the fused
+    # kernel writes finished tiles once, the unfused path round-trips the
+    # whole output a second time for the elementwise finalisation.
+    xe = x[:64, :]
+    for fused in (True, False):
+        t_e = timeit(lambda fused=fused: allpairs_pcc(
+            xe, t=16, l_blk=32, measure="covariance", fuse_epilogue=fused,
+            interpret=True), warmup=1, iters=1)
+        label = "fused" if fused else "unfused"
+        emit(f"kernels/pcc_epilogue_{label}", t_e * 1e6,
+             f"hbm_bytes_per_pass="
+             f"{epilogue_hbm_bytes(PROD_PASS_TILES, PROD_T, fused)}")
+
+    # operand-dtype A/B on the interpret kernel; int8 rides the Kendall
+    # pair-sign path (the only exactly-int8 transform)
+    u32, plan32 = prepare(x[:64], t=16, l_blk=32)
+    for dname, ud in [("f32", u32), ("bf16", u32.astype(jnp.bfloat16))]:
+        t_d = timeit(lambda ud=ud: pcc_tiles(ud, 0, t=16, l_blk=32,
+                                             pass_tiles=plan32.total_tiles,
+                                             interpret=True),
+                     warmup=1, iters=1)
+        emit(f"kernels/pcc_interpret_dtype_{dname}", t_d * 1e6,
+             f"operand_bytes={ud.size * ud.dtype.itemsize}")
+    u8, plan8 = prepare(x[:64, :24], t=16, l_blk=32, measure="kendall",
+                        compute_dtype=jnp.int8)
+    t_8 = timeit(lambda: pcc_tiles(u8, 0, t=16, l_blk=32,
+                                   pass_tiles=plan8.total_tiles,
+                                   interpret=True), warmup=1, iters=1)
+    emit("kernels/pcc_interpret_dtype_int8_kendall", t_8 * 1e6,
+         f"operand_bytes={u8.size * u8.dtype.itemsize};"
+         f"pairs={24 * 23 // 2}")
 
     # per-measure row-transform cost feeding the same tiled kernel: the
     # transform is the only measure-specific device work (epilogues are
-    # elementwise), so this is the whole marginal cost of measure diversity.
+    # fused into the kernel), so this is the whole marginal cost of measure
+    # diversity.
     for name in ("pearson", "spearman", "cosine", "covariance"):
         meas = measures.get(name)
         t_tr = timeit(lambda meas=meas:

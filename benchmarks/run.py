@@ -20,6 +20,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: table1,table2,fig2,kernels")
+    ap.add_argument("--json", default="",
+                    help="append this run as one trajectory point to the "
+                         "given BENCH_*.json file (see common.save_trajectory)")
+    ap.add_argument("--label", default="",
+                    help="label for the --json trajectory point")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -42,6 +47,9 @@ def main() -> None:
         from benchmarks import kernels
         kernels.run()
 
+    if args.json:
+        path = common.save_trajectory(args.json, args.label or None)
+        print(f"# trajectory point appended to {path}", file=sys.stderr)
     print(f"# {len(common.ROWS)} benchmark rows emitted", file=sys.stderr)
 
 

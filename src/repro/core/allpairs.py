@@ -3,18 +3,25 @@
 Pipeline (paper SSIII-A..C), generalized over pluggable measures
 (core/measures.py — Pearson, Spearman, cosine, covariance, Kendall tau-a):
   1. row_transform X -> U (Eq. 4 for Pearson; rank/normalize/center/
-     pair-sign for the others), zero-pad to tile/block alignment;
+     pair-sign for the others), zero-pad to tile/block alignment, and
+     optionally narrow operands to a compute dtype (bf16, or int8 for
+     exactly integer-valued transforms like Kendall's pair signs);
   2. iterate tile-id passes [J_start, J_end) over the upper triangle
      (multi-pass model, C4), invoking the Pallas triangular-grid kernel
      (kernels/pcc_tile.py) once per pass with a *runtime* J_start —
-     one compilation serves all passes;
-  3. apply the measure's elementwise epilogue and scatter the (t, t) tile
-     results into the symmetric R.
+     one compilation serves all passes.  The measure's elementwise epilogue
+     (and clip) is *fused into the kernel's final k-step*, so tiles leave
+     the kernel already finalised — no second HBM pass over the output;
+  3. scatter the (t, t) tile results into the symmetric R with one batched
+     device-side scatter (the tile-id -> coordinate bijection is evaluated
+     for the whole pass at once via mapping.job_coord_batch).
 
 Every measure shares the one compiled kernel; only the host-side transform
-and the (cheap, elementwise) epilogue differ.  With the default
-measure="pearson" all functions here are behaviourally identical to the
-pre-measure implementation.
+and the (fused, elementwise) epilogue differ.  With the default
+measure="pearson" all functions here are bit-identical to the pre-fusion
+implementation: the fused clip commutes with scatter/symmetrize, and
+identity epilogues add no ops (regression-tested in
+tests/test_fused_epilogue.py).
 
 Double-buffering: the paper overlaps device compute with host-side result
 processing via offload signal/wait.  JAX's async dispatch gives the same
@@ -36,6 +43,15 @@ from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 Array = jax.Array
 
 
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None means "infer from the backend": compiled Pallas on TPU,
+    interpret mode everywhere else (the kernels are Mosaic/TPU kernels, so
+    CPU/GPU backends can only execute them interpreted)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
 def pad_u(u: Array, t: int, l_blk: int) -> Array:
     """Zero-pad transformed variables to (n_pad, l_pad) kernel alignment.
     Zero rows correlate to 0 with everything, so padding is inert."""
@@ -50,43 +66,80 @@ def pad_u(u: Array, t: int, l_blk: int) -> Array:
 def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
             dtype=None,
             measure: measures.MeasureLike = "pearson",
+            compute_dtype=None,
             ) -> Tuple[Array, tiling.TilePlan]:
     """Row-transform (Eq. 4 analogue for the measure) + pad.
 
     Returns (u_pad, plan); plan.l records the *original* sample count, which
     the measure epilogue needs (e.g. covariance's 1/(l-1)) even when the
     transform widens the sample axis (Kendall's pair expansion).
+
+    compute_dtype narrows the *stored operands* after the transform has run
+    at full (>= f32) precision — the kernel still accumulates in f32:
+      - jnp.bfloat16 halves operand HBM traffic/VMEM at ~3 decimal digits
+        of operand precision (tolerance-tested against the f32 oracle);
+      - jnp.int8 is allowed only for measures whose transform output is
+        exactly integer-valued (measure.exact_int8, e.g. Kendall's +/-1
+        pair signs) and is *lossless* there: int8 operands accumulate
+        exactly on the MXU (int32 per block), quartering operand traffic.
     """
     n, l = x.shape
     meas = measures.get(measure)
     u = meas.transform(x, dtype=dtype or jnp.float32)
+    if compute_dtype is not None:
+        cd = jnp.dtype(compute_dtype)
+        if jnp.issubdtype(cd, jnp.integer) and not meas.exact_int8:
+            raise ValueError(
+                f"compute_dtype={cd.name} requires an exactly integer-valued "
+                f"transform, but measure {meas.name!r} is not marked "
+                f"exact_int8 (its transform output would be truncated)")
+        u = u.astype(cd)
     plan = tiling.TilePlan.create(n, l, t)
     return pad_u(u, t, l_blk), plan
 
 
-def _tile_coords_arrays(m: int, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    ys = np.empty_like(ids)
-    xs = np.empty_like(ids)
-    for i, jt in enumerate(ids):
-        y, x = mapping.job_coord(m, int(jt))
-        ys[i], xs[i] = y, x
-    return ys, xs
+@jax.jit
+def _scatter_tiles_device(r_pad: Array, tiles: Array, coords: Array) -> Array:
+    """One batched scatter of (P, t, t) tiles into (n_pad, n_pad) at the
+    (row, col) starts in coords (P, 2) — replaces the serial scan of
+    dynamic_update_slice (P sequential HLO ops) with a single scatter."""
+    dnums = jax.lax.ScatterDimensionNumbers(
+        update_window_dims=(1, 2),
+        inserted_window_dims=(),
+        scatter_dims_to_operand_dims=(0, 1),
+    )
+    return jax.lax.scatter(r_pad, coords, tiles, dnums,
+                           indices_are_sorted=False, unique_indices=False)
 
 
 def scatter_tiles(r_pad: Array, tiles: Array, ids: np.ndarray, t: int,
                   m: int) -> Array:
-    """Scatter (t, t) tiles into the padded upper-triangle of R (jnp scan)."""
-    ys, xs = _tile_coords_arrays(m, ids)
-    coords = jnp.stack([jnp.asarray(ys, jnp.int32) * t,
-                        jnp.asarray(xs, jnp.int32) * t], axis=1)
+    """Scatter (t, t) tiles into the padded upper-triangle of R.
 
-    def body(r, args):
-        tile, yx = args
-        r = jax.lax.dynamic_update_slice(r, tile, (yx[0], yx[1]))
-        return r, None
+    The id -> (y, x) bijection is inverted for the whole batch at once
+    (mapping.job_coord_batch, vectorised numpy) and the tiles land via a
+    single batched device scatter.  Duplicate ids (a clamped short pass)
+    carry identical tile contents, so write order does not matter.
+    """
+    ys, xs = mapping.job_coord_batch(m, np.asarray(ids))
+    coords = jnp.stack([jnp.asarray(ys * t, jnp.int32),
+                        jnp.asarray(xs * t, jnp.int32)], axis=1)
+    return _scatter_tiles_device(r_pad, tiles.astype(r_pad.dtype), coords)
 
-    r_pad, _ = jax.lax.scan(body, r_pad, (tiles, coords))
-    return r_pad
+
+def place_tiles_host(r: np.ndarray, tiles: np.ndarray, ys: np.ndarray,
+                     xs: np.ndarray, t: int) -> None:
+    """Write a batch of (t, t) tiles (and their lower-triangle mirrors) into
+    the host matrix r in-place — vectorised fancy-index scatter, no per-tile
+    Python loop.  Works on plain arrays and np.memmap alike."""
+    span = np.arange(t)
+    rows = (ys[:, None] * t + span)[:, :, None]  # (P, t, 1)
+    cols = (xs[:, None] * t + span)[:, None, :]  # (P, 1, t)
+    r[rows, cols] = tiles
+    off = ys != xs
+    if np.any(off):
+        r[cols[off].transpose(0, 2, 1), rows[off].transpose(0, 2, 1)] = \
+            tiles[off].transpose(0, 2, 1)
 
 
 def symmetrize(r_pad: Array, n: int) -> Array:
@@ -103,30 +156,45 @@ def allpairs_pcc(
     t: int = DEFAULT_TILE,
     l_blk: int = DEFAULT_LBLK,
     max_tiles_per_pass: Optional[int] = None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     clip: bool = True,
     measure: measures.MeasureLike = "pearson",
+    fuse_epilogue: bool = True,
+    compute_dtype=None,
 ) -> Array:
     """All-pairs similarity via the triangular-grid Pallas kernel.
     Returns the (n, n) similarity matrix (R for the default Pearson).
 
-    interpret=True by default: this container is CPU-only; on real TPU the
-    launcher passes interpret=False.
+    interpret: None (default) infers from jax.default_backend() — compiled
+        kernel on TPU, interpret mode elsewhere (CPU CI containers).  Pass
+        an explicit bool to override.
+    fuse_epilogue: apply the measure's epilogue + clip inside the kernel's
+        final k-step (default; bit-identical, saves an HBM pass).  False
+        restores the separate post-scatter elementwise pass — kept for
+        regression tests and A/B benchmarks.  Measures with a general
+        (non-divisor) epilogue callable fall back to unfused automatically.
+    compute_dtype: operand narrowing (bf16 / int8) — see prepare().
     """
     n = x.shape[0]
+    interpret = resolve_interpret(interpret)
     meas = measures.get(measure)
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas)
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas,
+                          compute_dtype=compute_dtype)
+    spec, fused = measures.resolve_fusion(meas, fuse_epilogue, plan.l,
+                                          clip=clip)
     total = plan.total_tiles
     pass_tiles = min(total, max_tiles_per_pass or total)
     r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
     for lo, hi in tiling.passes(0, total, pass_tiles):
         out = pcc_tiles(u_pad, lo, t=t, l_blk=l_blk, pass_tiles=pass_tiles,
-                        interpret=interpret)
-        ids = np.minimum(np.arange(lo, lo + pass_tiles), total - 1)
+                        interpret=interpret, epilogue=spec)
+        ids = np.arange(lo, hi)
         valid = hi - lo
-        r_pad = scatter_tiles(r_pad, out[:valid], ids[:valid], t, plan.m)
+        r_pad = scatter_tiles(r_pad, out[:valid], ids, t, plan.m)
     r = symmetrize(r_pad, n)
-    return meas.finalize(r, plan.l, clip=clip)
+    if not fused:
+        r = meas.finalize(r, plan.l, clip=clip)
+    return r
 
 
 def allpairs_pcc_streamed(
@@ -135,8 +203,10 @@ def allpairs_pcc_streamed(
     t: int = DEFAULT_TILE,
     l_blk: int = DEFAULT_LBLK,
     max_tiles_per_pass: int = 1024,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     measure: measures.MeasureLike = "pearson",
+    fuse_epilogue: bool = True,
+    compute_dtype=None,
 ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     """Memory-bounded streaming variant (paper Alg. 2 with double buffering).
 
@@ -145,19 +215,26 @@ def allpairs_pcc_streamed(
     Host-side R never materialises on the accelerator — the caller assembles
     (or reduces) the stream, e.g. into an n x n memmap.
 
-    Tiles carry the measure's epilogue already applied (on device, fused into
-    the async dispatch) but are *not* clipped — clipping happens at assembly
-    (assemble_from_stream) like the pre-measure Pearson path.
+    interpret=None infers from the backend (see allpairs_pcc).  With the
+    default fuse_epilogue=True the yielded tiles are fully finalised
+    (epilogue *and* clip applied in-kernel); with fuse_epilogue=False they
+    carry the epilogue via a separate device op but are not clipped —
+    assembly clips either way (clipping is idempotent), so both modes
+    assemble to identical results.
     """
+    interpret = resolve_interpret(interpret)
     meas = measures.get(measure)
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas)
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas,
+                          compute_dtype=compute_dtype)
+    spec, fused = measures.resolve_fusion(meas, fuse_epilogue, plan.l)
     total = plan.total_tiles
     spans = list(tiling.passes(0, total, max_tiles_per_pass))
 
     def launch(lo):
         out = pcc_tiles(u_pad, lo, t=t, l_blk=l_blk,
-                        pass_tiles=max_tiles_per_pass, interpret=interpret)
-        if meas.epilogue is not None:
+                        pass_tiles=max_tiles_per_pass, interpret=interpret,
+                        epilogue=spec)
+        if not fused and meas.epilogue is not None:
             out = meas.epilogue(out, plan.l)
         return out
 
@@ -182,17 +259,22 @@ def assemble_from_stream(n: int, t: int, m: int,
     """Assemble a streamed tile sequence into a full symmetric host matrix.
 
     The stream's tiles already carry the measure epilogue; assembly only
-    mirrors and (for bounded measures) clips.
+    mirrors and (for bounded measures) clips.  Each chunk's tile-id batch is
+    inverted to coordinates in one vectorised call (job_coord_batch) and
+    placed with one fancy-index scatter — no per-tile Python loop.
+
+    CAUTION: `measure` must match the one the stream was produced with —
+    the stream itself is just arrays and cannot be checked.  The default
+    assumes Pearson; assembling a non-Pearson stream without repeating
+    `measure=` applies Pearson's [-1, 1] clip, silently truncating
+    unbounded measures such as covariance.
     """
     meas = measures.get(measure)
     n_pad = m * t
     r = out if out is not None else np.zeros((n_pad, n_pad), np.float32)
     for ids, tiles in stream:
-        for jt, tile in zip(ids, tiles):
-            y, x = mapping.job_coord(m, int(jt))
-            r[y * t:(y + 1) * t, x * t:(x + 1) * t] = tile
-            if x != y:
-                r[x * t:(x + 1) * t, y * t:(y + 1) * t] = tile.T
+        ys, xs = mapping.job_coord_batch(m, np.asarray(ids))
+        place_tiles_host(r, np.asarray(tiles), ys, xs, t)
     r = r[:n, :n]
     if meas.clip is not None:
         np.clip(r, meas.clip[0], meas.clip[1], out=r)
@@ -207,7 +289,9 @@ allpairs_similarity_streamed = allpairs_pcc_streamed
 __all__ = [
     "prepare",
     "pad_u",
+    "resolve_interpret",
     "scatter_tiles",
+    "place_tiles_host",
     "symmetrize",
     "allpairs_pcc",
     "allpairs_pcc_streamed",

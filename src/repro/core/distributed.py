@@ -1,8 +1,12 @@
 """Distributed all-pairs similarity over a device mesh (paper SSIII-D, C5).
 
 Both drivers accept a `measure=` (core/measures.py) and default to Pearson;
-the row transform runs once before sharding and the elementwise epilogue
-after assembly, so the sharded kernel work is measure-agnostic.
+the row transform runs once before sharding and the elementwise epilogue is
+fused into each device's kernel (kernels/pcc_tile.py EpilogueSpec), so the
+sharded kernel work is measure-agnostic and sharded tiles leave VMEM
+already finalised.  Operands may be narrowed to bf16 / int8 via
+`compute_dtype=` (see core/allpairs.prepare), shrinking both HBM traffic
+and the replication / all-gather collectives.
 
 The paper assigns MPI process i the contiguous tile-id range
 [i*ceil(T/p), (i+1)*ceil(T/p)).  Here each mesh device plays that role under
@@ -36,7 +40,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import measures, tiling
-from repro.core.allpairs import prepare, scatter_tiles, symmetrize
+from repro.core.allpairs import (prepare, resolve_interpret, scatter_tiles,
+                                 symmetrize)
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 
 
@@ -55,21 +60,33 @@ def allpairs_pcc_sharded(
     *,
     t: int = DEFAULT_TILE,
     l_blk: int = DEFAULT_LBLK,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     max_tiles_per_pass: Optional[int] = None,
     measure: measures.MeasureLike = "pearson",
+    fuse_epilogue: bool = True,
+    compute_dtype=None,
 ) -> jax.Array:
     """Distributed all-pairs similarity.  Returns the full (n, n) matrix
     (replicated); Pearson R by default.
 
     All mesh axes are flattened into one logical "PE rank" axis: rank =
     row-major index over mesh axes, matching the paper's flat MPI ranks.
+
+    interpret: None (default) infers from jax.default_backend() — compiled
+        kernel on TPU, interpret elsewhere.  fuse_epilogue / compute_dtype
+        as in allpairs_pcc: the epilogue+clip runs inside each device's
+        kernel (sharded tiles leave VMEM finalised), and operands may be
+        narrowed to bf16 / int8 (Kendall signs) — replication traffic
+        shrinks by the same factor.
     """
     n = x.shape[0]
+    interpret = resolve_interpret(interpret)
     meas = measures.get(measure)
     axes = _flat_axes(mesh)
     p = int(np.prod(mesh.devices.shape))
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas)
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas,
+                          compute_dtype=compute_dtype)
+    spec, fused = measures.resolve_fusion(meas, fuse_epilogue, plan.l)
     total = plan.total_tiles
     per_dev = tiles_per_device(total, p)
     pass_tiles = min(per_dev, max_tiles_per_pass or per_dev)
@@ -86,7 +103,8 @@ def allpairs_pcc_sharded(
             j0 = jnp.minimum(j0, total - 1)
             outs.append(
                 pcc_tiles(u_rep, j0, t=t, l_blk=l_blk,
-                          pass_tiles=pass_tiles, interpret=interpret))
+                          pass_tiles=pass_tiles, interpret=interpret,
+                          epilogue=spec))
         return jnp.concatenate(outs, axis=0)[:per_dev]
 
     spec_rep = P(*([None] * u_pad.ndim))
@@ -100,7 +118,10 @@ def allpairs_pcc_sharded(
     ids = np.minimum(np.arange(p * per_dev), total - 1)
     r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
     r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
-    return meas.finalize(symmetrize(r_pad, n), plan.l)
+    r = symmetrize(r_pad, n)
+    if not fused:
+        r = meas.finalize(r, plan.l)
+    return r
 
 
 def allpairs_pcc_sharded_u(
@@ -109,18 +130,25 @@ def allpairs_pcc_sharded_u(
     *,
     t: int = DEFAULT_TILE,
     l_blk: int = DEFAULT_LBLK,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     measure: measures.MeasureLike = "pearson",
+    fuse_epilogue: bool = True,
+    compute_dtype=None,
 ) -> jax.Array:
     """Row-sharded-U variant: U is sharded over the flat rank axis and
     all-gathered once inside shard_map (for U too large to replicate from
     host; the gather is the only collective and is amortised over the whole
-    triangle).  Semantics identical to allpairs_pcc_sharded."""
+    triangle).  Semantics identical to allpairs_pcc_sharded, including
+    interpret=None backend inference, in-kernel fused epilogues, and
+    bf16/int8 operand narrowing (which also shrinks the all-gather)."""
     n = x.shape[0]
+    interpret = resolve_interpret(interpret)
     meas = measures.get(measure)
     axes = _flat_axes(mesh)
     p = int(np.prod(mesh.devices.shape))
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas)
+    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas,
+                          compute_dtype=compute_dtype)
+    spec, fused = measures.resolve_fusion(meas, fuse_epilogue, plan.l)
     # pad rows to p for even row-sharding
     rows = u_pad.shape[0]
     rows_pad = -(-rows // p) * p
@@ -141,7 +169,7 @@ def allpairs_pcc_sharded_u(
             rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
         j0 = jnp.minimum(rank * per_dev, total - 1)
         return pcc_tiles(u_rep, j0, t=t, l_blk=l_blk, pass_tiles=per_dev,
-                         interpret=interpret)
+                         interpret=interpret, epilogue=spec)
 
     fn = shard_map(device_fn, mesh=mesh, in_specs=(P(axes, None),),
                    out_specs=P(axes), check_vma=False)
@@ -151,7 +179,10 @@ def allpairs_pcc_sharded_u(
     ids = np.minimum(np.arange(p * per_dev), total - 1)
     r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
     r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
-    return meas.finalize(symmetrize(r_pad, n), plan.l)
+    r = symmetrize(r_pad, n)
+    if not fused:
+        r = meas.finalize(r, plan.l)
+    return r
 
 
 # Measure-agnostic aliases (the `_pcc` names serve every measure).

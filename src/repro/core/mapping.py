@@ -35,6 +35,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -81,6 +82,42 @@ def job_coord(n: int, j: int) -> Tuple[int, int]:
     while f_n(n, y) > j:  # y too large
         y -= 1
     x = j + y - f_n(n, y)
+    return y, x
+
+
+def job_coord_batch(n: int, ids) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorised exact inverse mapping: job ids -> (ys, xs), host numpy.
+
+    Semantically `[job_coord(n, j) for j in ids]` but without the per-id
+    Python loop: one float64 sqrt over the whole batch, then vectorised
+    integer clamp loops that repair any rounding until the isqrt invariant
+    s^2 <= disc < (s+1)^2 and the row invariant F_n(y) <= j < F_n(y+1) hold
+    for every element — so the result is exact for any n where the int64
+    radicand does not overflow, not just where the sqrt is (~2^52).
+    Each clamp loop moves every element monotonically toward its fixed point
+    and in practice converges in <= 2 iterations.
+    """
+    j = np.asarray(ids, dtype=np.int64)
+    if j.size and (j.min() < 0 or j.max() >= tri_count(n)):
+        bad = j[(j < 0) | (j >= tri_count(n))][0]
+        raise ValueError(f"job id {bad} out of range for n={n}")
+    disc = 4 * n * n + 4 * n + 1 - 8 * (j + 1)
+    s = np.floor(np.sqrt(disc.astype(np.float64))).astype(np.int64)
+    while np.any(over := s * s > disc):
+        s = np.where(over, s - 1, s)
+    while np.any(under := (s + 1) * (s + 1) <= disc):
+        s = np.where(under, s + 1, s)
+    y = ((2 * n - 1) - s + 1) // 2
+    y = np.clip(y, 0, n - 1)
+
+    def f(yy):
+        return yy * (2 * n - yy + 1) // 2
+
+    while np.any(low := f(y + 1) <= j):
+        y = np.where(low, y + 1, y)
+    while np.any(high := f(y) > j):
+        y = np.where(high, y - 1, y)
+    x = j + y - f(y)
     return y, x
 
 
@@ -290,6 +327,7 @@ __all__ = [
     "f_n",
     "job_id",
     "job_coord",
+    "job_coord_batch",
     "square_job_id",
     "square_job_coord",
     "band_count",

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pcc
+from repro.kernels.pcc_tile import EpilogueSpec
 
 Array = jax.Array
 
@@ -84,7 +85,9 @@ def l2_normalize_rows(x: Array, *, dtype=None) -> Array:
     acc = jnp.promote_types(x.dtype, jnp.float32)
     xa = x.astype(acc)
     norm = jnp.sqrt(jnp.sum(xa * xa, axis=1, keepdims=True))
-    u = jnp.where(norm > 0, xa / jnp.maximum(norm, 1e-300), 0.0)
+    # safe-where: the unselected branch must not compute 0/0 (NaN would trip
+    # jax_debug_nans / poison gradients even though where discards it)
+    u = jnp.where(norm > 0, xa / jnp.where(norm > 0, norm, 1.0), 0.0)
     return u.astype(dtype or x.dtype)
 
 
@@ -120,14 +123,27 @@ def pair_sign_transform(x: Array, *, dtype=None) -> Array:
 # ---------------------------------------------------------------------------
 # Epilogues (elementwise maps on raw inner-product values)
 # ---------------------------------------------------------------------------
+# Built-in epilogues are pure static divisions.  The divisor functions below
+# feed both the unfused jnp path and the kernel-fused EpilogueSpec, and the
+# unfused callables delegate to EpilogueSpec.apply — ONE canonical
+# implementation (multiply by the f32 reciprocal; see its docstring), so
+# fused and unfused results are bit-identical.
+
+
+def _cov_div(l: int) -> float:
+    return float(max(l - 1, 1))
+
+
+def _kendall_div(l: int) -> float:
+    return float(max(l * (l - 1) // 2, 1))
 
 
 def _cov_epilogue(vals: Array, l: int) -> Array:
-    return vals / max(l - 1, 1)
+    return EpilogueSpec(div=_cov_div(l)).apply(vals)
 
 
 def _kendall_epilogue(vals: Array, l: int) -> Array:
-    return vals / max(l * (l - 1) // 2, 1)
+    return EpilogueSpec(div=_kendall_div(l)).apply(vals)
 
 
 # ---------------------------------------------------------------------------
@@ -139,18 +155,47 @@ def _kendall_epilogue(vals: Array, l: int) -> Array:
 class Measure:
     """A symmetric pairwise similarity decomposed for the tiled engine.
 
-    transform: (n, l) -> (n, l') row map; the kernel computes U @ U^T tiles.
-    epilogue:  elementwise map (raw_value, original_l) -> similarity, or
-               None for identity (kept as None so the Pearson path stays
-               bit-identical to the pre-measure implementation).
-    clip:      output range enforced when the caller asks for clipping
-               (guards float drift on bounded measures), or None.
+    transform:    (n, l) -> (n, l') row map; the kernel computes U @ U^T
+                  tiles.
+    epilogue:     elementwise map (raw_value, original_l) -> similarity, or
+                  None for identity (kept as None so the Pearson path stays
+                  bit-identical to the pre-measure implementation).
+    clip:         output range enforced when the caller asks for clipping
+                  (guards float drift on bounded measures), or None.
+    epilogue_div: static denominator given the original sample count l, for
+                  epilogues of the form v -> v / div.  This is the
+                  kernel-inlinable description of `epilogue`: when set (or
+                  when epilogue is None), the measure is *fusable* — the
+                  Pallas kernel finalises tiles in VMEM at its last k-step
+                  (see kernels/pcc_tile.py EpilogueSpec) instead of the
+                  driver making a second HBM pass.  Must agree with
+                  `epilogue` (the built-ins derive one from the other).
+    exact_int8:   the transform's output is exactly representable in int8
+                  (e.g. Kendall's +/-1/0 pair signs), enabling the int8
+                  operand path of `prepare(compute_dtype=jnp.int8)`.
     """
 
     name: str
     transform: Callable[..., Array]
     epilogue: Optional[Callable[[Array, int], Array]] = None
     clip: Optional[Tuple[float, float]] = None
+    epilogue_div: Optional[Callable[[int], float]] = None
+    exact_int8: bool = False
+
+    @property
+    def fusable(self) -> bool:
+        """Whether the epilogue can be inlined into the kernel."""
+        return self.epilogue is None or self.epilogue_div is not None
+
+    def fused_spec(self, l: int, *, clip: bool = True) -> Optional[EpilogueSpec]:
+        """The kernel-fused form of finalize() for sample count l, or None
+        for non-fusable (general-callable) epilogues."""
+        if not self.fusable:
+            return None
+        return EpilogueSpec(
+            div=self.epilogue_div(l) if self.epilogue_div is not None else None,
+            clip=self.clip if clip else None,
+        )
 
     def finalize(self, vals: Array, l: int, *, clip: bool = True) -> Array:
         """Apply the epilogue (and optional clip) to raw kernel output."""
@@ -163,9 +208,10 @@ class Measure:
 PEARSON = Measure("pearson", pcc.transform, None, (-1.0, 1.0))
 SPEARMAN = Measure("spearman", spearman_transform, None, (-1.0, 1.0))
 COSINE = Measure("cosine", l2_normalize_rows, None, (-1.0, 1.0))
-COVARIANCE = Measure("covariance", center_rows, _cov_epilogue, None)
+COVARIANCE = Measure("covariance", center_rows, _cov_epilogue, None,
+                     epilogue_div=_cov_div)
 KENDALL = Measure("kendall", pair_sign_transform, _kendall_epilogue,
-                  (-1.0, 1.0))
+                  (-1.0, 1.0), epilogue_div=_kendall_div, exact_int8=True)
 
 _REGISTRY: Dict[str, Measure] = {
     "pearson": PEARSON,
@@ -203,6 +249,22 @@ def available() -> Tuple[str, ...]:
     return tuple(sorted(set(m.name for m in _REGISTRY.values())))
 
 
+def resolve_fusion(meas: "Measure", fuse_epilogue: bool, l: int, *,
+                   clip: bool = True,
+                   ) -> Tuple[Optional[EpilogueSpec], bool]:
+    """Shared driver prologue: decide whether the epilogue fuses into the
+    kernel and build its spec.
+
+    Returns (spec, fused).  fused is False when the caller opted out or the
+    measure's epilogue is a general callable with no divisor form — the
+    caller must then run Measure.finalize after assembly; when fused, the
+    kernel's final k-step has already applied epilogue and clip.
+    """
+    fused = fuse_epilogue and meas.fusable
+    spec = meas.fused_spec(l, clip=clip) if fused else None
+    return spec, fused
+
+
 # ---------------------------------------------------------------------------
 # Dense references (oracles; also the fastest small-n XLA path)
 # ---------------------------------------------------------------------------
@@ -238,6 +300,7 @@ def kendall_tau_a_literal(x: Array) -> np.ndarray:
 __all__ = [
     "Measure",
     "MeasureLike",
+    "EpilogueSpec",
     "PEARSON",
     "SPEARMAN",
     "COSINE",
@@ -246,6 +309,7 @@ __all__ = [
     "get",
     "register",
     "available",
+    "resolve_fusion",
     "rank_rows",
     "spearman_transform",
     "l2_normalize_rows",

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, EpilogueSpec
 from repro.kernels.pcc_tile import pcc_tiles as _pcc_tiles
 
 Impl = Literal["kernel", "interpret", "ref"]
@@ -43,14 +43,18 @@ def get_default_impl() -> Impl:
 
 def pcc_tiles(u_pad: jax.Array, j_start, *, t: int = DEFAULT_TILE,
               l_blk: int = DEFAULT_LBLK, pass_tiles: int,
+              epilogue: Optional[EpilogueSpec] = None,
               impl: Optional[Impl] = None) -> jax.Array:
-    """Triangular all-pairs correlation tiles (see kernels/pcc_tile.py)."""
+    """Triangular all-pairs correlation tiles (see kernels/pcc_tile.py).
+    `epilogue` is fused into the kernel's final k-step (kernel/interpret) or
+    applied post-hoc by the oracle (ref) — identical ops either way."""
     impl = impl or _DEFAULT_IMPL
     if impl == "ref":
         return ref.pcc_tiles_ref(u_pad, int(j_start), t=t,
-                                 pass_tiles=pass_tiles)
+                                 pass_tiles=pass_tiles, epilogue=epilogue)
     return _pcc_tiles(u_pad, j_start, t=t, l_blk=l_blk,
-                      pass_tiles=pass_tiles, interpret=impl == "interpret")
+                      pass_tiles=pass_tiles, interpret=impl == "interpret",
+                      epilogue=epilogue)
 
 
 def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -66,4 +70,4 @@ def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 __all__ = ["pcc_tiles", "flash_mha", "set_default_impl", "get_default_impl",
-           "Impl"]
+           "EpilogueSpec", "Impl"]

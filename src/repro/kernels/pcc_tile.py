@@ -19,9 +19,24 @@ Grid layout: (num_tiles_per_pass, l_blocks) — the l axis iterates fastest,
 so each output tile's accumulator stays resident in VMEM across its k-steps
 (revisited-block accumulation).
 
+Fused epilogue: the measure's elementwise finalisation (divide by a static
+denominator, clip to a bounded range — see core/measures.py) is applied *in
+VMEM at the final k-step*, so finished similarity tiles are the only thing
+ever written to HBM.  Without fusion the driver re-reads and re-writes the
+whole (pass_tiles, t, t) output once more just to scale/clip it — a full
+extra HBM round-trip per pass.  The fused ops replicate the unfused jnp ops
+exactly (same division, same clip), so results are bit-identical.
+
+Mixed-precision operands: U may be stored in bf16 (or int8 for exactly
+integer-valued transforms such as Kendall's +/-1 pair signs), halving or
+quartering operand HBM traffic and VMEM footprint; accumulation stays f32
+(int8 operands accumulate exactly in int32 per k-block, then convert —
+exact because each block's dot is bounded by l_blk).
+
 VMEM budget at the default t=256, l_blk=512, f32:
   2 operand blocks (256*512*4 = 512 KiB each) + 1 accumulator
   (256*256*4 = 256 KiB) ~= 1.3 MiB  << 16 MiB/core.
+bf16 operands halve the operand blocks (512 KiB total), int8 quarters them.
 
 Out-of-range grid steps (padding when a pass is shorter than the compiled
 pass length) clamp to the last valid tile; the driver discards those tiles.
@@ -34,10 +49,13 @@ fraction ~1/m of the total work (documented in DESIGN.md SS2).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -47,22 +65,70 @@ DEFAULT_TILE = 256
 DEFAULT_LBLK = 512
 
 
-def _kernel(jstart_ref, urow_ref, ucol_ref, out_ref, *, l_blocks: int):
-    """Body: accumulate one (t, t) tile over the l (sample) axis."""
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Kernel-inlinable elementwise epilogue: v -> clip(v * (1/div), lo, hi).
+
+    Hashable (static jit argument) so one compiled kernel serves each
+    (div, clip) pair.  `div` is the measure's static denominator (e.g.
+    covariance's l-1, Kendall's C(l,2)) or None for identity; `clip` is the
+    bounded-measure output range or None.
+
+    The division is canonically a multiply by the f32-rounded reciprocal —
+    not an IEEE divide — because XLA rewrites in-jit divides by constants to
+    reciprocal multiplies anyway, and pinning one form keeps the fused
+    (in-kernel, jitted) and unfused (eager Measure.finalize) paths
+    bit-identical.  `apply` is that single canonical implementation; both
+    the kernel's final k-step and the unfused epilogues call it.
+    """
+
+    div: Optional[float] = None
+    clip: Optional[Tuple[float, float]] = None
+
+    def is_identity(self) -> bool:
+        return self.div is None and self.clip is None
+
+    def apply(self, vals):
+        if self.div is not None:
+            vals = vals * (np.float32(1.0) / np.float32(self.div))
+        if self.clip is not None:
+            vals = jnp.clip(vals, self.clip[0], self.clip[1])
+        return vals
+
+
+def _kernel(jstart_ref, urow_ref, ucol_ref, out_ref, *, l_blocks: int,
+            epilogue: Optional[EpilogueSpec]):
+    """Body: accumulate one (t, t) tile over the l (sample) axis, applying
+    the fused epilogue at the last k-step (finished tiles only hit HBM)."""
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    # (t, l_blk) . (t, l_blk)^T on the MXU, f32 accumulation.
-    part = jax.lax.dot_general(
-        urow_ref[...],
-        ucol_ref[...],
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    # (t, l_blk) . (t, l_blk)^T on the MXU.  Float operands accumulate in
+    # f32; int8 operands (Kendall pair signs) accumulate exactly in int32
+    # per block, then widen to the f32 tile accumulator.
+    if jnp.issubdtype(urow_ref.dtype, jnp.integer):
+        part = jax.lax.dot_general(
+            urow_ref[...],
+            ucol_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+    else:
+        part = jax.lax.dot_general(
+            urow_ref[...],
+            ucol_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
     out_ref[...] += part
+
+    if epilogue is not None and not epilogue.is_identity():
+        @pl.when(k == l_blocks - 1)
+        def _finalize():
+            out_ref[...] = epilogue.apply(out_ref[...])
 
 
 def _row_map(i, k, jstart_ref, *, m: int, total: int):
@@ -86,7 +152,7 @@ def _out_map(i, k, jstart_ref, *, m: int, total: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("t", "l_blk", "pass_tiles", "interpret"),
+    static_argnames=("t", "l_blk", "pass_tiles", "interpret", "epilogue"),
 )
 def pcc_tiles(
     u_pad: jax.Array,
@@ -96,13 +162,17 @@ def pcc_tiles(
     l_blk: int = DEFAULT_LBLK,
     pass_tiles: int,
     interpret: bool = False,
+    epilogue: Optional[EpilogueSpec] = None,
 ) -> jax.Array:
     """Compute `pass_tiles` consecutive upper-triangle tiles starting at
     tile id `j_start` (runtime scalar), following paper Alg. 1.
 
     u_pad: (n_pad, l_pad) pre-transformed variables (Eq. 4), zero-padded so
-           n_pad % t == 0 and l_pad % l_blk == 0.
+           n_pad % t == 0 and l_pad % l_blk == 0.  May be f32, bf16, or (for
+           integer-valued transforms) int8 — accumulation is always f32.
     j_start: int32 scalar — first tile id of this pass (J_start in Alg. 1).
+    epilogue: optional static EpilogueSpec fused into the final k-step so
+           tiles leave VMEM already finalised (no second HBM pass).
     Returns (pass_tiles, t, t) f32 tile results (R' in Alg. 1).
     """
     n_pad, l_pad = u_pad.shape
@@ -113,7 +183,7 @@ def pcc_tiles(
     l_blocks = l_pad // l_blk
 
     grid = (pass_tiles, l_blocks)
-    kernel = functools.partial(_kernel, l_blocks=l_blocks)
+    kernel = functools.partial(_kernel, l_blocks=l_blocks, epilogue=epilogue)
 
     out = pl.pallas_call(
         kernel,
@@ -140,4 +210,4 @@ def pcc_tiles(
     return out
 
 
-__all__ = ["pcc_tiles", "DEFAULT_TILE", "DEFAULT_LBLK"]
+__all__ = ["pcc_tiles", "EpilogueSpec", "DEFAULT_TILE", "DEFAULT_LBLK"]

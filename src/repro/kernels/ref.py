@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mapping
+from repro.kernels.pcc_tile import EpilogueSpec
 
 
 # ---------------------------------------------------------------------------
@@ -20,10 +21,13 @@ from repro.core import mapping
 
 
 def pcc_tiles_ref(u_pad: jax.Array, j_start: int, *, t: int,
-                  pass_tiles: int) -> jax.Array:
+                  pass_tiles: int,
+                  epilogue: EpilogueSpec | None = None) -> jax.Array:
     """Oracle for kernels.pcc_tile.pcc_tiles: gather the (t, t) blocks of
     R = U_pad @ U_pad^T addressed by tile ids [j_start, j_start+pass_tiles),
-    clamping out-of-range ids to the last tile (kernel padding semantics)."""
+    clamping out-of-range ids to the last tile (kernel padding semantics).
+    An EpilogueSpec, when given, is applied to the gathered tiles exactly as
+    the kernel fuses it into its final k-step."""
     n_pad = u_pad.shape[0]
     m = n_pad // t
     total = m * (m + 1) // 2
@@ -34,7 +38,10 @@ def pcc_tiles_ref(u_pad: jax.Array, j_start: int, *, t: int,
         jt = min(int(j_start) + i, total - 1)
         y_t, x_t = mapping.job_coord(m, jt)
         out.append(r_full[y_t * t:(y_t + 1) * t, x_t * t:(x_t + 1) * t])
-    return jnp.stack(out)
+    tiles = jnp.stack(out)
+    if epilogue is not None:
+        tiles = epilogue.apply(tiles)
+    return tiles
 
 
 # ---------------------------------------------------------------------------

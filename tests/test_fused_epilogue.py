@@ -1,0 +1,316 @@
+"""Fused-epilogue + mixed-precision regression suite.
+
+The contract under test (ISSUE 2 acceptance criteria):
+  * with the default fuse_epilogue=True, every driver's output is
+    bit-identical to the pre-fusion (fuse_epilogue=False) pipeline for
+    Pearson f32 — on the tiled, streamed, and (in a subprocess, 8 simulated
+    devices) both sharded paths;
+  * bf16 operand narrowing stays within oracle tolerance;
+  * the int8 Kendall pair-sign path is exact against the literal tau-a
+    oracle and rejected for non-integer-valued transforms;
+  * assembly never falls back to a per-tile host job_coord loop.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mapping, measures, tiling
+from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
+                                 assemble_from_stream, place_tiles_host,
+                                 prepare, resolve_interpret, scatter_tiles)
+from repro.kernels import ops
+from repro.kernels.pcc_tile import EpilogueSpec, pcc_tiles
+
+ALL_MEASURES = ["pearson", "spearman", "cosine", "covariance", "kendall"]
+
+
+def _x(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: fused == unfused (single-device paths)
+# ---------------------------------------------------------------------------
+
+
+def test_pearson_f32_fused_bit_identical_tiled():
+    """The headline regression: Pearson f32 with the in-kernel epilogue is
+    bit-for-bit the pre-fusion pipeline, across pass partitionings."""
+    x = _x(33, 17, seed=1)
+    for pass_tiles in [None, 1, 3, 7]:
+        fused = np.asarray(allpairs_pcc(x, t=8, l_blk=8,
+                                        max_tiles_per_pass=pass_tiles,
+                                        fuse_epilogue=True))
+        unfused = np.asarray(allpairs_pcc(x, t=8, l_blk=8,
+                                          max_tiles_per_pass=pass_tiles,
+                                          fuse_epilogue=False))
+        np.testing.assert_array_equal(fused, unfused)
+
+
+def test_pearson_f32_fused_bit_identical_streamed():
+    x = _x(29, 14, seed=2)
+    t = 8
+    plan = tiling.TilePlan.create(29, 14, t)
+
+    def assemble(fuse):
+        stream = allpairs_pcc_streamed(x, t=t, l_blk=8, max_tiles_per_pass=4,
+                                       fuse_epilogue=fuse)
+        return assemble_from_stream(29, t, plan.m, stream)
+
+    np.testing.assert_array_equal(assemble(True), assemble(False))
+
+
+@pytest.mark.parametrize("measure", ALL_MEASURES)
+def test_all_measures_fused_bit_identical(measure):
+    """Stronger than the Pearson criterion: every built-in measure's fused
+    epilogue (divide-by-static-denominator + clip) is the same canonical op
+    as the unfused path, so all are bit-identical."""
+    x = _x(21, 11, seed=3)
+    fused = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure=measure,
+                                    fuse_epilogue=True))
+    unfused = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure=measure,
+                                      fuse_epilogue=False))
+    np.testing.assert_array_equal(fused, unfused)
+
+
+def test_fused_is_the_default_and_measures_fusable():
+    for name in ALL_MEASURES:
+        assert measures.get(name).fusable, name
+    # a general-callable epilogue without a divisor form is not fusable and
+    # must fall back to the unfused path rather than mis-fusing
+    odd = measures.Measure("sq", measures.PEARSON.transform,
+                           epilogue=lambda v, l: v * v)
+    assert not odd.fusable
+    x = _x(10, 9, seed=4)
+    got = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure=odd))
+    want = np.asarray(measures.dense_reference(x, odd))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_kernel_fused_epilogue_matches_post_hoc_spec():
+    """EpilogueSpec applied in the kernel's final k-step is bit-identical to
+    the same spec applied post-hoc to the raw kernel tiles, and the ref
+    oracle (single full-l GEMM, so different f32 accumulation order) agrees
+    within tolerance through the ops dispatch."""
+    u, plan = prepare(_x(20, 24, seed=5), t=8, l_blk=8)
+    spec = EpilogueSpec(div=23.0, clip=(-1.0, 1.0))
+    raw = pcc_tiles(u, 0, t=8, l_blk=8, pass_tiles=plan.total_tiles,
+                    interpret=True)
+    fused = ops.pcc_tiles(u, 0, t=8, l_blk=8, pass_tiles=plan.total_tiles,
+                          epilogue=spec, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(spec.apply(raw)))
+    oracle = ops.pcc_tiles(u, 0, t=8, l_blk=8, pass_tiles=plan.total_tiles,
+                           epilogue=spec, impl="ref")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: sharded paths (8 simulated devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run(body: str):
+    code = textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    return res.stdout
+
+
+def test_pearson_f32_fused_bit_identical_sharded():
+    """Fused == unfused bit-for-bit on allpairs_pcc_sharded and
+    allpairs_pcc_sharded_u (Pearson f32, 1-D and 2-D meshes)."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import (allpairs_pcc_sharded,
+                                            allpairs_pcc_sharded_u)
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.standard_normal((50, 37)).astype(np.float32))
+        for mesh_shape, axes in [((8,), ("d",)), ((4, 2), ("a", "b"))]:
+            mesh = jax.make_mesh(mesh_shape, axes)
+            for fn in (allpairs_pcc_sharded, allpairs_pcc_sharded_u):
+                a = np.asarray(fn(x, mesh, t=8, l_blk=16,
+                                  fuse_epilogue=True))
+                b = np.asarray(fn(x, mesh, t=8, l_blk=16,
+                                  fuse_epilogue=False))
+                np.testing.assert_array_equal(a, b)
+        print("OK")
+    """)
+
+
+def test_sharded_mixed_precision_parity():
+    """bf16 operands within tolerance; int8 Kendall exact vs the literal
+    oracle — on both sharded drivers."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import (allpairs_pcc_sharded,
+                                            allpairs_pcc_sharded_u)
+        from repro.core.measures import kendall_tau_a_literal
+        from repro.core.pcc import pearson_gemm
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.standard_normal((30, 17)).astype(np.float32))
+        mesh = jax.make_mesh((8,), ("d",))
+        ref = np.asarray(pearson_gemm(x))
+        lit = kendall_tau_a_literal(np.asarray(x))
+        for fn in (allpairs_pcc_sharded, allpairs_pcc_sharded_u):
+            r16 = np.asarray(fn(x, mesh, t=8, l_blk=8,
+                                compute_dtype=jnp.bfloat16))
+            assert np.abs(r16 - ref).max() < 3e-2, fn.__name__
+            k8 = np.asarray(fn(x, mesh, t=8, l_blk=8, measure="kendall",
+                               compute_dtype=jnp.int8))
+            assert np.abs(k8 - lit).max() < 1e-6, fn.__name__
+        print("OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_operands_within_oracle_tolerance():
+    x = _x(24, 31, seed=6)
+    from repro.core.pcc import pearson_gemm
+    ref = np.asarray(pearson_gemm(x))
+    got = np.asarray(allpairs_pcc(x, t=8, l_blk=8,
+                                  compute_dtype=jnp.bfloat16))
+    assert np.abs(got - ref).max() < 3e-2
+    # operands really are narrowed (the bandwidth claim)
+    u, _ = prepare(x, t=8, l_blk=8, compute_dtype=jnp.bfloat16)
+    assert u.dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("path", ["tiled", "streamed"])
+def test_int8_kendall_exact_vs_literal(path):
+    """+/-1 pair signs accumulate exactly in int8/int32, so the quantised
+    path is as accurate as f32 against the O(n^2 l^2) literal oracle."""
+    x = _x(11, 13, seed=7)
+    lit = measures.kendall_tau_a_literal(np.asarray(x))
+    if path == "tiled":
+        got = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="kendall",
+                                      compute_dtype=jnp.int8))
+    else:
+        plan = tiling.TilePlan.create(11, 13, 8)
+        stream = allpairs_pcc_streamed(x, t=8, l_blk=8, max_tiles_per_pass=2,
+                                       measure="kendall",
+                                       compute_dtype=jnp.int8)
+        got = assemble_from_stream(11, 8, plan.m, stream, measure="kendall")
+    np.testing.assert_allclose(got, lit, atol=1e-6)
+    # ... and bit-identical to the f32-operand kendall path: the sign GEMM
+    # is exact either way.
+    f32 = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="kendall"))
+    if path == "tiled":
+        np.testing.assert_array_equal(got, f32)
+
+
+def test_int8_rejected_for_noninteger_transforms():
+    x = _x(8, 8, seed=8)
+    for name in ["pearson", "spearman", "cosine", "covariance"]:
+        with pytest.raises(ValueError, match="exact"):
+            prepare(x, t=8, l_blk=8, measure=name, compute_dtype=jnp.int8)
+
+
+def test_prepare_int8_kendall_dtype_and_values():
+    x = _x(5, 7, seed=9)
+    u8, plan = prepare(x, t=8, l_blk=8, measure="kendall",
+                       compute_dtype=jnp.int8)
+    uf, _ = prepare(x, t=8, l_blk=8, measure="kendall")
+    assert u8.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(u8, np.float32), np.asarray(uf))
+
+
+# ---------------------------------------------------------------------------
+# Vectorised assembly (no per-tile host loop)
+# ---------------------------------------------------------------------------
+
+
+def test_assembly_never_calls_scalar_job_coord(monkeypatch):
+    """scatter_tiles and assemble_from_stream must use the batched bijection
+    — the scalar per-tile job_coord is off-limits on the hot path."""
+    def boom(*a, **k):
+        raise AssertionError("scalar job_coord called on the assembly path")
+
+    monkeypatch.setattr(mapping, "job_coord", boom)
+    x = _x(20, 10, seed=10)
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8))
+    plan = tiling.TilePlan.create(20, 10, 8)
+    stream = allpairs_pcc_streamed(x, t=8, l_blk=8, max_tiles_per_pass=3)
+    r2 = assemble_from_stream(20, 8, plan.m, stream)
+    np.testing.assert_allclose(r2, r, atol=1e-6)
+
+
+def test_scatter_tiles_matches_serial_reference():
+    """The single batched scatter == the old serial dynamic_update_slice
+    semantics, including duplicate (clamped) ids writing identical tiles."""
+    rng = np.random.default_rng(13)
+    m, t = 4, 8
+    total = mapping.tri_count(m)
+    tiles = rng.standard_normal((total + 2, t, t)).astype(np.float32)
+    ids = np.minimum(np.arange(total + 2), total - 1)
+    tiles[total:] = tiles[total - 1]  # duplicates carry identical contents
+    r_pad = jnp.zeros((m * t, m * t), jnp.float32)
+    got = np.asarray(scatter_tiles(r_pad, jnp.asarray(tiles), ids, t, m))
+    want = np.zeros((m * t, m * t), np.float32)
+    for jt, tile in zip(ids, tiles):
+        y, x = mapping.job_coord(m, int(jt))
+        want[y * t:(y + 1) * t, x * t:(x + 1) * t] = tile
+    np.testing.assert_array_equal(got, want)
+
+
+def test_place_tiles_host_mirrors_and_memmap(tmp_path):
+    """Vectorised host placement writes upper blocks + transposed mirrors
+    (diagonal excluded), and works in-place on an np.memmap."""
+    m, t = 3, 4
+    total = mapping.tri_count(m)
+    rng = np.random.default_rng(14)
+    tiles = rng.standard_normal((total, t, t)).astype(np.float32)
+    ids = np.arange(total)
+    ys, xs = mapping.job_coord_batch(m, ids)
+
+    path = tmp_path / "r.mm"
+    r = np.memmap(path, dtype=np.float32, mode="w+", shape=(m * t, m * t))
+    r[:] = 0.0
+    place_tiles_host(r, tiles, ys, xs, t)
+
+    want = np.zeros((m * t, m * t), np.float32)
+    for jt in ids:
+        y, x = mapping.job_coord(m, int(jt))
+        want[y * t:(y + 1) * t, x * t:(x + 1) * t] = tiles[jt]
+        if y != x:
+            want[x * t:(x + 1) * t, y * t:(y + 1) * t] = tiles[jt].T
+    np.testing.assert_array_equal(np.asarray(r), want)
+
+
+# ---------------------------------------------------------------------------
+# interpret=None backend inference
+# ---------------------------------------------------------------------------
+
+
+def test_interpret_none_infers_from_backend():
+    import jax
+    inferred = resolve_interpret(None)
+    assert inferred == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_interpret_default_runs_on_cpu():
+    """On this CPU container the inferred default must be interpret mode and
+    the drivers must work without an explicit interpret=."""
+    x = _x(12, 9, seed=15)
+    from repro.core.pcc import pearson_gemm
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8))
+    np.testing.assert_allclose(r, np.asarray(pearson_gemm(x)), atol=3e-6)

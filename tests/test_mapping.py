@@ -71,6 +71,46 @@ def test_row_major_ordering():
     assert got == expected
 
 
+# -- vectorised host batch inverse ------------------------------------------
+
+
+@given(st.integers(1, 10**7), st.data())
+@settings(max_examples=100, deadline=None)
+def test_job_coord_batch_matches_scalar(n, data):
+    """job_coord_batch == [job_coord(n, j) for j in ids], element-for-element,
+    including ids at the extremes of the range."""
+    total = mapping.tri_count(n)
+    ids = [0, total - 1, total // 2]
+    ids += [data.draw(st.integers(0, total - 1)) for _ in range(8)]
+    ys, xs = mapping.job_coord_batch(n, np.asarray(ids, np.int64))
+    assert ys.shape == xs.shape == (len(ids),)
+    for j, y, x in zip(ids, ys, xs):
+        assert (int(y), int(x)) == mapping.job_coord(n, j)
+
+
+@given(st.integers(1, 400))
+@settings(max_examples=25, deadline=None)
+def test_job_coord_batch_exhaustive(n):
+    """Full-triangle batch inversion round-trips through job_id."""
+    ids = np.arange(mapping.tri_count(n))
+    ys, xs = mapping.job_coord_batch(n, ids)
+    assert np.all((0 <= ys) & (ys <= xs) & (xs < n))
+    back = ys * (2 * n - ys + 1) // 2 + xs - ys  # vectorised Eq. 9
+    np.testing.assert_array_equal(back, ids)
+
+
+def test_job_coord_batch_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        mapping.job_coord_batch(4, np.array([0, mapping.tri_count(4)]))
+    with pytest.raises(ValueError):
+        mapping.job_coord_batch(4, np.array([-1]))
+
+
+def test_job_coord_batch_empty():
+    ys, xs = mapping.job_coord_batch(5, np.array([], np.int64))
+    assert ys.size == 0 and xs.size == 0
+
+
 # -- jnp variants ------------------------------------------------------------
 
 
