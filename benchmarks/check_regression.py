@@ -1,0 +1,84 @@
+"""Fail-soft benchmark regression check for the bench-smoke CI job.
+
+Compares the newest trajectory point of a candidate BENCH_*.json against
+the newest point of a baseline trajectory (by default the committed
+per-PR snapshot) and emits one GitHub Actions ``::warning::`` annotation
+per kernel entry that slowed by more than the threshold.  Always exits 0:
+interpret-mode CPU timings are noisy correctness vehicles, so a slowdown
+warns the reviewer instead of failing the push.
+
+  PYTHONPATH=src:. python -m benchmarks.check_regression \
+      BENCH_kernels.ci.json --baseline BENCH_kernels.json [--threshold 1.2]
+
+Rows with a sub-millisecond or zero baseline are skipped (structural
+entries and noise-floor timings), as are rows present in only one file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Optional
+
+# Timings below this are dominated by dispatch noise on CI runners; a 20%
+# delta there is meaningless.
+MIN_BASELINE_US = 1000.0
+
+
+def latest_rows(path: str) -> Optional[Dict[str, float]]:
+    """name -> us_per_call of the newest trajectory point, or None if the
+    file is missing/unreadable/empty (fail-soft: no point, no warnings)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if not isinstance(data, list) or not data:
+            return None
+        rows = data[-1].get("rows", [])
+        return {r["name"]: float(r["us_per_call"]) for r in rows}
+    except (OSError, json.JSONDecodeError, KeyError, TypeError, ValueError):
+        return None
+
+
+def compare(current: Dict[str, float], baseline: Dict[str, float],
+            threshold: float) -> list:
+    """(name, old_us, new_us, ratio) for every comparable regression."""
+    out = []
+    for name, new_us in sorted(current.items()):
+        old_us = baseline.get(name)
+        if old_us is None or old_us < MIN_BASELINE_US:
+            continue
+        if new_us > threshold * old_us:
+            out.append((name, old_us, new_us, new_us / old_us))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="trajectory file with the fresh point")
+    ap.add_argument("--baseline", default="BENCH_kernels.json",
+                    help="trajectory file to compare against (newest point)")
+    ap.add_argument("--threshold", type=float, default=1.2,
+                    help="warn when new > threshold * old (default 1.2)")
+    args = ap.parse_args()
+
+    cur = latest_rows(args.current)
+    base = latest_rows(args.baseline)
+    if cur is None or base is None:
+        print(f"# regression check skipped: unreadable trajectory "
+              f"(current={args.current!r} ok={cur is not None}, "
+              f"baseline={args.baseline!r} ok={base is not None})")
+        return 0
+
+    regressions = compare(cur, base, args.threshold)
+    for name, old_us, new_us, ratio in regressions:
+        print(f"::warning title=bench regression::{name} slowed "
+              f"{ratio:.2f}x ({old_us:.0f}us -> {new_us:.0f}us, "
+              f"threshold {args.threshold:.2f}x)")
+    print(f"# regression check: {len(cur)} rows, {len(regressions)} "
+          f"over {args.threshold:.2f}x vs {args.baseline}")
+    return 0  # fail-soft by design
+
+
+if __name__ == "__main__":
+    sys.exit(main())

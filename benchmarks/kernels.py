@@ -15,7 +15,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import measures
-from repro.core.allpairs import allpairs_pcc, prepare
+from repro.core.allpairs import allpairs, allpairs_pcc, prepare
+from repro.core.plan import ExecutionPlan
+from repro.core.sinks import EdgeCountSink, HostSink
 from repro.kernels.flash_attention import grid_savings
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 from repro.kernels.ref import pcc_tiles_ref
@@ -119,6 +121,38 @@ def run() -> None:
     t_tr = timeit(lambda: measures.KENDALL.transform(xk, dtype=jnp.float32))
     emit("kernels/transform_kendall", t_tr * 1e6,
          f"n=256;l=48;pairs={48 * 47 // 2}")
+
+    # final-pass launch sizing: the executor's last kernel launch covers
+    # exactly the remaining tiles — assert no dummy-tile compute at the
+    # production geometry (the pre-refactor driver padded the final pass to
+    # max_tiles_per_pass, wasting up to mtp-1 tiles of MXU work per run).
+    plan = ExecutionPlan.create(65536, 4096, t=PROD_T, l_blk=PROD_LBLK,
+                                max_tiles_per_pass=PROD_PASS_TILES)
+    sizes = plan.launch_sizes
+    assert sum(sizes) == plan.total_tiles, "launches must cover the triangle"
+    assert all(s == PROD_PASS_TILES for s in sizes[:-1])
+    assert sizes[-1] == plan.total_tiles % PROD_PASS_TILES or \
+        sizes[-1] == PROD_PASS_TILES
+    dummy = len(sizes) * PROD_PASS_TILES - plan.total_tiles
+    saved = dummy * PROD_T * PROD_T * 4
+    emit("kernels/final_pass_launch", 0.0,
+         f"total_tiles={plan.total_tiles};passes={len(sizes)};"
+         f"final_launch={sizes[-1]};dummy_tiles_avoided={dummy};"
+         f"hbm_bytes_saved_per_run={saved}")
+
+    # executor + sink structural A/B (interpret timing, correctness
+    # vehicle): dense device assembly vs out-of-core host assembly vs an
+    # O(n)-state streaming reduction — all three through the one executor.
+    xs = x[:64, :64]
+    for label, mk in [("dense", lambda: None),
+                      ("host", lambda: HostSink()),
+                      ("edgecount", lambda: EdgeCountSink(0.2))]:
+        t_s = timeit(lambda mk=mk: allpairs(xs, t=16, l_blk=32,
+                                            max_tiles_per_pass=4,
+                                            sink=mk(), interpret=True),
+                     warmup=1, iters=1)
+        emit(f"kernels/executor_sink_{label}", t_s * 1e6,
+             "n=64;l=64;t=16;mtp=4")
 
     # triangular/banded grid savings (the C1 payoff)
     for s, blk, w in [(4096, 128, None), (32768, 128, None),

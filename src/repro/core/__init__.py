@@ -11,22 +11,36 @@ Public API:
 """
 
 from repro.core import (allpairs, distributed, mapping, measures, pcc,
-                        permutation, tiling)
+                        permutation, plan, sinks, tiling)
 from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
                                  allpairs_similarity,
-                                 allpairs_similarity_streamed)
+                                 allpairs_similarity_streamed, stream_tiles)
+from repro.core.allpairs import allpairs as allpairs_run
 from repro.core.distributed import allpairs_pcc_sharded, allpairs_pcc_sharded_u
 from repro.core.measures import Measure, dense_reference
 from repro.core.pcc import pearson_gemm, pearson_literal, transform
+from repro.core.plan import ExecutionPlan
+from repro.core.sinks import (DenseSink, EdgeCountSink, HostSink,
+                              ReductionSink, TileSink)
 
 __all__ = [
     "allpairs",
+    "allpairs_run",
+    "stream_tiles",
     "distributed",
     "mapping",
     "measures",
     "pcc",
     "permutation",
+    "plan",
+    "sinks",
     "tiling",
+    "ExecutionPlan",
+    "TileSink",
+    "DenseSink",
+    "HostSink",
+    "ReductionSink",
+    "EdgeCountSink",
     "allpairs_pcc",
     "allpairs_pcc_streamed",
     "allpairs_similarity",

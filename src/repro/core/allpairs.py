@@ -1,32 +1,38 @@
-"""Single-accelerator all-pairs similarity driver (paper Alg. 2 analogue).
+"""Unified all-pairs executor: one plan-driven loop for every driver.
 
-Pipeline (paper SSIII-A..C), generalized over pluggable measures
-(core/measures.py — Pearson, Spearman, cosine, covariance, Kendall tau-a):
-  1. row_transform X -> U (Eq. 4 for Pearson; rank/normalize/center/
-     pair-sign for the others), zero-pad to tile/block alignment, and
-     optionally narrow operands to a compute dtype (bf16, or int8 for
-     exactly integer-valued transforms like Kendall's pair signs);
-  2. iterate tile-id passes [J_start, J_end) over the upper triangle
-     (multi-pass model, C4), invoking the Pallas triangular-grid kernel
-     (kernels/pcc_tile.py) once per pass with a *runtime* J_start —
-     one compilation serves all passes.  The measure's elementwise epilogue
-     (and clip) is *fused into the kernel's final k-step*, so tiles leave
-     the kernel already finalised — no second HBM pass over the output;
-  3. scatter the (t, t) tile results into the symmetric R with one batched
-     device-side scatter (the tile-id -> coordinate bijection is evaluated
-     for the whole pass at once via mapping.job_coord_batch).
+Architecture (see docs/architecture.md):
 
-Every measure shares the one compiled kernel; only the host-side transform
-and the (fused, elementwise) epilogue differ.  With the default
-measure="pearson" all functions here are bit-identical to the pre-fusion
-implementation: the fused clip commutes with scatter/symmetrize, and
-identity epilogues add no ops (regression-tested in
-tests/test_fused_epilogue.py).
+    ExecutionPlan (core/plan.py)   what to run — measure resolution,
+        |                          padding, fusion, precision, pass
+        v                          partitioning, per-device tile ranges;
+    executor (this module)         computed once, host-side.
+        |
+        |  allpairs() / stream_tiles(): iterate passes with double
+        |  buffering — pass k+1 is dispatched before anything blocks on
+        |  pass k (paper Alg. 2's signal/wait overlap, via JAX async
+        |  dispatch) — on a single device or a shard_map mesh.
+        v
+    TileSink (core/sinks.py)       what becomes of the tiles — dense
+                                   device matrix, host/memmap assembly,
+                                   or a streaming reduction.  Device
+                                   memory for the output path is bounded
+                                   by max_tiles_per_pass * t * t per
+                                   device regardless of n.
 
-Double-buffering: the paper overlaps device compute with host-side result
-processing via offload signal/wait.  JAX's async dispatch gives the same
-overlap for free — `allpairs_pcc_streamed` dispatches pass k+1 *before*
-blocking on pass k's host transfer (see the loop ordering there).
+The measure pipeline (core/measures.py) is unchanged: row_transform ->
+shared triangular-grid Pallas kernel (kernels/pcc_tile.py, runtime J_start
+scalar prefetch) -> elementwise epilogue fused into the kernel's final
+k-step.  Every pass launches a kernel sized to the tiles it actually
+covers (the final pass launches the remainder, not the padded maximum), so
+at most two kernel variants compile per plan and no launch computes dummy
+tiles beyond the cross-device ceil remainder of uniform shard_map ranges.
+
+The four historical drivers — allpairs_pcc, allpairs_pcc_streamed,
+allpairs_pcc_sharded, allpairs_pcc_sharded_u (core/distributed.py) — are
+kept as thin wrappers over allpairs()/stream_tiles() and remain
+bit-identical to their pre-refactor outputs (regression-tested in
+tests/test_plan_executor.py and tests/test_distributed.py).  New code
+should call allpairs() directly.
 """
 
 from __future__ import annotations
@@ -36,31 +42,21 @@ from typing import Iterator, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import mapping, measures, tiling
+from repro.core.plan import (ExecutionPlan, pad_operands, resolve_interpret,
+                             tiles_per_device)
+from repro.core.sinks import (DenseSink, TileSink, place_tiles_host,
+                              scatter_tiles, symmetrize)
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 
 Array = jax.Array
 
-
-def resolve_interpret(interpret: Optional[bool]) -> bool:
-    """None means "infer from the backend": compiled Pallas on TPU,
-    interpret mode everywhere else (the kernels are Mosaic/TPU kernels, so
-    CPU/GPU backends can only execute them interpreted)."""
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
-
-
-def pad_u(u: Array, t: int, l_blk: int) -> Array:
-    """Zero-pad transformed variables to (n_pad, l_pad) kernel alignment.
-    Zero rows correlate to 0 with everything, so padding is inert."""
-    n, l = u.shape
-    n_pad = -(-n // t) * t
-    l_pad = -(-l // l_blk) * l_blk
-    if (n_pad, l_pad) == (n, l):
-        return u
-    return jnp.pad(u, ((0, n_pad - n), (0, l_pad - l)))
+# Compat alias: pad_u predates the plan module; pad_operands is the same op.
+pad_u = pad_operands
 
 
 def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
@@ -70,9 +66,10 @@ def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
             ) -> Tuple[Array, tiling.TilePlan]:
     """Row-transform (Eq. 4 analogue for the measure) + pad.
 
-    Returns (u_pad, plan); plan.l records the *original* sample count, which
-    the measure epilogue needs (e.g. covariance's 1/(l-1)) even when the
-    transform widens the sample axis (Kendall's pair expansion).
+    Compat shim over ExecutionPlan.prepare — returns (u_pad, tile_plan) as
+    the historical drivers did; plan.l records the *original* sample count,
+    which the measure epilogue needs (e.g. covariance's 1/(l-1)) even when
+    the transform widens the sample axis (Kendall's pair expansion).
 
     compute_dtype narrows the *stored operands* after the transform has run
     at full (>= f32) precision — the kernel still accumulates in f32:
@@ -84,70 +81,226 @@ def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
         exactly on the MXU (int32 per block), quartering operand traffic.
     """
     n, l = x.shape
-    meas = measures.get(measure)
-    u = meas.transform(x, dtype=dtype or jnp.float32)
-    if compute_dtype is not None:
-        cd = jnp.dtype(compute_dtype)
-        if jnp.issubdtype(cd, jnp.integer) and not meas.exact_int8:
-            raise ValueError(
-                f"compute_dtype={cd.name} requires an exactly integer-valued "
-                f"transform, but measure {meas.name!r} is not marked "
-                f"exact_int8 (its transform output would be truncated)")
-        u = u.astype(cd)
-    plan = tiling.TilePlan.create(n, l, t)
-    return pad_u(u, t, l_blk), plan
+    eplan = ExecutionPlan.create(n, l, t=t, l_blk=l_blk, measure=measure,
+                                 compute_dtype=compute_dtype)
+    if dtype is not None:
+        u = eplan.measure.transform(x, dtype=dtype)
+        if eplan.compute_dtype is not None:
+            u = u.astype(eplan.compute_dtype)
+        return pad_operands(u, t, l_blk), eplan.tile
+    return eplan.prepare(x), eplan.tile
 
 
-@jax.jit
-def _scatter_tiles_device(r_pad: Array, tiles: Array, coords: Array) -> Array:
-    """One batched scatter of (P, t, t) tiles into (n_pad, n_pad) at the
-    (row, col) starts in coords (P, 2) — replaces the serial scan of
-    dynamic_update_slice (P sequential HLO ops) with a single scatter."""
-    dnums = jax.lax.ScatterDimensionNumbers(
-        update_window_dims=(1, 2),
-        inserted_window_dims=(),
-        scatter_dims_to_operand_dims=(0, 1),
-    )
-    return jax.lax.scatter(r_pad, coords, tiles, dnums,
-                           indices_are_sorted=False, unique_indices=False)
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
 
 
-def scatter_tiles(r_pad: Array, tiles: Array, ids: np.ndarray, t: int,
-                  m: int) -> Array:
-    """Scatter (t, t) tiles into the padded upper-triangle of R.
+def _local_launches(plan: ExecutionPlan, u_pad: Array):
+    """Single-device pass launches: consecutive spans of the full triangle,
+    each kernel sized to its actual tile count."""
+    lo = 0
+    for launch in plan.launch_sizes:
+        buf = pcc_tiles(u_pad, lo, t=plan.t, l_blk=plan.l_blk,
+                        pass_tiles=launch, interpret=plan.interpret,
+                        epilogue=plan.epilogue_spec)
+        if not plan.fused and plan.measure.epilogue is not None:
+            buf = plan.measure.epilogue(buf, plan.l)
+        # local launches are exact-sized: every slot is valid
+        yield np.arange(lo, lo + launch, dtype=np.int64), buf, None, None
+        lo += launch
 
-    The id -> (y, x) bijection is inverted for the whole batch at once
-    (mapping.job_coord_batch, vectorised numpy) and the tiles land via a
-    single batched device scatter.  Duplicate ids (a clamped short pass)
-    carry identical tile contents, so write order does not matter.
+
+def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
+                   shard_u: bool):
+    """shard_map pass launches (paper SSIII-D): all mesh axes flatten into
+    one logical PE-rank axis; device `rank` owns the contiguous tile range
+    [rank*per_dev, (rank+1)*per_dev) and each pass covers at most
+    max_tiles_per_pass of it — the (p*per_dev, t, t) global array is never
+    materialised; each pass's sharded output is handed to the caller and
+    the next pass reuses the buffers.
+
+    With shard_u=True, U is row-sharded over the flat rank axis and
+    all-gathered inside shard_map (for U too large to replicate from host;
+    the gather re-runs per pass, so multi-pass shard_u trades gather
+    traffic for output memory).
     """
-    ys, xs = mapping.job_coord_batch(m, np.asarray(ids))
-    coords = jnp.stack([jnp.asarray(ys * t, jnp.int32),
-                        jnp.asarray(xs * t, jnp.int32)], axis=1)
-    return _scatter_tiles_device(r_pad, tiles.astype(r_pad.dtype), coords)
+    axes = tuple(mesh.axis_names)
+    if shard_u:
+        rows = u_pad.shape[0]
+        rows_pad = -(-rows // plan.p) * plan.p
+        if rows_pad != rows:
+            u_pad = jnp.pad(u_pad, ((0, rows_pad - rows), (0, 0)))
+        in_spec = P(axes, None)
+    else:
+        in_spec = P(*([None] * u_pad.ndim))
+    u_in = jax.device_put(u_pad, NamedSharding(mesh, in_spec))
+
+    fns = {}
+
+    def pass_fn(launch: int):
+        if launch in fns:
+            return fns[launch]
+
+        def device_fn(u: Array, off: Array) -> Array:
+            u_rep = u
+            if shard_u:
+                # Gather minor axis first so the row order reassembles
+                # major-to-minor (P(("a","b")) shards rows a-major, b-minor).
+                for ax in reversed(axes):
+                    u_rep = jax.lax.all_gather(u_rep, ax, axis=0, tiled=True)
+                u_rep = u_rep[: plan.n_pad]
+            # flat rank from the (possibly multi-axis) mesh position
+            rank = jnp.int32(0)
+            for ax in axes:
+                rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+            j0 = jnp.minimum(rank * plan.per_dev + off[0],
+                             plan.total_tiles - 1)
+            return pcc_tiles(u_rep, j0, t=plan.t, l_blk=plan.l_blk,
+                             pass_tiles=launch, interpret=plan.interpret,
+                             epilogue=plan.epilogue_spec)
+
+        fns[launch] = shard_map(device_fn, mesh=mesh,
+                                in_specs=(in_spec, P(None)),
+                                out_specs=P(axes), check_vma=False)
+        return fns[launch]
+
+    for k, launch in enumerate(plan.launch_sizes):
+        off = jnp.full((1,), plan.pass_offset(k), jnp.int32)
+        buf = pass_fn(launch)(u_in, off)
+        if not plan.fused and plan.measure.epilogue is not None:
+            buf = plan.measure.epilogue(buf, plan.l)
+        # The raw sharded buffer is handed on as-is: clamped tail-device
+        # slots (sel is not None) are resolved by the sink — either a
+        # clamped-id scatter or a host-side filter, never a device gather
+        # (which would undo the per-device pass-memory bound).
+        ids, sel = plan.pass_selection(k)
+        padded = plan.pass_padded_ids(k) if sel is not None else None
+        yield ids, buf, sel, padded
 
 
-def place_tiles_host(r: np.ndarray, tiles: np.ndarray, ys: np.ndarray,
-                     xs: np.ndarray, t: int) -> None:
-    """Write a batch of (t, t) tiles (and their lower-triangle mirrors) into
-    the host matrix r in-place — vectorised fancy-index scatter, no per-tile
-    Python loop.  Works on plain arrays and np.memmap alike."""
-    span = np.arange(t)
-    rows = (ys[:, None] * t + span)[:, :, None]  # (P, t, 1)
-    cols = (xs[:, None] * t + span)[:, None, :]  # (P, 1, t)
-    r[rows, cols] = tiles
-    off = ys != xs
-    if np.any(off):
-        r[cols[off].transpose(0, 2, 1), rows[off].transpose(0, 2, 1)] = \
-            tiles[off].transpose(0, 2, 1)
+def _stream(plan: ExecutionPlan, u_pad: Array, *, mesh: Optional[Mesh] = None,
+            shard_u: bool = False):
+    """Double-buffered pass stream of (ids, raw_buffer, sel, padded_ids):
+    pulls (and thus async-dispatches) pass k+1 before yielding pass k, so a
+    sink that blocks on host transfer overlaps the device's next pass
+    (paper Alg. 2 signal/wait).  sel/padded_ids are None except on mesh
+    passes with clamped tail-device slots (see TileSink.consume_clamped)."""
+    launches = (_local_launches(plan, u_pad) if mesh is None
+                else _mesh_launches(plan, u_pad, mesh, shard_u))
+    pending = None
+    for item in launches:
+        if pending is not None:
+            yield pending
+        pending = item
+    if pending is not None:
+        yield pending
 
 
-def symmetrize(r_pad: Array, n: int) -> Array:
-    """Mirror the scattered upper blocks into the lower triangle and crop."""
-    idx = jnp.arange(r_pad.shape[0])
-    upper = idx[:, None] <= idx[None, :]
-    r_full = jnp.where(upper, r_pad, r_pad.T)
-    return r_full[:n, :n]
+def stream_tiles(
+    x: Array,
+    *,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    measure: measures.MeasureLike = "pearson",
+    mesh: Optional[Mesh] = None,
+    shard_u: bool = False,
+    max_tiles_per_pass: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    clip: bool = True,
+    fuse_epilogue: bool = True,
+    compute_dtype=None,
+    plan: Optional[ExecutionPlan] = None,
+) -> Iterator[Tuple[np.ndarray, Array]]:
+    """Yield (tile_ids, tiles) per pass as (host ids, device buffer) —
+    the raw executor stream that every sink (and the legacy streamed
+    driver) consumes.  Tiles carry the measure epilogue (fused in-kernel by
+    default); ids are unique, valid, and in pass order.  On mesh passes
+    with clamped tail-device slots the valid tiles are filtered host-side
+    (numpy) to preserve the per-device memory bound — otherwise the buffer
+    is the kernel's device output.  Pass `plan=` to reuse a prebuilt
+    ExecutionPlan (its geometry must match x)."""
+    p = 1 if mesh is None else int(np.prod(mesh.devices.shape))
+    if plan is None:
+        plan = ExecutionPlan.create(
+            x.shape[0], x.shape[1], t=t, l_blk=l_blk, measure=measure, p=p,
+            max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
+            clip=clip, fuse_epilogue=fuse_epilogue,
+            compute_dtype=compute_dtype)
+    else:
+        # An explicit plan wins over the per-call kwargs; refuse obviously
+        # conflicting ones rather than silently computing with the plan's
+        # settings (default-valued kwargs cannot be told apart from unset,
+        # so only non-default conflicts are detectable).
+        if plan.p != p:
+            raise ValueError(f"plan.p={plan.p} does not match mesh size {p}")
+        if t != DEFAULT_TILE and t != plan.t:
+            raise ValueError(f"t={t} conflicts with plan.t={plan.t}")
+        if l_blk != DEFAULT_LBLK and l_blk != plan.l_blk:
+            raise ValueError(
+                f"l_blk={l_blk} conflicts with plan.l_blk={plan.l_blk}")
+        if measure != "pearson" and measures.get(measure) is not plan.measure:
+            raise ValueError(
+                f"measure={measures.get(measure).name!r} conflicts with "
+                f"plan.measure={plan.measure.name!r}")
+    for ids, buf, sel, _padded in _stream(plan, plan.prepare(x), mesh=mesh,
+                                          shard_u=shard_u):
+        yield ids, (buf if sel is None else np.asarray(buf)[sel])
+
+
+def allpairs(
+    x: Array,
+    *,
+    measure: measures.MeasureLike = "pearson",
+    sink: Optional[TileSink] = None,
+    mesh: Optional[Mesh] = None,
+    shard_u: bool = False,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    max_tiles_per_pass: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    clip: bool = True,
+    fuse_epilogue: bool = True,
+    compute_dtype=None,
+):
+    """All-pairs similarity: plan -> executor -> sink, on one device or a
+    mesh.  THE entry point; the historical drivers are wrappers over it.
+
+    measure: any registered measure name or Measure instance.
+    sink:    output handling (core/sinks.py) — default DenseSink returns
+             the (n, n) device matrix; HostSink assembles out-of-core to
+             host/memmap; ReductionSink/EdgeCountSink stream-reduce without
+             materialising the matrix.  Device output memory is bounded by
+             max_tiles_per_pass * t * t per device for every sink.
+    mesh:    a jax Mesh to shard over (paper SSIII-D).  All axes flatten
+             into one logical rank axis; device i owns the contiguous tile
+             range [i*ceil(T/p), (i+1)*ceil(T/p)).
+    shard_u: row-shard U over the mesh and all-gather it in-kernel instead
+             of replicating (for U beyond a single device's memory).
+    max_tiles_per_pass: per-device pass bound (C4); None = one pass.
+    interpret: None infers from the backend (compiled Pallas on TPU,
+             interpret elsewhere); fuse_epilogue / compute_dtype as in
+             prepare().
+    """
+    p = 1 if mesh is None else int(np.prod(mesh.devices.shape))
+    plan = ExecutionPlan.create(
+        x.shape[0], x.shape[1], t=t, l_blk=l_blk, measure=measure, p=p,
+        max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
+        clip=clip, fuse_epilogue=fuse_epilogue, compute_dtype=compute_dtype)
+    snk = sink if sink is not None else DenseSink()
+    snk.open(plan)
+    for ids, buf, sel, padded in _stream(plan, plan.prepare(x), mesh=mesh,
+                                         shard_u=shard_u):
+        if sel is None:
+            snk.consume(ids, buf)
+        else:
+            snk.consume_clamped(padded, sel, ids, buf)
+    return snk.result()
+
+
+# ---------------------------------------------------------------------------
+# Legacy drivers: thin wrappers, kept bit-identical (deprecated entry points)
+# ---------------------------------------------------------------------------
 
 
 def allpairs_pcc(
@@ -165,36 +318,13 @@ def allpairs_pcc(
     """All-pairs similarity via the triangular-grid Pallas kernel.
     Returns the (n, n) similarity matrix (R for the default Pearson).
 
-    interpret: None (default) infers from jax.default_backend() — compiled
-        kernel on TPU, interpret mode elsewhere (CPU CI containers).  Pass
-        an explicit bool to override.
-    fuse_epilogue: apply the measure's epilogue + clip inside the kernel's
-        final k-step (default; bit-identical, saves an HBM pass).  False
-        restores the separate post-scatter elementwise pass — kept for
-        regression tests and A/B benchmarks.  Measures with a general
-        (non-divisor) epilogue callable fall back to unfused automatically.
-    compute_dtype: operand narrowing (bf16 / int8) — see prepare().
+    Deprecated spelling of ``allpairs(x, ...)`` (kept for history/paper
+    fidelity; bit-identical through the unified executor).
     """
-    n = x.shape[0]
-    interpret = resolve_interpret(interpret)
-    meas = measures.get(measure)
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas,
-                          compute_dtype=compute_dtype)
-    spec, fused = measures.resolve_fusion(meas, fuse_epilogue, plan.l,
-                                          clip=clip)
-    total = plan.total_tiles
-    pass_tiles = min(total, max_tiles_per_pass or total)
-    r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
-    for lo, hi in tiling.passes(0, total, pass_tiles):
-        out = pcc_tiles(u_pad, lo, t=t, l_blk=l_blk, pass_tiles=pass_tiles,
-                        interpret=interpret, epilogue=spec)
-        ids = np.arange(lo, hi)
-        valid = hi - lo
-        r_pad = scatter_tiles(r_pad, out[:valid], ids, t, plan.m)
-    r = symmetrize(r_pad, n)
-    if not fused:
-        r = meas.finalize(r, plan.l, clip=clip)
-    return r
+    return allpairs(x, measure=measure, t=t, l_blk=l_blk,
+                    max_tiles_per_pass=max_tiles_per_pass,
+                    interpret=interpret, clip=clip,
+                    fuse_epilogue=fuse_epilogue, compute_dtype=compute_dtype)
 
 
 def allpairs_pcc_streamed(
@@ -210,45 +340,17 @@ def allpairs_pcc_streamed(
 ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     """Memory-bounded streaming variant (paper Alg. 2 with double buffering).
 
-    Yields (tile_ids, tiles) per pass as *host* numpy arrays, while the next
-    pass is already dispatched on device (async dispatch = signal/wait).
-    Host-side R never materialises on the accelerator — the caller assembles
-    (or reduces) the stream, e.g. into an n x n memmap.
-
-    interpret=None infers from the backend (see allpairs_pcc).  With the
-    default fuse_epilogue=True the yielded tiles are fully finalised
-    (epilogue *and* clip applied in-kernel); with fuse_epilogue=False they
-    carry the epilogue via a separate device op but are not clipped —
-    assembly clips either way (clipping is idempotent), so both modes
-    assemble to identical results.
+    Deprecated spelling of ``stream_tiles(x, ...)`` with host conversion:
+    yields (tile_ids, tiles) per pass as *host* numpy arrays, while the
+    next pass is already dispatched on device (async dispatch =
+    signal/wait).  The caller assembles (or reduces) the stream — new code
+    should pass a TileSink to ``allpairs`` instead.
     """
-    interpret = resolve_interpret(interpret)
-    meas = measures.get(measure)
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas,
-                          compute_dtype=compute_dtype)
-    spec, fused = measures.resolve_fusion(meas, fuse_epilogue, plan.l)
-    total = plan.total_tiles
-    spans = list(tiling.passes(0, total, max_tiles_per_pass))
-
-    def launch(lo):
-        out = pcc_tiles(u_pad, lo, t=t, l_blk=l_blk,
-                        pass_tiles=max_tiles_per_pass, interpret=interpret,
-                        epilogue=spec)
-        if not fused and meas.epilogue is not None:
-            out = meas.epilogue(out, plan.l)
-        return out
-
-    pending = None  # (lo, hi, device_buffer)
-    for lo, hi in spans:
-        buf = launch(lo)  # dispatch current pass (async)
-        if pending is not None:
-            plo, phi, pbuf = pending
-            ids = np.arange(plo, phi)
-            yield ids, np.asarray(pbuf)[: phi - plo]  # blocks on *previous*
-        pending = (lo, hi, buf)
-    if pending is not None:
-        plo, phi, pbuf = pending
-        yield np.arange(plo, phi), np.asarray(pbuf)[: phi - plo]
+    for ids, buf in stream_tiles(
+            x, t=t, l_blk=l_blk, measure=measure,
+            max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
+            fuse_epilogue=fuse_epilogue, compute_dtype=compute_dtype):
+        yield ids, np.asarray(buf)  # blocks on this pass; next is in flight
 
 
 def assemble_from_stream(n: int, t: int, m: int,
@@ -261,7 +363,9 @@ def assemble_from_stream(n: int, t: int, m: int,
     The stream's tiles already carry the measure epilogue; assembly only
     mirrors and (for bounded measures) clips.  Each chunk's tile-id batch is
     inverted to coordinates in one vectorised call (job_coord_batch) and
-    placed with one fancy-index scatter — no per-tile Python loop.
+    placed with one fancy-index scatter — no per-tile Python loop.  (The
+    sink-based spelling is ``allpairs(x, sink=HostSink(...))``, which fuses
+    streaming and assembly.)
 
     CAUTION: `measure` must match the one the stream was produced with —
     the stream itself is just arrays and cannot be checked.  The default
@@ -287,9 +391,13 @@ allpairs_similarity = allpairs_pcc
 allpairs_similarity_streamed = allpairs_pcc_streamed
 
 __all__ = [
+    "allpairs",
+    "stream_tiles",
     "prepare",
     "pad_u",
+    "pad_operands",
     "resolve_interpret",
+    "tiles_per_device",
     "scatter_tiles",
     "place_tiles_host",
     "symmetrize",

@@ -1,57 +1,47 @@
 """Distributed all-pairs similarity over a device mesh (paper SSIII-D, C5).
 
-Both drivers accept a `measure=` (core/measures.py) and default to Pearson;
-the row transform runs once before sharding and the elementwise epilogue is
-fused into each device's kernel (kernels/pcc_tile.py EpilogueSpec), so the
-sharded kernel work is measure-agnostic and sharded tiles leave VMEM
-already finalised.  Operands may be narrowed to bf16 / int8 via
-`compute_dtype=` (see core/allpairs.prepare), shrinking both HBM traffic
-and the replication / all-gather collectives.
+Since the plan/executor refactor, all distributed execution lives in the
+unified executor (core/allpairs.allpairs with ``mesh=``): the ExecutionPlan
+assigns each flat mesh rank the paper's contiguous tile-id range
+[i*ceil(T/p), (i+1)*ceil(T/p)), and the executor iterates memory-bounded
+passes under shard_map, streaming each pass's sharded tiles to the caller's
+TileSink.  The (p*per_dev, t, t) global tile array of the historical
+drivers is *never materialised*: peak device memory for the output path is
+bounded by max_tiles_per_pass * t * t per device regardless of n.
 
-The paper assigns MPI process i the contiguous tile-id range
-[i*ceil(T/p), (i+1)*ceil(T/p)).  Here each mesh device plays that role under
-`shard_map`:
+The two historical drivers below are kept as thin wrappers (deprecated
+entry points, bit-identical through the executor — regression-tested in
+tests/test_distributed.py):
 
-* U (transformed, padded) is replicated across the mesh (it is small
-  relative to R: n*l vs n^2 — e.g. 64K x 5K f32 = 1.3 GB, fits v5e HBM);
-  an optional row-sharded + all-gather path covers U beyond HBM.
-* Device i computes `per_dev` tiles starting at runtime offset i*per_dev via
-  the same Pallas kernel (scalar-prefetch J_start — identical to the paper
-  reusing one Phi kernel with different J ranges).
-* The output is a (p*per_dev, t, t) global array sharded on the tile axis;
-  no collective is needed for the compute itself (embarrassingly balanced,
-  exactly the paper's design point).  Assembly into R happens host-side or
-  stays sharded for downstream reduction (e.g. thresholded edge counts).
+* allpairs_pcc_sharded:   U replicated across the mesh (it is small
+  relative to R: n*l vs n^2); returns the assembled (n, n) matrix.
+* allpairs_pcc_sharded_u: U row-sharded + all-gathered once inside
+  shard_map, for U beyond a single device's memory.
+
+Both accept a `measure=` (core/measures.py), fused epilogues, and
+bf16/int8 operand narrowing via `compute_dtype=` — identical to the single
+device driver, because the code paths *are* identical now.  New code
+should call ``allpairs(x, mesh=mesh, sink=...)`` directly and pick a sink:
+streaming sinks (HostSink, EdgeCountSink) keep the output off-device
+entirely.
 
 Because the bijection is stateless, *elastic* re-partitioning after a node
-loss is a pure renumbering: new p' -> new contiguous ranges; no job table to
-rebuild or migrate (runtime/elastic.py exploits this).
+loss is a pure renumbering: ExecutionPlan.repartition(new_p) re-slices the
+ranges; no job table to rebuild or migrate (runtime/elastic.py).
 """
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
-from repro.core import measures, tiling
-from repro.core.allpairs import (prepare, resolve_interpret, scatter_tiles,
-                                 symmetrize)
-from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
-
-
-def _flat_axes(mesh: Mesh) -> Tuple[str, ...]:
-    return tuple(mesh.axis_names)
-
-
-def tiles_per_device(total: int, p: int) -> int:
-    """ceil(T/p) — uniform per-device tile count (paper SSIII-D)."""
-    return -(-total // p)
+from repro.core import measures
+from repro.core.allpairs import allpairs
+from repro.core.plan import tiles_per_device
+from repro.core.sinks import TileSink
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
 
 
 def allpairs_pcc_sharded(
@@ -65,63 +55,21 @@ def allpairs_pcc_sharded(
     measure: measures.MeasureLike = "pearson",
     fuse_epilogue: bool = True,
     compute_dtype=None,
+    sink: Optional[TileSink] = None,
 ) -> jax.Array:
     """Distributed all-pairs similarity.  Returns the full (n, n) matrix
-    (replicated); Pearson R by default.
+    (Pearson R by default), or the sink's result when `sink=` is given.
 
-    All mesh axes are flattened into one logical "PE rank" axis: rank =
-    row-major index over mesh axes, matching the paper's flat MPI ranks.
-
-    interpret: None (default) infers from jax.default_backend() — compiled
-        kernel on TPU, interpret elsewhere.  fuse_epilogue / compute_dtype
-        as in allpairs_pcc: the epilogue+clip runs inside each device's
-        kernel (sharded tiles leave VMEM finalised), and operands may be
-        narrowed to bf16 / int8 (Kendall signs) — replication traffic
-        shrinks by the same factor.
+    Deprecated spelling of ``allpairs(x, mesh=mesh, ...)``.  All mesh axes
+    are flattened into one logical "PE rank" axis: rank = row-major index
+    over mesh axes, matching the paper's flat MPI ranks.  Output tiles
+    stream to the sink pass by pass — the historical (p*per_dev, t, t)
+    global array is no longer materialised.
     """
-    n = x.shape[0]
-    interpret = resolve_interpret(interpret)
-    meas = measures.get(measure)
-    axes = _flat_axes(mesh)
-    p = int(np.prod(mesh.devices.shape))
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas,
-                          compute_dtype=compute_dtype)
-    spec, fused = measures.resolve_fusion(meas, fuse_epilogue, plan.l)
-    total = plan.total_tiles
-    per_dev = tiles_per_device(total, p)
-    pass_tiles = min(per_dev, max_tiles_per_pass or per_dev)
-    n_pass = -(-per_dev // pass_tiles)
-
-    def device_fn(u_rep: jax.Array) -> jax.Array:
-        # flat rank from the (possibly multi-axis) mesh position
-        rank = jnp.int32(0)
-        for ax in axes:
-            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-        outs = []
-        for k in range(n_pass):
-            j0 = rank * per_dev + k * pass_tiles
-            j0 = jnp.minimum(j0, total - 1)
-            outs.append(
-                pcc_tiles(u_rep, j0, t=t, l_blk=l_blk,
-                          pass_tiles=pass_tiles, interpret=interpret,
-                          epilogue=spec))
-        return jnp.concatenate(outs, axis=0)[:per_dev]
-
-    spec_rep = P(*([None] * u_pad.ndim))
-    out_spec = P(axes)  # tile axis sharded over all mesh axes (flat rank order)
-    fn = shard_map(device_fn, mesh=mesh, in_specs=(spec_rep,),
-                   out_specs=out_spec, check_vma=False)
-    u_rep = jax.device_put(u_pad, NamedSharding(mesh, spec_rep))
-    tiles = fn(u_rep)  # (p*per_dev, t, t), tile-axis sharded
-
-    # Assemble (host-side semantics; small n in tests, streamed in prod).
-    ids = np.minimum(np.arange(p * per_dev), total - 1)
-    r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
-    r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
-    r = symmetrize(r_pad, n)
-    if not fused:
-        r = meas.finalize(r, plan.l)
-    return r
+    return allpairs(x, mesh=mesh, measure=measure, sink=sink, t=t,
+                    l_blk=l_blk, max_tiles_per_pass=max_tiles_per_pass,
+                    interpret=interpret, fuse_epilogue=fuse_epilogue,
+                    compute_dtype=compute_dtype)
 
 
 def allpairs_pcc_sharded_u(
@@ -131,58 +79,22 @@ def allpairs_pcc_sharded_u(
     t: int = DEFAULT_TILE,
     l_blk: int = DEFAULT_LBLK,
     interpret: Optional[bool] = None,
+    max_tiles_per_pass: Optional[int] = None,
     measure: measures.MeasureLike = "pearson",
     fuse_epilogue: bool = True,
     compute_dtype=None,
+    sink: Optional[TileSink] = None,
 ) -> jax.Array:
     """Row-sharded-U variant: U is sharded over the flat rank axis and
-    all-gathered once inside shard_map (for U too large to replicate from
-    host; the gather is the only collective and is amortised over the whole
-    triangle).  Semantics identical to allpairs_pcc_sharded, including
-    interpret=None backend inference, in-kernel fused epilogues, and
-    bf16/int8 operand narrowing (which also shrinks the all-gather)."""
-    n = x.shape[0]
-    interpret = resolve_interpret(interpret)
-    meas = measures.get(measure)
-    axes = _flat_axes(mesh)
-    p = int(np.prod(mesh.devices.shape))
-    u_pad, plan = prepare(x, t=t, l_blk=l_blk, measure=meas,
-                          compute_dtype=compute_dtype)
-    spec, fused = measures.resolve_fusion(meas, fuse_epilogue, plan.l)
-    # pad rows to p for even row-sharding
-    rows = u_pad.shape[0]
-    rows_pad = -(-rows // p) * p
-    if rows_pad != rows:
-        u_pad = jnp.pad(u_pad, ((0, rows_pad - rows), (0, 0)))
-    total = plan.total_tiles
-    per_dev = tiles_per_device(total, p)
-
-    def device_fn(u_shard: jax.Array) -> jax.Array:
-        # Gather minor axis first so the row order reassembles major-to-minor
-        # (P(("a","b")) shards rows a-major, b-minor).
-        u_rep = u_shard
-        for ax in reversed(axes):
-            u_rep = jax.lax.all_gather(u_rep, ax, axis=0, tiled=True)
-        u_rep = u_rep[: plan.n_pad]
-        rank = jnp.int32(0)
-        for ax in axes:
-            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-        j0 = jnp.minimum(rank * per_dev, total - 1)
-        return pcc_tiles(u_rep, j0, t=t, l_blk=l_blk, pass_tiles=per_dev,
-                         interpret=interpret, epilogue=spec)
-
-    fn = shard_map(device_fn, mesh=mesh, in_specs=(P(axes, None),),
-                   out_specs=P(axes), check_vma=False)
-    u_in = jax.device_put(u_pad, NamedSharding(mesh, P(axes, None)))
-    tiles = fn(u_in)
-
-    ids = np.minimum(np.arange(p * per_dev), total - 1)
-    r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
-    r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
-    r = symmetrize(r_pad, n)
-    if not fused:
-        r = meas.finalize(r, plan.l)
-    return r
+    all-gathered inside shard_map (for U too large to replicate from host).
+    Deprecated spelling of ``allpairs(x, mesh=mesh, shard_u=True, ...)``;
+    semantics identical to allpairs_pcc_sharded.  With multiple passes the
+    gather re-runs per pass (it is amortised over the pass's whole tile
+    range); the historical single-pass behaviour is the default."""
+    return allpairs(x, mesh=mesh, shard_u=True, measure=measure, sink=sink,
+                    t=t, l_blk=l_blk, max_tiles_per_pass=max_tiles_per_pass,
+                    interpret=interpret, fuse_epilogue=fuse_epilogue,
+                    compute_dtype=compute_dtype)
 
 
 # Measure-agnostic aliases (the `_pcc` names serve every measure).

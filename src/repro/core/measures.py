@@ -17,6 +17,8 @@ measure into that form:
   cosine       L2-normalize only                       identity         [-1,1]
   covariance   center only                             v / (l - 1)      none
   kendall      sign(X[a]-X[b]) over sample pairs a<b   v / C(l, 2)      [-1,1]
+  kendall_tau_b  pair signs scaled per row by          identity         [-1,1]
+               1/sqrt(#non-tied pairs)
 
 The Kendall tau-a row consumes a *widened* sample axis — the transform maps
 (n, l) -> (n, l(l-1)/2) and the concordant-minus-discordant pair count is
@@ -120,6 +122,28 @@ def pair_sign_transform(x: Array, *, dtype=None) -> Array:
     return jnp.sign(d).astype(dtype or x.dtype)
 
 
+def pair_sign_tie_scaled_transform(x: Array, *, dtype=None) -> Array:
+    """Kendall tau-b row transform: tie-normalised pair signs.
+
+    tau-b divides the concordant-minus-discordant count by
+    sqrt((n0 - n1_i)(n0 - n1_j)) with n0 = C(l, 2) and n1_i = the number of
+    tied sample pairs in row i.  The denominator factorises per row, so it
+    rides the engine as a *transform-side* scale instead of needing a
+    second (per-row tie count) epilogue input: scaling each sign row by
+    s_i = 1/sqrt(n0 - n1_i) makes the plain inner product
+    <U_i, U_j> = (C - D) * s_i * s_j = tau-b exactly — identity epilogue,
+    same shared kernel.  n0 - n1_i is simply row i's non-zero sign count.
+
+    Fully tied (constant) rows have n0 - n1 = 0; they map to zero rows, so
+    any pair involving them scores 0 (scipy returns NaN there) — the same
+    degenerate-input convention as the other measures.
+    """
+    s = pair_sign_transform(x, dtype=jnp.float32)
+    nz = jnp.sum(s != 0.0, axis=1).astype(jnp.float32)
+    scale = jnp.where(nz > 0, 1.0 / jnp.sqrt(jnp.maximum(nz, 1.0)), 0.0)
+    return (s * scale[:, None]).astype(dtype or x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Epilogues (elementwise maps on raw inner-product values)
 # ---------------------------------------------------------------------------
@@ -212,6 +236,8 @@ COVARIANCE = Measure("covariance", center_rows, _cov_epilogue, None,
                      epilogue_div=_cov_div)
 KENDALL = Measure("kendall", pair_sign_transform, _kendall_epilogue,
                   (-1.0, 1.0), epilogue_div=_kendall_div, exact_int8=True)
+KENDALL_B = Measure("kendall_tau_b", pair_sign_tie_scaled_transform, None,
+                    (-1.0, 1.0))
 
 _REGISTRY: Dict[str, Measure] = {
     "pearson": PEARSON,
@@ -222,6 +248,8 @@ _REGISTRY: Dict[str, Measure] = {
     "cov": COVARIANCE,
     "kendall": KENDALL,
     "kendall_tau_a": KENDALL,
+    "kendall_tau_b": KENDALL_B,
+    "kendall_b": KENDALL_B,
 }
 
 MeasureLike = Union[str, Measure]
@@ -306,6 +334,7 @@ __all__ = [
     "COSINE",
     "COVARIANCE",
     "KENDALL",
+    "KENDALL_B",
     "get",
     "register",
     "available",
@@ -315,6 +344,7 @@ __all__ = [
     "l2_normalize_rows",
     "center_rows",
     "pair_sign_transform",
+    "pair_sign_tie_scaled_transform",
     "dense_reference",
     "kendall_tau_a_literal",
 ]

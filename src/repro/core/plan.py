@@ -1,0 +1,269 @@
+"""ExecutionPlan: every static decision of an all-pairs run, computed once.
+
+The four historical drivers (tiled / streamed / sharded / sharded-U) each
+re-derived the same facts inline: which measure, how the operands are padded
+and (optionally) narrowed, how the triangle splits into memory-bounded
+passes, which contiguous tile-id range each device owns (paper SSIII-D),
+and whether the measure's epilogue fuses into the kernel's final k-step.
+This module hoists all of it into one frozen ``ExecutionPlan`` built by a
+single constructor — the executor (core/allpairs.allpairs) and the tile
+sinks (core/sinks.py) then consume the plan instead of re-deciding.
+
+Planning is pure host-side Python (exact ints, no tracing), so a plan is
+cheap to build, hashable-free to pass around, and trivially re-sliceable:
+elastic re-partitioning after a device loss is ``plan.repartition(new_p)``
+(runtime/elastic.py) — the bijection makes tile ownership a pure function
+of (total, p, rank), so nothing else in the plan changes.
+
+Pass sizing (paper Alg. 2, C4): a device's ``per_dev`` tiles split into
+passes of at most ``max_tiles_per_pass``; the *final* pass launches the
+actual remainder (``launch_sizes``) instead of the padded maximum, so no
+kernel ever computes dummy tiles beyond the cross-device ceil remainder
+inherent to uniform shard_map ranges.  At most two kernel sizes compile per
+plan (the full pass and the remainder).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import measures, tiling
+from repro.kernels.pcc_tile import (DEFAULT_LBLK, DEFAULT_TILE, EpilogueSpec)
+
+Array = jax.Array
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None means "infer from the backend": compiled Pallas on TPU,
+    interpret mode everywhere else (the kernels are Mosaic/TPU kernels, so
+    CPU/GPU backends can only execute them interpreted)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def tiles_per_device(total: int, p: int) -> int:
+    """ceil(T/p) — uniform per-device tile count (paper SSIII-D)."""
+    return -(-total // p)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """All static decisions of one all-pairs run, in one place.
+
+    Built by :meth:`create`; consumed by the executor
+    (core/allpairs.allpairs / stream_tiles) and by tile sinks.  Geometry
+    lives in the embedded :class:`~repro.core.tiling.TilePlan`; the fields
+    here add measure resolution, fusion, precision, and distribution.
+    """
+
+    measure: measures.Measure
+    tile: tiling.TilePlan
+    l_blk: int
+    interpret: bool
+    clip: bool
+    fused: bool                          # epilogue runs inside the kernel
+    epilogue_spec: Optional[EpilogueSpec]
+    compute_dtype: Optional[np.dtype]
+    p: int                               # devices (flat mesh size; 1 = local)
+    per_dev: int                         # ceil(total_tiles / p)
+    max_tiles_per_pass: int              # per-device pass bound (C4)
+
+    # -- geometry delegates -------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.tile.n
+
+    @property
+    def l(self) -> int:
+        return self.tile.l
+
+    @property
+    def t(self) -> int:
+        return self.tile.t
+
+    @property
+    def m(self) -> int:
+        return self.tile.m
+
+    @property
+    def n_pad(self) -> int:
+        return self.tile.n_pad
+
+    @property
+    def total_tiles(self) -> int:
+        return self.tile.total_tiles
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def create(cls, n: int, l: int, *,
+               t: int = DEFAULT_TILE,
+               l_blk: int = DEFAULT_LBLK,
+               measure: measures.MeasureLike = "pearson",
+               p: int = 1,
+               max_tiles_per_pass: Optional[int] = None,
+               interpret: Optional[bool] = None,
+               clip: bool = True,
+               fuse_epilogue: bool = True,
+               compute_dtype=None) -> "ExecutionPlan":
+        """Resolve measure, fusion, precision, padding, pass partitioning
+        and per-device ranges — everything the drivers used to re-derive.
+        """
+        meas = measures.get(measure)
+        tile = tiling.TilePlan.create(n, l, t)
+        if p <= 0:
+            raise ValueError(f"p must be positive, got {p}")
+        cd = None
+        if compute_dtype is not None:
+            cd = jnp.dtype(compute_dtype)
+            if jnp.issubdtype(cd, jnp.integer) and not meas.exact_int8:
+                raise ValueError(
+                    f"compute_dtype={cd.name} requires an exactly "
+                    f"integer-valued transform, but measure {meas.name!r} is "
+                    f"not marked exact_int8 (its transform output would be "
+                    f"truncated)")
+        spec, fused = measures.resolve_fusion(meas, fuse_epilogue, tile.l,
+                                              clip=clip)
+        per_dev = tiles_per_device(tile.total_tiles, p)
+        if max_tiles_per_pass is not None and max_tiles_per_pass <= 0:
+            # validate before the None-means-unbounded resolution: 0 must
+            # not silently coerce to "one full pass"
+            raise ValueError(
+                f"max_tiles_per_pass must be positive, got {max_tiles_per_pass}")
+        mtp = min(per_dev, max_tiles_per_pass or per_dev)
+        return cls(measure=meas, tile=tile, l_blk=l_blk,
+                   interpret=resolve_interpret(interpret), clip=clip,
+                   fused=fused, epilogue_spec=spec, compute_dtype=cd,
+                   p=p, per_dev=per_dev, max_tiles_per_pass=mtp)
+
+    # -- operand preparation ------------------------------------------------
+
+    def prepare(self, x: Array) -> Array:
+        """Row-transform x (Eq. 4 analogue for the measure), optionally
+        narrow to the compute dtype, and zero-pad to kernel alignment.
+
+        The transform always runs at >= f32; narrowing (bf16, or int8 for
+        exactly integer-valued transforms — validated at plan creation)
+        applies to the *stored* operands only; the kernel accumulates f32.
+        """
+        if tuple(x.shape) != (self.n, self.l):
+            raise ValueError(
+                f"x shape {x.shape} does not match plan (n={self.n}, "
+                f"l={self.l})")
+        u = self.measure.transform(x, dtype=jnp.float32)
+        if self.compute_dtype is not None:
+            u = u.astype(self.compute_dtype)
+        return pad_operands(u, self.t, self.l_blk)
+
+    # -- distribution (paper SSIII-D, C5) ------------------------------------
+
+    def device_range(self, rank: int) -> Tuple[int, int]:
+        """Contiguous tile-id range [lo, hi) owned by flat device `rank`."""
+        lo = min(rank * self.per_dev, self.total_tiles)
+        hi = min(lo + self.per_dev, self.total_tiles)
+        return lo, hi
+
+    @property
+    def device_ranges(self) -> Tuple[Tuple[int, int], ...]:
+        return tuple(self.device_range(r) for r in range(self.p))
+
+    def repartition(self, new_p: int) -> "ExecutionPlan":
+        """Re-slice the plan for a new device count (elastic re-meshing).
+
+        Pure renumbering: only p / per_dev / the pass split change; measure,
+        fusion, precision and geometry are untouched (the bijection makes
+        ownership a function of (total, p, rank) — no job table to migrate).
+        The per-device pass bound is preserved, re-clamped to the new
+        per-device tile count.
+        """
+        if new_p <= 0:
+            raise ValueError(f"new_p must be positive, got {new_p}")
+        per_dev = tiles_per_device(self.total_tiles, new_p)
+        return dataclasses.replace(
+            self, p=new_p, per_dev=per_dev,
+            max_tiles_per_pass=min(self.max_tiles_per_pass, per_dev))
+
+    # -- pass partitioning (paper Alg. 2, C4) --------------------------------
+
+    @property
+    def n_pass(self) -> int:
+        return -(-self.per_dev // self.max_tiles_per_pass)
+
+    @property
+    def launch_sizes(self) -> Tuple[int, ...]:
+        """Kernel launch size (grid tiles) of each pass.  All passes launch
+        max_tiles_per_pass except the last, which launches the actual
+        remainder — no dummy-tile compute in the final pass."""
+        return tiling.pass_launch_sizes(self.per_dev, self.max_tiles_per_pass)
+
+    def pass_offset(self, k: int) -> int:
+        """Device-local tile offset at which pass k starts."""
+        return k * self.max_tiles_per_pass
+
+    def pass_selection(self, k: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Valid tiles of pass k across the whole mesh.
+
+        The pass's global output stacks each device's `launch` tiles
+        contiguously (device-major).  Returns (ids, sel):
+          ids — the valid global tile ids this pass produced, in output
+                order (unique; tail-device slots past the triangle and
+                final-pass padding are excluded);
+          sel — indices into the (p * launch, t, t) pass output selecting
+                those tiles, or None when every slot is valid (the common
+                full-pass case — callers skip the gather).
+        """
+        launch = self.launch_sizes[k]
+        off = self.pass_offset(k)
+        ids_parts, sel_parts = [], []
+        full = True
+        for r in range(self.p):
+            dev_lo, dev_hi = self.device_range(r)
+            start = dev_lo + off
+            count = int(np.clip(dev_hi - start, 0, launch))
+            full = full and (count == launch)
+            ids_parts.append(np.arange(start, start + count, dtype=np.int64))
+            sel_parts.append(np.arange(r * launch, r * launch + count,
+                                       dtype=np.int64))
+        ids = np.concatenate(ids_parts)
+        if full:
+            return ids, None
+        return ids, np.concatenate(sel_parts)
+
+    def pass_padded_ids(self, k: int) -> np.ndarray:
+        """Clamped tile id of *every* slot of pass k's (p * launch) output,
+        invalid slots included.  Matches the kernel's per-slot clamp (slot i
+        of rank r holds tile min(r*per_dev + off + i, total-1)), so
+        scattering the raw buffer with these ids writes identical content
+        for every duplicate — the sink can consume a clamped pass without
+        gathering valid slots onto one device."""
+        launch = self.launch_sizes[k]
+        off = self.pass_offset(k)
+        base = (np.arange(self.p, dtype=np.int64)[:, None] * self.per_dev
+                + off + np.arange(launch, dtype=np.int64)[None, :])
+        return np.minimum(base.reshape(-1), self.total_tiles - 1)
+
+
+def pad_operands(u: Array, t: int, l_blk: int) -> Array:
+    """Zero-pad transformed variables to (n_pad, l_pad) kernel alignment.
+    Zero rows correlate to 0 with everything, so padding is inert."""
+    n, l = u.shape
+    n_pad = -(-n // t) * t
+    l_pad = -(-l // l_blk) * l_blk
+    if (n_pad, l_pad) == (n, l):
+        return u
+    return jnp.pad(u, ((0, n_pad - n), (0, l_pad - l)))
+
+
+__all__ = [
+    "ExecutionPlan",
+    "pad_operands",
+    "resolve_interpret",
+    "tiles_per_device",
+]

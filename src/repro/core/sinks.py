@@ -1,0 +1,311 @@
+"""Streaming tile sinks: pluggable output handling for the all-pairs engine.
+
+The executor (core/allpairs.allpairs) produces finalised (t, t) similarity
+tiles pass by pass; a ``TileSink`` decides what becomes of them.  This is
+the piece that lets one engine serve workloads whose *outputs* differ as
+much as their measures do (cf. CoMet, arXiv:1705.08213):
+
+  DenseSink      scatter tiles into an (n, n) device matrix — the classic
+                 drivers' behaviour, right when R fits accelerator memory.
+  HostSink       assemble into a host array or np.memmap — out-of-core
+                 n x n results; device memory stays bounded by one pass.
+  ReductionSink  fold each pass through a user callback — O(state) memory,
+                 for anything that never needs the full matrix.
+  EdgeCountSink  built-in reduction for co-expression graphs: edge counts,
+                 per-node degrees, and (given labels) intra/inter-module
+                 tallies above a |similarity| threshold — O(n) state.
+
+Contract: ``open(plan)`` is called once with the run's ExecutionPlan;
+``consume(ids, tiles)`` receives each pass's *valid* tiles (unique global
+tile ids, upper-triangle order within the pass) while the next pass is
+already dispatched (double buffering — a sink that blocks on host transfer
+overlaps the device's next pass for free); ``result()`` closes the run.
+Tiles arrive with the measure's epilogue already applied (fused in-kernel
+by default); bounded measures are clipped either in-kernel (fused) or by
+the sink (clipping is idempotent, so both paths agree bit-for-bit).
+"""
+
+from __future__ import annotations
+
+import abc
+import copy
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping
+from repro.core.plan import ExecutionPlan
+
+Array = jax.Array
+
+
+class TileSink(abc.ABC):
+    """Consumes the executor's per-pass tile stream."""
+
+    plan: ExecutionPlan
+
+    def open(self, plan: ExecutionPlan) -> None:
+        """Called once before the first pass; allocate state here."""
+        self.plan = plan
+
+    @abc.abstractmethod
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        """One pass's valid tiles: ids (P,) unique global tile ids, tiles
+        (P, t, t) device array (epilogue applied; clipped iff fused)."""
+
+    def consume_clamped(self, padded_ids: np.ndarray, sel: np.ndarray,
+                        ids: np.ndarray, tiles: Array) -> None:
+        """A mesh pass whose raw (p * launch, t, t) buffer contains clamped
+        tail-device slots (duplicates of tile total-1 etc.).  `sel` indexes
+        the valid slots (whose ids are `ids`, in order); `padded_ids` gives
+        every slot's clamped id, duplicates carrying identical content.
+
+        The default transfers to host and filters there — never a device
+        gather, so per-device memory stays bounded by the pass buffer the
+        kernel already wrote.  DenseSink overrides this to scatter the raw
+        buffer with the clamped ids instead (duplicates are idempotent).
+        """
+        del padded_ids
+        self.consume(ids, np.asarray(tiles)[sel])
+
+    @abc.abstractmethod
+    def result(self):
+        """Finalise and return the run's output."""
+
+
+def _scatter_tiles_device(r_pad: Array, tiles: Array, coords: Array) -> Array:
+    """One batched scatter of (P, t, t) tiles into (n_pad, n_pad) at the
+    (row, col) starts in coords (P, 2) — replaces the serial scan of
+    dynamic_update_slice (P sequential HLO ops) with a single scatter."""
+    dnums = jax.lax.ScatterDimensionNumbers(
+        update_window_dims=(1, 2),
+        inserted_window_dims=(),
+        scatter_dims_to_operand_dims=(0, 1),
+    )
+    return jax.lax.scatter(r_pad, coords, tiles, dnums,
+                           indices_are_sorted=False, unique_indices=False)
+
+
+_scatter_tiles_device = jax.jit(_scatter_tiles_device)
+
+
+def scatter_tiles(r_pad: Array, tiles: Array, ids: np.ndarray, t: int,
+                  m: int) -> Array:
+    """Scatter (t, t) tiles into the padded upper-triangle of R.
+
+    The id -> (y, x) bijection is inverted for the whole batch at once
+    (mapping.job_coord_batch, vectorised numpy) and the tiles land via a
+    single batched device scatter.  Duplicate ids (a clamped short pass)
+    carry identical tile contents, so write order does not matter.
+    """
+    ys, xs = mapping.job_coord_batch(m, np.asarray(ids))
+    coords = jnp.stack([jnp.asarray(ys * t, jnp.int32),
+                        jnp.asarray(xs * t, jnp.int32)], axis=1)
+    return _scatter_tiles_device(r_pad, tiles.astype(r_pad.dtype), coords)
+
+
+def place_tiles_host(r: np.ndarray, tiles: np.ndarray, ys: np.ndarray,
+                     xs: np.ndarray, t: int) -> None:
+    """Write a batch of (t, t) tiles (and their lower-triangle mirrors) into
+    the host matrix r in-place — vectorised fancy-index scatter, no per-tile
+    Python loop.  Works on plain arrays and np.memmap alike."""
+    span = np.arange(t)
+    rows = (ys[:, None] * t + span)[:, :, None]  # (P, t, 1)
+    cols = (xs[:, None] * t + span)[:, None, :]  # (P, 1, t)
+    r[rows, cols] = tiles
+    off = ys != xs
+    if np.any(off):
+        r[cols[off].transpose(0, 2, 1), rows[off].transpose(0, 2, 1)] = \
+            tiles[off].transpose(0, 2, 1)
+
+
+def symmetrize(r_pad: Array, n: int) -> Array:
+    """Mirror the scattered upper blocks into the lower triangle and crop."""
+    idx = jnp.arange(r_pad.shape[0])
+    upper = idx[:, None] <= idx[None, :]
+    r_full = jnp.where(upper, r_pad, r_pad.T)
+    return r_full[:n, :n]
+
+
+class DenseSink(TileSink):
+    """Accumulate tiles into an (n_pad, n_pad) device matrix; result() is
+    the symmetrised (n, n) similarity — the four classic drivers' output,
+    bit-identical to the pre-refactor assembly."""
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        self.r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        self.r_pad = scatter_tiles(self.r_pad, tiles, ids, self.plan.t,
+                                   self.plan.m)
+
+    def consume_clamped(self, padded_ids: np.ndarray, sel: np.ndarray,
+                        ids: np.ndarray, tiles: Array) -> None:
+        # Scatter the raw sharded buffer with the clamped ids: duplicate
+        # slots hold identical tiles (the kernel clamps the same way), so
+        # the write set equals the valid set — no cross-device gather, and
+        # bit-identical to the historical clamped-id assembly.
+        del sel, ids
+        self.r_pad = scatter_tiles(self.r_pad, tiles, padded_ids,
+                                   self.plan.t, self.plan.m)
+
+    def result(self) -> Array:
+        r = symmetrize(self.r_pad, self.plan.n)
+        # Fused runs leave the kernel fully finalised (epilogue + clip).
+        # Unfused runs had the epilogue applied on the pass stream; only the
+        # bounded-measure clip remains — elementwise, so applying it after
+        # symmetrise is bit-identical to the historical order.
+        meas = self.plan.measure
+        if not self.plan.fused and self.plan.clip and meas.clip is not None:
+            r = jnp.clip(r, *meas.clip)
+        return r
+
+
+class HostSink(TileSink):
+    """Assemble tiles (and their mirrors) into a host matrix — a caller
+    array, an np.memmap at `path`, or a freshly allocated ndarray.  Device
+    memory stays bounded by one pass; the full n x n lives on host/disk.
+
+    The host transfer in consume() blocks on the *previous* pass only (the
+    executor has already dispatched the next), preserving Alg. 2's
+    compute/offload overlap.
+    """
+
+    def __init__(self, out: Optional[np.ndarray] = None,
+                 path: Optional[str] = None):
+        if out is not None and path is not None:
+            raise ValueError("pass either a preallocated `out` or a memmap "
+                             "`path`, not both")
+        self._out = out
+        self._path = path
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        shape = (plan.n_pad, plan.n_pad)
+        if self._out is not None:
+            if self._out.shape != shape:
+                raise ValueError(
+                    f"out shape {self._out.shape} != padded {shape}")
+            self.r = self._out
+        elif self._path is not None:
+            self.r = np.memmap(self._path, dtype=np.float32, mode="w+",
+                               shape=shape)
+            self.r[:] = 0.0
+        else:
+            self.r = np.zeros(shape, np.float32)
+
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        ys, xs = mapping.job_coord_batch(self.plan.m, np.asarray(ids))
+        place_tiles_host(self.r, np.asarray(tiles), ys, xs, self.plan.t)
+
+    def result(self) -> np.ndarray:
+        r = self.r[: self.plan.n, : self.plan.n]
+        meas = self.plan.measure
+        if self.plan.clip and meas.clip is not None:
+            np.clip(r, meas.clip[0], meas.clip[1], out=r)
+        return r
+
+
+class ReductionSink(TileSink):
+    """Fold the tile stream through `fn(state, ids, tiles, ys, xs, plan)`.
+
+    `tiles` is handed to the callback as host numpy (the transfer overlaps
+    the next pass's device compute); (ys, xs) are the tile coordinates from
+    the batched bijection.  State is whatever the callback returns —
+    typically O(n) or O(1), which is the whole point.
+
+    `init` may be the initial state value — deep-copied at open(), so a
+    fold that mutates state in place cannot leak accumulation across runs
+    of a reused sink — or a zero-argument factory called per open().
+    """
+
+    def __init__(self, fn: Callable, init):
+        self._fn = fn
+        self._init = init
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        self.state = (self._init() if callable(self._init)
+                      else copy.deepcopy(self._init))
+
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        ys, xs = mapping.job_coord_batch(self.plan.m, np.asarray(ids))
+        self.state = self._fn(self.state, ids, np.asarray(tiles), ys, xs,
+                              self.plan)
+
+    def result(self):
+        return self.state
+
+
+class EdgeCountSink(TileSink):
+    """Streaming thresholded-graph reduction: count edges with
+    |similarity| >= threshold without ever materialising the matrix.
+
+    State is O(n): total unordered edge count, per-node degrees, and — when
+    per-node integer `labels` are given — intra- vs inter-label edge
+    tallies (precision of planted-module recovery is intra/(intra+inter)).
+    Each unordered pair is counted exactly once via the global strict-upper
+    predicate row < col, which holds for every entry of an off-diagonal
+    upper-triangle tile and selects the strict upper half of diagonal
+    tiles; padding rows/cols (>= n) are masked out.
+    """
+
+    def __init__(self, threshold: float,
+                 labels: Optional[np.ndarray] = None):
+        self.threshold = float(threshold)
+        self._labels = None if labels is None else np.asarray(labels)
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        if self._labels is not None and self._labels.shape != (plan.n,):
+            raise ValueError(
+                f"labels shape {self._labels.shape} != (n={plan.n},)")
+        self.edges = 0
+        self.degrees = np.zeros(plan.n, np.int64)
+        self.intra_edges = 0 if self._labels is not None else None
+
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        plan = self.plan
+        t, n = plan.t, plan.n
+        ys, xs = mapping.job_coord_batch(plan.m, np.asarray(ids))
+        vals = np.asarray(tiles)
+        span = np.arange(t)
+        rows = ys[:, None] * t + span          # (P, t) global row indices
+        cols = xs[:, None] * t + span          # (P, t) global col indices
+        hit = np.abs(vals) >= self.threshold
+        valid = (rows[:, :, None] < n) & (cols[:, None, :] < n)
+        strict = rows[:, :, None] < cols[:, None, :]
+        count = hit & valid & strict
+        self.edges += int(count.sum())
+        np.add.at(self.degrees, np.broadcast_to(rows[:, :, None],
+                                                count.shape)[count], 1)
+        np.add.at(self.degrees, np.broadcast_to(cols[:, None, :],
+                                                count.shape)[count], 1)
+        if self._labels is not None:
+            lab = self._labels
+            lr = lab[np.minimum(rows, n - 1)]
+            lc = lab[np.minimum(cols, n - 1)]
+            same = lr[:, :, None] == lc[:, None, :]
+            self.intra_edges += int((count & same).sum())
+
+    def result(self) -> dict:
+        out = {"edges": self.edges, "degrees": self.degrees}
+        if self._labels is not None:
+            out["intra_edges"] = self.intra_edges
+            out["inter_edges"] = self.edges - self.intra_edges
+        return out
+
+
+__all__ = [
+    "TileSink",
+    "DenseSink",
+    "HostSink",
+    "ReductionSink",
+    "EdgeCountSink",
+    "scatter_tiles",
+    "place_tiles_host",
+    "symmetrize",
+]

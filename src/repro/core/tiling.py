@@ -115,6 +115,23 @@ def passes(lo: int, hi: int, max_tiles_per_pass: int) -> Iterator[Tuple[int, int
         j = min(hi, j + max_tiles_per_pass)
 
 
+def pass_launch_sizes(span: int, max_tiles_per_pass: int) -> Tuple[int, ...]:
+    """Kernel launch sizes covering a `span`-tile range in passes of at most
+    max_tiles_per_pass tiles: full passes followed by the actual remainder.
+
+    The final entry is the remainder (not the padded maximum), so the last
+    kernel launch is sized to the tiles that exist — no dummy-tile compute.
+    At most two distinct sizes appear, bounding kernel recompilation at two
+    variants per plan.
+    """
+    if max_tiles_per_pass <= 0:
+        raise ValueError("max_tiles_per_pass must be positive")
+    if span <= 0:
+        raise ValueError("span must be positive")
+    full, rem = divmod(span, max_tiles_per_pass)
+    return (max_tiles_per_pass,) * full + ((rem,) if rem else ())
+
+
 def max_tiles_for_bytes(t: int, budget_bytes: int, itemsize: int = 4,
                         double_buffered: bool = True) -> int:
     """How many t*t result tiles fit in a result-buffer byte budget
@@ -142,6 +159,7 @@ __all__ = [
     "balanced_counts",
     "strided_ids",
     "passes",
+    "pass_launch_sizes",
     "max_tiles_for_bytes",
     "band_tile_count",
     "band_tile_coord",

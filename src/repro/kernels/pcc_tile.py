@@ -38,8 +38,12 @@ VMEM budget at the default t=256, l_blk=512, f32:
   (256*256*4 = 256 KiB) ~= 1.3 MiB  << 16 MiB/core.
 bf16 operands halve the operand blocks (512 KiB total), int8 quarters them.
 
-Out-of-range grid steps (padding when a pass is shorter than the compiled
-pass length) clamp to the last valid tile; the driver discards those tiles.
+Out-of-range grid steps clamp to the last valid tile; the executor discards
+those tiles.  Since the plan/executor refactor the drivers size every
+launch to the tiles it actually covers (the final pass launches the
+remainder, not the padded maximum — see ExecutionPlan.launch_sizes), so
+clamped dummy steps only arise from the cross-device ceil remainder of
+uniform shard_map tile ranges, never from pass padding.
 
 Diagonal tiles compute their full t x t block although only t(t+1)/2 jobs are
 needed: on the MXU a partial tile costs the same as a full one, so unlike the
@@ -178,6 +182,9 @@ def pcc_tiles(
     n_pad, l_pad = u_pad.shape
     if n_pad % t or l_pad % l_blk:
         raise ValueError(f"u_pad {u_pad.shape} not aligned to t={t}, l_blk={l_blk}")
+    if pass_tiles <= 0:
+        raise ValueError(f"pass_tiles must be positive, got {pass_tiles} "
+                         f"(remainder launches must be sized, not empty)")
     m = n_pad // t
     total = m * (m + 1) // 2
     l_blocks = l_pad // l_blk

@@ -22,6 +22,7 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core import tiling
+from repro.core.plan import ExecutionPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +32,7 @@ class ElasticPlan:
     axis_names: Tuple[str, ...]
     dropped_devices: int                # devices idled beyond the failures
     new_tile_ranges: Optional[Tuple[Tuple[int, int], ...]] = None
+    new_exec_plan: Optional[ExecutionPlan] = None
 
 
 def shrink_data_axis(mesh: Mesh, n_failed: int,
@@ -75,13 +77,38 @@ def replan_pcc(total_tiles: int, new_p: int) -> Tuple[Tuple[int, int], ...]:
     return tuple(tiling.balanced_counts(total_tiles, new_p))
 
 
+def replan_execution(plan: ExecutionPlan, new_p: int) -> ExecutionPlan:
+    """Re-slice a full ExecutionPlan for the surviving device count.
+
+    Everything but the distribution fields (p, per_dev, pass bound) is
+    carried over unchanged — measure resolution, fusion, precision, and
+    tile geometry survive the re-mesh, so the executor resumes with the
+    same compiled kernels and the new contiguous ranges."""
+    return plan.repartition(new_p)
+
+
 def elastic_pcc_plan(mesh: Mesh, n_failed: int, total_tiles: int,
-                     data_axis: str = "data") -> ElasticPlan:
+                     data_axis: str = "data",
+                     exec_plan: Optional[ExecutionPlan] = None) -> ElasticPlan:
+    """Shrink the mesh and re-partition the all-pairs tile ranges.
+
+    With `exec_plan=` (the run's ExecutionPlan), the returned ElasticPlan
+    also carries the re-sliced ExecutionPlan for the new device count —
+    elastic recovery is then literally `allpairs(..., plan-re-slice)` with
+    no other state to rebuild."""
     plan = shrink_data_axis(mesh, n_failed, data_axis)
     p_new = int(np.prod(plan.new_shape))
+    new_exec = None
+    if exec_plan is not None:
+        if exec_plan.total_tiles != total_tiles:
+            raise ValueError(
+                f"exec_plan.total_tiles={exec_plan.total_tiles} does not "
+                f"match total_tiles={total_tiles}")
+        new_exec = replan_execution(exec_plan, p_new)
     return dataclasses.replace(
-        plan, new_tile_ranges=replan_pcc(total_tiles, p_new))
+        plan, new_tile_ranges=replan_pcc(total_tiles, p_new),
+        new_exec_plan=new_exec)
 
 
 __all__ = ["ElasticPlan", "shrink_data_axis", "build_mesh", "replan_pcc",
-           "elastic_pcc_plan"]
+           "replan_execution", "elastic_pcc_plan"]

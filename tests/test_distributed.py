@@ -81,6 +81,149 @@ def test_sharded_measures_match_dense_oracle():
     """)
 
 
+def test_sharded_streaming_bit_identical_to_materializing_path():
+    """Both sharded drivers, through the streaming executor, are
+    bit-identical to the pre-refactor materializing pipeline (inlined here:
+    one shard_map producing the full (p*per_dev, t, t) global array, then a
+    single clamped-id scatter), on 1-D and 2-D meshes."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import measures
+        from repro.core.allpairs import prepare, scatter_tiles, symmetrize
+        from repro.core.distributed import (allpairs_pcc_sharded,
+                                            allpairs_pcc_sharded_u,
+                                            tiles_per_device)
+        from repro.kernels.pcc_tile import pcc_tiles
+
+        def legacy_sharded(x, mesh, t, l_blk, max_tiles_per_pass=None):
+            n = x.shape[0]
+            axes = tuple(mesh.axis_names)
+            p = int(np.prod(mesh.devices.shape))
+            u_pad, plan = prepare(x, t=t, l_blk=l_blk)
+            spec, _ = measures.resolve_fusion(measures.PEARSON, True, plan.l)
+            total = plan.total_tiles
+            per_dev = tiles_per_device(total, p)
+            pass_tiles = min(per_dev, max_tiles_per_pass or per_dev)
+            n_pass = -(-per_dev // pass_tiles)
+            def device_fn(u_rep):
+                rank = jnp.int32(0)
+                for ax in axes:
+                    rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+                outs = []
+                for k in range(n_pass):
+                    j0 = jnp.minimum(rank * per_dev + k * pass_tiles,
+                                     total - 1)
+                    outs.append(pcc_tiles(u_rep, j0, t=t, l_blk=l_blk,
+                                          pass_tiles=pass_tiles,
+                                          interpret=True, epilogue=spec))
+                return jnp.concatenate(outs, axis=0)[:per_dev]
+            spec_rep = P(*([None] * u_pad.ndim))
+            fn = shard_map(device_fn, mesh=mesh, in_specs=(spec_rep,),
+                           out_specs=P(axes), check_vma=False)
+            u_rep = jax.device_put(u_pad, NamedSharding(mesh, spec_rep))
+            tiles = fn(u_rep)  # the (p*per_dev, t, t) global array
+            ids = np.minimum(np.arange(p * per_dev), total - 1)
+            r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+            r_pad = scatter_tiles(r_pad, tiles, ids, t, plan.m)
+            return symmetrize(r_pad, n)
+
+        rng = np.random.default_rng(21)
+        x = jnp.asarray(rng.standard_normal((50, 37)).astype(np.float32))
+        for mesh_shape, axes in [((8,), ("d",)), ((4, 2), ("a", "b"))]:
+            mesh = jax.make_mesh(mesh_shape, axes)
+            for mtp in (None, 2):
+                want = np.asarray(legacy_sharded(x, mesh, 8, 16,
+                                                 max_tiles_per_pass=mtp))
+                got = np.asarray(allpairs_pcc_sharded(
+                    x, mesh, t=8, l_blk=16, max_tiles_per_pass=mtp))
+                np.testing.assert_array_equal(got, want), (mesh_shape, mtp)
+            got_u = np.asarray(allpairs_pcc_sharded_u(x, mesh, t=8, l_blk=16))
+            want_u = np.asarray(legacy_sharded(x, mesh, 8, 16))
+            np.testing.assert_array_equal(got_u, want_u)
+        print("OK")
+    """)
+
+
+def test_sharded_output_memory_bounded_by_pass():
+    """The executor never materialises the (p*per_dev, t, t) global array:
+    every per-pass buffer is bounded by max_tiles_per_pass tiles *per
+    device* (inspected via addressable_shards), on a 4- and 8-device mesh."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.allpairs import allpairs
+        from repro.core.plan import ExecutionPlan
+        from repro.core.sinks import DenseSink, HostSink
+        from repro.core.pcc import pearson_gemm
+
+        class Probe:
+            '''Wrap a sink; assert every device buffer it is handed obeys
+            the per-device pass bound (mtp tiles of t*t f32).'''
+            def __init__(self, inner, p, mtp, t, per_dev):
+                self.inner, self.p, self.mtp = inner, p, mtp
+                self.t, self.per_dev = t, per_dev
+                self.passes = 0
+            def open(self, plan):
+                self.inner.open(plan)
+            def _check(self, tiles):
+                assert tiles.shape[0] <= self.p * self.mtp, tiles.shape
+                assert tiles.shape[0] < self.p * self.per_dev
+                for shard in tiles.addressable_shards:
+                    assert shard.data.size <= self.mtp * self.t * self.t, \
+                        shard.data.shape
+                self.passes += 1
+            def consume(self, ids, tiles):
+                self._check(tiles)
+                self.inner.consume(ids, tiles)
+            def consume_clamped(self, padded, sel, ids, tiles):
+                self._check(tiles)
+                self.inner.consume_clamped(padded, sel, ids, tiles)
+            def result(self):
+                return self.inner.result()
+
+        rng = np.random.default_rng(22)
+        x = jnp.asarray(rng.standard_normal((96, 24)).astype(np.float32))
+        ref = np.asarray(pearson_gemm(x))
+        t, mtp = 8, 3
+        for p in (4, 8):
+            mesh = jax.make_mesh((p,), ("d",))
+            plan = ExecutionPlan.create(96, 24, t=t, l_blk=8, p=p,
+                                        max_tiles_per_pass=mtp)
+            assert plan.n_pass > 1, "bound not exercised"
+            for inner in (DenseSink(), HostSink()):
+                probe = Probe(inner, p, mtp, t, plan.per_dev)
+                r = np.asarray(allpairs(x, mesh=mesh, t=t, l_blk=8,
+                                        max_tiles_per_pass=mtp, sink=probe))
+                assert probe.passes == plan.n_pass
+                assert np.abs(r - ref).max() < 3e-6
+        print("OK")
+    """)
+
+
+def test_sharded_sink_streaming_reduction():
+    """A streaming EdgeCountSink on the mesh path agrees with the dense
+    adjacency — no n x n array on any device or host."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.allpairs import allpairs
+        from repro.core.sinks import EdgeCountSink
+        from repro.core.pcc import pearson_gemm
+        rng = np.random.default_rng(23)
+        n = 60
+        x = jnp.asarray(rng.standard_normal((n, 20)).astype(np.float32))
+        mesh = jax.make_mesh((8,), ("d",))
+        thr = 0.3
+        got = allpairs(x, mesh=mesh, t=8, l_blk=8, max_tiles_per_pass=2,
+                       sink=EdgeCountSink(thr))
+        ref = np.asarray(pearson_gemm(x))
+        adj = (np.abs(ref) >= thr) & ~np.eye(n, dtype=bool)
+        assert got["edges"] == int(adj.sum()) // 2
+        np.testing.assert_array_equal(got["degrees"], adj.sum(1))
+        print("OK")
+    """)
+
+
 @pytest.mark.slow
 def test_pjit_train_matches_single_device_loss():
     """The sharded train step computes the same loss as unsharded."""
@@ -127,6 +270,7 @@ def test_elastic_remesh_pcc_renumbering():
         import jax
         from repro.runtime import elastic
         from repro.core import tiling
+        from repro.core.plan import ExecutionPlan
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         plan = elastic.elastic_pcc_plan(mesh, n_failed=2, total_tiles=1000)
         assert plan.new_shape == (3, 2)
@@ -136,6 +280,16 @@ def test_elastic_remesh_pcc_renumbering():
         assert covered == 1000
         sizes = [hi - lo for lo, hi in ranges]
         assert max(sizes) - min(sizes) <= 1
+
+        # with an ExecutionPlan, recovery is a pure plan re-slice
+        ep = ExecutionPlan.create(352, 16, t=8, p=8, max_tiles_per_pass=64)
+        assert ep.total_tiles == 990  # m=44 -> 44*45/2
+        plan2 = elastic.elastic_pcc_plan(mesh, n_failed=2, total_tiles=990,
+                                         exec_plan=ep)
+        ep2 = plan2.new_exec_plan
+        assert ep2.p == 6 and ep2.measure is ep.measure
+        assert ep2.tile == ep.tile
+        assert sum(hi - lo for lo, hi in ep2.device_ranges) == 990
         print("OK")
     """)
 

@@ -27,7 +27,8 @@ from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
 from repro.kernels import ops
 from repro.kernels.pcc_tile import EpilogueSpec, pcc_tiles
 
-ALL_MEASURES = ["pearson", "spearman", "cosine", "covariance", "kendall"]
+ALL_MEASURES = ["pearson", "spearman", "cosine", "covariance", "kendall",
+                "kendall_tau_b"]
 
 
 def _x(n, l, seed=0):

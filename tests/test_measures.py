@@ -16,7 +16,8 @@ from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
                                  scatter_tiles, symmetrize)
 from repro.kernels.pcc_tile import pcc_tiles
 
-ALL_MEASURES = ["pearson", "spearman", "cosine", "covariance", "kendall"]
+ALL_MEASURES = ["pearson", "spearman", "cosine", "covariance", "kendall",
+                "kendall_tau_b"]
 
 
 def _x(n, l, seed=0, ties=False):
@@ -51,6 +52,42 @@ def test_kendall_matches_scipy_tie_free():
         for j in range(i, 8):
             ref = stats.kendalltau(xn[i], xn[j]).statistic
             assert abs(r[i, j] - ref) < 1e-5, (i, j)
+
+
+@pytest.mark.parametrize("ties", [False, True])
+def test_kendall_tau_b_matches_scipy(ties):
+    """Tau-b (scipy.stats.kendalltau's default variant) through the tiled
+    engine: the per-row tie normalisation factorises into the transform
+    (see measures.pair_sign_tie_scaled_transform), so tied data — where
+    tau-a and tau-b disagree by construction — must match scipy."""
+    stats = pytest.importorskip("scipy.stats")
+    x = _x(8, 14, seed=11, ties=ties)
+    r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="kendall_tau_b"))
+    xn = np.asarray(x)
+    for i in range(8):
+        for j in range(i, 8):
+            ref = stats.kendalltau(xn[i], xn[j]).statistic
+            assert abs(r[i, j] - ref) < 1e-5, (i, j, ties)
+
+
+def test_kendall_tau_b_equals_tau_a_when_tie_free():
+    x = _x(7, 12, seed=12)  # continuous draws: no ties
+    a = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="kendall"))
+    b = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure="kendall_tau_b"))
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_kendall_tau_b_constant_row_convention():
+    """A fully tied (constant) row has zero non-tied pairs; scipy yields
+    NaN there — our convention maps it to an all-zero transform row, so
+    every pair involving it scores 0 (and the diagonal entry too)."""
+    x = np.ones((3, 10), np.float32)
+    x[1] = np.linspace(0, 1, 10)
+    r = np.asarray(allpairs_pcc(jnp.asarray(x), t=8, l_blk=8,
+                                measure="kendall_tau_b"))
+    assert np.all(np.isfinite(r))
+    assert r[0, 1] == 0.0 and r[0, 2] == 0.0 and r[0, 0] == 0.0
+    assert r[1, 1] == pytest.approx(1.0, abs=1e-6)
 
 
 @pytest.mark.parametrize("ties", [False, True])
@@ -116,7 +153,8 @@ def test_single_variable(measure):
     x = _x(1, 10, seed=7)
     r = np.asarray(allpairs_pcc(x, t=8, l_blk=8, measure=measure))
     assert r.shape == (1, 1) and np.isfinite(r[0, 0])
-    if measure in ("pearson", "spearman", "cosine", "kendall"):
+    if measure in ("pearson", "spearman", "cosine", "kendall",
+                   "kendall_tau_b"):
         assert r[0, 0] == pytest.approx(1.0, abs=1e-6)
     else:
         assert r[0, 0] == pytest.approx(float(np.var(np.asarray(x), ddof=1)),

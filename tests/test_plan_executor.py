@@ -1,0 +1,321 @@
+"""Plan/executor/sink core: pass boundaries, sink edge cases, legacy parity.
+
+The refactor's contract (ISSUE 3 acceptance criteria):
+  * one ExecutionPlan carries every static decision; the executor iterates
+    remainder-sized passes (no dummy-tile compute in the final launch);
+  * sinks are interchangeable: dense device assembly, host/memmap
+    assembly, and streaming reductions all agree;
+  * the four legacy drivers are bit-identical to their pre-refactor
+    pipelines through the new executor (sharded parity lives in
+    tests/test_distributed.py on 8 simulated devices).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allpairs as ap
+from repro.core import mapping, measures, tiling
+from repro.core.allpairs import (allpairs, allpairs_pcc,
+                                 allpairs_pcc_streamed, assemble_from_stream,
+                                 stream_tiles)
+from repro.core.pcc import pearson_gemm
+from repro.core.plan import ExecutionPlan
+from repro.core.sinks import (DenseSink, EdgeCountSink, HostSink,
+                              ReductionSink)
+from repro.kernels.pcc_tile import pcc_tiles
+
+
+def _x(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan: partitioning, launch sizing, re-slicing
+# ---------------------------------------------------------------------------
+
+
+# n=33, t=8 -> m=5, total=15.  mtp chosen so total % mtp hits the edge
+# residues {0, 1, mtp-1} the issue calls out.
+@pytest.mark.parametrize("mtp,residue", [(5, 0), (3, 0), (7, 1), (2, 1),
+                                         (8, 7), (4, 3), (15, 0), (1, 0)])
+def test_pass_boundary_residues(mtp, residue):
+    plan = ExecutionPlan.create(33, 17, t=8, l_blk=8, max_tiles_per_pass=mtp)
+    assert plan.total_tiles == 15 and plan.total_tiles % mtp == residue
+    sizes = plan.launch_sizes
+    # exact coverage, no dummy tiles: the final launch is the remainder
+    assert sum(sizes) == plan.total_tiles
+    assert all(s == mtp for s in sizes[:-1])
+    assert sizes[-1] == (mtp if residue == 0 else residue)
+    # and the result is invariant to the partitioning
+    x = _x(33, 17, seed=1)
+    full = np.asarray(allpairs(x, t=8, l_blk=8))
+    part = np.asarray(allpairs(x, t=8, l_blk=8, max_tiles_per_pass=mtp))
+    np.testing.assert_array_equal(part, full)
+
+
+def test_final_launch_is_remainder_sized(monkeypatch):
+    """The kernel is actually *launched* at the remainder size (not just
+    sliced afterward): record every pass_tiles handed to pcc_tiles."""
+    seen = []
+    real = pcc_tiles
+
+    def spy(u, j0, *, pass_tiles, **kw):
+        seen.append(pass_tiles)
+        return real(u, j0, pass_tiles=pass_tiles, **kw)
+
+    monkeypatch.setattr(ap, "pcc_tiles", spy)
+    x = _x(33, 17, seed=2)  # total = 15 tiles
+    allpairs(x, t=8, l_blk=8, max_tiles_per_pass=4)
+    assert seen == [4, 4, 4, 3]
+    seen.clear()
+    list(allpairs_pcc_streamed(x, t=8, l_blk=8, max_tiles_per_pass=6))
+    assert seen == [6, 6, 3]
+
+
+def test_plan_device_ranges_and_repartition():
+    plan = ExecutionPlan.create(200, 20, t=8, p=6, max_tiles_per_pass=10)
+    # m=25 -> total=325; per_dev=ceil(325/6)=55
+    assert plan.total_tiles == 325 and plan.per_dev == 55
+    ranges = plan.device_ranges
+    assert ranges[0] == (0, 55) and ranges[-1] == (275, 325)
+    covered = sum(hi - lo for lo, hi in ranges)
+    assert covered == plan.total_tiles
+    # elastic re-slice: pure renumbering, everything else carried over
+    re = plan.repartition(4)
+    assert re.p == 4 and re.per_dev == -(-325 // 4)
+    assert re.measure is plan.measure and re.fused == plan.fused
+    assert re.tile == plan.tile
+    assert sum(hi - lo for lo, hi in re.device_ranges) == plan.total_tiles
+    with pytest.raises(ValueError):
+        plan.repartition(0)
+
+
+def test_pass_selection_unique_and_complete():
+    plan = ExecutionPlan.create(100, 12, t=8, p=8, max_tiles_per_pass=3)
+    # m=13 -> total=91, per_dev=12: tail device owns 91-84=7 tiles
+    all_ids = []
+    for k in range(plan.n_pass):
+        ids, sel = plan.pass_selection(k)
+        launch = plan.launch_sizes[k]
+        if sel is not None:
+            assert len(sel) == len(ids) <= plan.p * launch
+        all_ids.append(ids)
+    flat = np.concatenate(all_ids)
+    assert len(np.unique(flat)) == len(flat) == plan.total_tiles
+    np.testing.assert_array_equal(np.sort(flat), np.arange(plan.total_tiles))
+
+
+def test_plan_rejects_mismatched_x():
+    plan = ExecutionPlan.create(10, 5, t=8)
+    with pytest.raises(ValueError, match="does not match plan"):
+        plan.prepare(_x(11, 5))
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("measure", ["pearson", "covariance", "kendall"])
+def test_memmap_sink_roundtrip_equals_dense(tmp_path, measure):
+    """HostSink on an np.memmap assembles exactly what DenseSink returns."""
+    x = _x(29, 14, seed=3)
+    dense = np.asarray(allpairs(x, t=8, l_blk=8, measure=measure,
+                                max_tiles_per_pass=4))
+    path = str(tmp_path / "r.mm")
+    mm = allpairs(x, t=8, l_blk=8, measure=measure, max_tiles_per_pass=4,
+                  sink=HostSink(path=path))
+    assert isinstance(mm, np.ndarray)
+    np.testing.assert_array_equal(np.asarray(mm), dense)
+    # the memmap really is the backing store
+    reread = np.memmap(path, dtype=np.float32, mode="r",
+                       shape=(32, 32))[:29, :29]
+    np.testing.assert_array_equal(np.asarray(reread), dense)
+
+
+def test_host_sink_preallocated_out():
+    x = _x(20, 10, seed=4)
+    plan = ExecutionPlan.create(20, 10, t=8)
+    out = np.full((plan.n_pad, plan.n_pad), 7.0, np.float32)
+    out[:] = 0.0
+    r = allpairs(x, t=8, l_blk=8, sink=HostSink(out=out))
+    np.testing.assert_array_equal(r, np.asarray(allpairs(x, t=8, l_blk=8)))
+    with pytest.raises(ValueError):
+        HostSink(out=out, path="/tmp/nope")
+
+
+def test_host_sink_matches_legacy_assemble():
+    """allpairs(sink=HostSink()) == stream + assemble_from_stream, the
+    pre-refactor out-of-core path."""
+    x = _x(26, 12, seed=5)
+    plan = tiling.TilePlan.create(26, 12, 8)
+    legacy = assemble_from_stream(
+        26, 8, plan.m,
+        allpairs_pcc_streamed(x, t=8, l_blk=8, max_tiles_per_pass=3))
+    new = allpairs(x, t=8, l_blk=8, max_tiles_per_pass=3, sink=HostSink())
+    np.testing.assert_array_equal(new, legacy)
+
+
+def test_reduction_sink_running_max():
+    """O(1)-state streaming reduction: max off-diagonal similarity."""
+    x = _x(23, 11, seed=6)
+    ref = np.asarray(allpairs(x, t=8, l_blk=8))
+    n = 23
+
+    def fold(state, ids, tiles, ys, xs, plan):
+        t = plan.t
+        span = np.arange(t)
+        rows = ys[:, None] * t + span
+        cols = xs[:, None] * t + span
+        ok = ((rows[:, :, None] < n) & (cols[:, None, :] < n) &
+              (rows[:, :, None] != cols[:, None, :]))
+        vals = np.where(ok, tiles, -np.inf)
+        return max(state, float(vals.max()))
+
+    got = allpairs(x, t=8, l_blk=8, max_tiles_per_pass=4,
+                   sink=ReductionSink(fold, -np.inf))
+    want = float(np.where(~np.eye(n, dtype=bool), ref, -np.inf).max())
+    assert got == pytest.approx(want, abs=1e-6)
+
+
+@pytest.mark.parametrize("mtp", [None, 3])
+def test_edge_count_sink_matches_dense_adjacency(mtp):
+    x = _x(34, 16, seed=7)
+    n, thr = 34, 0.35
+    ref = np.asarray(allpairs(x, t=8, l_blk=8))
+    adj = (np.abs(ref) >= thr) & ~np.eye(n, dtype=bool)
+    labels = np.arange(n) % 5
+    got = allpairs(x, t=8, l_blk=8, max_tiles_per_pass=mtp,
+                   sink=EdgeCountSink(thr, labels=labels))
+    assert got["edges"] == int(adj.sum()) // 2
+    np.testing.assert_array_equal(got["degrees"], adj.sum(1))
+    same = np.equal.outer(labels, labels)
+    assert got["intra_edges"] == int((adj & same).sum()) // 2
+    assert got["inter_edges"] == got["edges"] - got["intra_edges"]
+
+
+def test_edge_count_sink_label_shape_checked():
+    x = _x(10, 8, seed=8)
+    with pytest.raises(ValueError, match="labels"):
+        allpairs(x, t=8, l_blk=8, sink=EdgeCountSink(0.5,
+                                                     labels=np.arange(9)))
+
+
+# ---------------------------------------------------------------------------
+# Legacy-driver bit-identity through the unified executor
+# ---------------------------------------------------------------------------
+
+
+def test_tiled_bit_identical_to_pre_refactor_pipeline():
+    """allpairs_pcc == the pre-refactor driver loop, inlined: constant-size
+    launches, slice-discard of the short final pass, scatter, symmetrize,
+    clip."""
+    for n, l, t, mtp in [(33, 17, 8, 4), (40, 24, 8, 7), (20, 10, 8, None)]:
+        x = _x(n, l, seed=n)
+        u_pad, plan = ap.prepare(x, t=t, l_blk=8)
+        spec, _ = measures.resolve_fusion(measures.PEARSON, True, plan.l,
+                                          clip=True)
+        total = plan.total_tiles
+        pass_tiles = min(total, mtp or total)
+        r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+        for lo, hi in tiling.passes(0, total, pass_tiles):
+            out = pcc_tiles(u_pad, lo, t=t, l_blk=8, pass_tiles=pass_tiles,
+                            interpret=True, epilogue=spec)
+            r_pad = ap.scatter_tiles(r_pad, out[: hi - lo],
+                                     np.arange(lo, hi), t, plan.m)
+        want = np.asarray(ap.symmetrize(r_pad, n))
+
+        got = np.asarray(allpairs_pcc(x, t=t, l_blk=8,
+                                      max_tiles_per_pass=mtp))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_streamed_bit_identical_to_pre_refactor_stream():
+    """The streamed wrapper yields the same (ids, tiles) chunks as the
+    pre-refactor generator, which launched every pass at the constant
+    max_tiles_per_pass and sliced the valid prefix afterwards."""
+    x = _x(29, 14, seed=9)
+    t, mtp = 8, 4
+    u_pad, plan = ap.prepare(x, t=t, l_blk=8)
+    spec, _ = measures.resolve_fusion(measures.PEARSON, True, plan.l)
+    legacy = []
+    for lo, hi in tiling.passes(0, plan.total_tiles, mtp):
+        out = pcc_tiles(u_pad, lo, t=t, l_blk=8, pass_tiles=mtp,
+                        interpret=True, epilogue=spec)
+        legacy.append((np.arange(lo, hi), np.asarray(out)[: hi - lo]))
+
+    new = list(allpairs_pcc_streamed(x, t=t, l_blk=8, max_tiles_per_pass=mtp))
+    assert len(new) == len(legacy)
+    for (li, lt), (ni, nt) in zip(legacy, new):
+        np.testing.assert_array_equal(ni, li)
+        np.testing.assert_array_equal(nt, lt)
+
+
+def test_stream_tiles_device_buffers_are_pass_bounded():
+    """The executor stream never materialises more than one pass of tiles:
+    every yielded buffer holds at most max_tiles_per_pass tiles."""
+    x = _x(40, 16, seed=10)
+    mtp = 5
+    plan = ExecutionPlan.create(40, 16, t=8, l_blk=8, max_tiles_per_pass=mtp)
+    n_seen = 0
+    for ids, buf in stream_tiles(x, t=8, l_blk=8, max_tiles_per_pass=mtp):
+        assert buf.shape[0] <= mtp and buf.shape[1:] == (8, 8)
+        n_seen += len(ids)
+    assert n_seen == plan.total_tiles
+    assert plan.n_pass > 1  # the bound was actually exercised
+
+
+def test_stream_tiles_rejects_mismatched_plan():
+    x = _x(16, 8, seed=11)
+    plan = ExecutionPlan.create(16, 8, t=8, p=4)
+    with pytest.raises(ValueError, match="plan.p"):
+        list(stream_tiles(x, t=8, l_blk=8, plan=plan))
+    # conflicting per-call kwargs are refused, not silently dropped
+    plan1 = ExecutionPlan.create(16, 8, t=8, l_blk=8)
+    with pytest.raises(ValueError, match="measure"):
+        list(stream_tiles(x, t=8, l_blk=8, measure="cosine", plan=plan1))
+    with pytest.raises(ValueError, match="conflicts with plan.t"):
+        list(stream_tiles(x, t=16, plan=plan1))
+    # matching (or default) kwargs are fine
+    chunks = list(stream_tiles(x, t=8, l_blk=8, measure="pcc", plan=plan1))
+    assert sum(len(ids) for ids, _ in chunks) == plan1.total_tiles
+
+
+def test_zero_max_tiles_per_pass_rejected():
+    """0 must raise, not silently coerce to one unbounded pass."""
+    with pytest.raises(ValueError, match="positive"):
+        ExecutionPlan.create(16, 8, t=8, max_tiles_per_pass=0)
+    with pytest.raises(ValueError, match="positive"):
+        allpairs(_x(16, 8), t=8, l_blk=8, max_tiles_per_pass=0)
+
+
+def test_reduction_sink_reuse_does_not_leak_state():
+    """A reused sink restarts from init even when the fold mutates state
+    in place; a callable init is invoked per run."""
+    x = _x(17, 9, seed=13)
+
+    def fold(state, ids, tiles, ys, xs, plan):
+        state += tiles.shape[0]  # in-place mutation of the state array
+        return state
+
+    snk = ReductionSink(fold, np.zeros(1))
+    first = float(allpairs(x, t=8, l_blk=8, sink=snk)[0])
+    second = float(allpairs(x, t=8, l_blk=8, sink=snk)[0])
+    assert first == second > 0
+
+    calls = []
+    snk2 = ReductionSink(lambda s, *a: s + 1, lambda: calls.append(1) or 0)
+    allpairs(x, t=8, l_blk=8, sink=snk2)
+    allpairs(x, t=8, l_blk=8, sink=snk2)
+    assert len(calls) == 2
+
+
+def test_unified_allpairs_matches_oracle_all_measures():
+    x = _x(21, 13, seed=12)
+    for name in measures.available():
+        ref = np.asarray(measures.dense_reference(x, name))
+        got = np.asarray(allpairs(x, t=8, l_blk=8, measure=name,
+                                  max_tiles_per_pass=3))
+        np.testing.assert_allclose(got, ref, atol=1e-5, err_msg=name)
