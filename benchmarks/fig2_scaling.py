@@ -44,7 +44,8 @@ def run(subprocess_part: bool = True) -> None:
         return
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np, time
-        from repro.core.distributed import allpairs_pcc_sharded, tiles_per_device
+        from repro.core.api import corr
+        from repro.core.plan import tiles_per_device
         from repro.core.pcc import pearson_gemm
         from repro.core import tiling
         rng = np.random.default_rng(0)
@@ -54,7 +55,7 @@ def run(subprocess_part: bool = True) -> None:
         for p in (1, 2, 4, 8):
             mesh = jax.make_mesh((p,), ("d",))
             t0 = time.perf_counter()
-            r = allpairs_pcc_sharded(x, mesh, t=16, l_blk=32)
+            r = corr(x, mesh=mesh, t=16, l_blk=32)
             jax.block_until_ready(r)
             dt = time.perf_counter() - t0
             err = float(jnp.max(jnp.abs(r - ref)))

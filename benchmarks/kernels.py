@@ -15,9 +15,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import measures
-from repro.core.allpairs import allpairs, allpairs_pcc, prepare
+from repro.core.allpairs import allpairs, prepare
+from repro.core.api import corr
 from repro.core.plan import ExecutionPlan
-from repro.core.sinks import EdgeCountSink, HostSink
+from repro.core.sinks import EdgeCountSink, HostSink, TopKSink
 from repro.kernels.flash_attention import grid_savings
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 from repro.kernels.ref import pcc_tiles_ref
@@ -80,7 +81,7 @@ def run() -> None:
     # whole output a second time for the elementwise finalisation.
     xe = x[:64, :]
     for fused in (True, False):
-        t_e = timeit(lambda fused=fused: allpairs_pcc(
+        t_e = timeit(lambda fused=fused: corr(
             xe, t=16, l_blk=32, measure="covariance", fuse_epilogue=fused,
             interpret=True), warmup=1, iters=1)
         label = "fused" if fused else "unfused"
@@ -153,6 +154,41 @@ def run() -> None:
                      warmup=1, iters=1)
         emit(f"kernels/executor_sink_{label}", t_s * 1e6,
              "n=64;l=64;t=16;mtp=4")
+
+    # rectangular (grid-workload) path: X-vs-Y cross-correlation through
+    # the second-operand block specs.  Structural payoff vs the symmetric
+    # workaround (embedding X and Y in one (n_r+n_c)^2 triangle): the grid
+    # computes exactly m_r*m_c tiles.
+    xq, yq = x[:48, :64], x[64:192, :64]
+    t_rect = timeit(lambda: corr(xq, yq, t=16, l_blk=32, interpret=True),
+                    warmup=1, iters=1)
+    mr, mc = 48 // 16, 128 // 16
+    embed = (mr + mc) * (mr + mc + 1) // 2
+    emit("kernels/rect_corr_interpret", t_rect * 1e6,
+         f"n_rows=48;n_cols=128;grid_tiles={mr * mc};"
+         f"symmetric_embed_tiles={embed};"
+         f"tile_savings={1 - mr * mc / embed:.3f}")
+
+    # masked (pairwise-complete) path: component GEMMs + elementwise
+    # combine.  Structural cost = #components kernel passes over the full
+    # grid (the cross terms are non-symmetric even for y == x).
+    xn = np.asarray(x[:48, :64]).copy()
+    xn[np.random.default_rng(5).random(xn.shape) < 0.3] = np.nan
+    xnj = jnp.asarray(xn)
+    for name, ncomp in [("pearson", 6), ("cosine", 3)]:
+        t_m = timeit(lambda name=name: corr(xnj, where="nan", measure=name,
+                                            t=16, l_blk=32, interpret=True),
+                     warmup=1, iters=1)
+        emit(f"kernels/masked_{name}_interpret", t_m * 1e6,
+             f"n=48;l=64;nan_frac=0.3;component_gemms={ncomp};"
+             f"grid_tiles={(48 // 16) ** 2}")
+
+    # top-k sink: O(n*k) streaming state vs the dense matrix
+    t_k = timeit(lambda: corr(x[:64, :64], t=16, l_blk=32,
+                              max_tiles_per_pass=4, sink=TopKSink(8),
+                              interpret=True), warmup=1, iters=1)
+    emit("kernels/executor_sink_topk", t_k * 1e6,
+         f"n=64;k=8;state_bytes={64 * 8 * (4 + 8)}")
 
     # triangular/banded grid savings (the C1 payoff)
     for s, blk, w in [(4096, 128, None), (32768, 128, None),

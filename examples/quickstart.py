@@ -1,20 +1,25 @@
-"""Quickstart: all-pairs Pearson correlation with LightPCC-on-TPU.
+"""Quickstart: pairwise correlation with LightPCC-on-TPU.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the three API levels:
-  1. one-call `allpairs_pcc` (triangular Pallas kernel under the hood),
-  2. the streamed multi-pass API for R too large for device memory,
-  3. the bijective job mapping itself (the paper's framework contribution).
+Shows the API levels of the `corr()` workload facade (docs/api.md):
+  1. symmetric all-pairs — one call, triangular Pallas kernel under the
+     hood (the paper's workload),
+  2. rectangular X-vs-Y cross-correlation (grid workload, second operand),
+  3. masked pairwise-complete correlation over missing data (`where=`),
+  4. streaming out-of-core assembly through a HostSink,
+  5. the bijective job mappings themselves (the paper's framework
+     contribution, one per workload).
 """
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import mapping, tiling
-from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
-                                 assemble_from_stream)
+from repro.core.api import corr
+from repro.core.measures import dense_reference_pair
 from repro.core.pcc import pearson_gemm
+from repro.core.sinks import HostSink
 
 
 def main() -> None:
@@ -22,24 +27,45 @@ def main() -> None:
     n, l = 96, 64
     x = jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
 
-    # 1. one call — transform (Eq. 4) + triangular tiles (Alg. 1) + assembly
-    r = allpairs_pcc(x, t=16, l_blk=32)
+    # 1. symmetric all-pairs — transform (Eq. 4) + triangular tiles
+    #    (Alg. 1) + assembly, in one call
+    r = corr(x, t=16, l_blk=32)
     print(f"R shape={r.shape}  diag_max_err="
           f"{float(jnp.max(jnp.abs(jnp.diag(r) - 1))):.2e}  "
           f"vs_oracle={float(jnp.max(jnp.abs(r - pearson_gemm(x)))):.2e}")
 
-    # 2. streamed multi-pass (paper Alg. 2: double-buffered passes)
-    plan = tiling.TilePlan.create(n, l, 16)
-    stream = allpairs_pcc_streamed(x, t=16, l_blk=32, max_tiles_per_pass=6)
-    r2 = assemble_from_stream(n, 16, plan.m, stream)
+    # 2. rectangular: m query profiles against the corpus — only the
+    #    (m_rows x m_cols) tile grid is computed, nothing mirrored
+    q = jnp.asarray(rng.standard_normal((24, l)).astype(np.float32))
+    rq = corr(q, x, t=16, l_blk=32)
+    print(f"rect shape={rq.shape}  vs_oracle="
+          f"{float(jnp.max(jnp.abs(rq - dense_reference_pair(q, x)))):.2e}")
+
+    # 3. masked: correlate despite missing samples — each pair is scored
+    #    over its common observed support (pairwise-complete)
+    xm = np.asarray(x).copy()
+    xm[rng.random(xm.shape) < 0.2] = np.nan
+    rm = corr(jnp.asarray(xm), where="nan", t=16, l_blk=32)
+    print(f"masked shape={rm.shape}  nan_frac=0.2  "
+          f"diag_max_err={float(jnp.max(jnp.abs(jnp.diag(rm) - 1))):.2e}")
+
+    # 4. streamed multi-pass out-of-core (paper Alg. 2: double-buffered
+    #    passes into a host-side sink; add path=... for a memmap with
+    #    durable per-pass checkpoints + corr(resume_from=...))
+    r2 = corr(x, t=16, l_blk=32, max_tiles_per_pass=6, sink=HostSink())
     print(f"streamed assembly matches: "
           f"{np.allclose(r2, np.asarray(r), atol=1e-5)}")
 
-    # 3. the bijection (Eq. 9/14/15): job id <-> upper-triangle coordinate
+    # 5. the bijections: job id <-> coordinate, one family per workload
+    plan = tiling.TilePlan.create(n, l, 16)
     for j in (0, 7, plan.total_tiles - 1):
         y, t_x = mapping.job_coord(plan.m, j)
         back = mapping.job_id(plan.m, y, t_x)
-        print(f"tile id {j:3d} <-> coord ({y}, {t_x})  roundtrip={back}")
+        print(f"tri  tile id {j:3d} <-> coord ({y}, {t_x})  roundtrip={back}")
+    grid = mapping.GridWorkload(m_rows=2, m_cols=plan.m)
+    ys, xs = grid.job_coord_batch([0, 5, grid.job_count - 1])
+    print(f"grid tile ids (0, 5, {grid.job_count - 1}) <-> coords "
+          f"{list(zip(ys.tolist(), xs.tolist()))}")
 
 
 if __name__ == "__main__":

@@ -1,29 +1,36 @@
 """repro.core — the paper's contribution as a composable JAX library.
 
 Public API:
-  mapping      bijective job-id <-> coordinate functions (C1)
+  api          corr(): the problem-centric workload facade (symmetric /
+               rectangular / masked) — THE entry point
+  mapping      bijective job-id <-> coordinate workloads (C1)
   pcc          PCC reformulation + reference implementations (C2)
-  measures     pluggable similarity measures (transform/epilogue pairs)
+  measures     pluggable similarity measures (transform/epilogue pairs,
+               masked pairwise-complete variants)
   tiling       tile plans, pass partitioning, PE ranges (C3, C4, C5)
-  allpairs     single-accelerator multi-pass driver (any measure)
-  distributed  shard_map mesh driver (any measure)
+  allpairs     the plan-driven executor + deprecated symmetric drivers
+  distributed  deprecated shard_map driver wrappers
   permutation  batched permutation testing
 """
 
-from repro.core import (allpairs, distributed, mapping, measures, pcc,
+from repro.core import (allpairs, api, distributed, mapping, measures, pcc,
                         permutation, plan, sinks, tiling)
 from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
                                  allpairs_similarity,
                                  allpairs_similarity_streamed, stream_tiles)
 from repro.core.allpairs import allpairs as allpairs_run
+from repro.core.api import PairwiseProblem, corr
 from repro.core.distributed import allpairs_pcc_sharded, allpairs_pcc_sharded_u
 from repro.core.measures import Measure, dense_reference
 from repro.core.pcc import pearson_gemm, pearson_literal, transform
 from repro.core.plan import ExecutionPlan
 from repro.core.sinks import (DenseSink, EdgeCountSink, HostSink,
-                              ReductionSink, TileSink)
+                              ReductionSink, TileSink, TopKSink)
 
 __all__ = [
+    "corr",
+    "PairwiseProblem",
+    "api",
     "allpairs",
     "allpairs_run",
     "stream_tiles",
@@ -41,6 +48,7 @@ __all__ = [
     "HostSink",
     "ReductionSink",
     "EdgeCountSink",
+    "TopKSink",
     "allpairs_pcc",
     "allpairs_pcc_streamed",
     "allpairs_similarity",

@@ -37,6 +37,7 @@ should call allpairs() directly.
 
 from __future__ import annotations
 
+import warnings
 from typing import Iterator, Optional, Tuple
 
 import jax
@@ -96,14 +97,20 @@ def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
 # ---------------------------------------------------------------------------
 
 
-def _local_launches(plan: ExecutionPlan, u_pad: Array):
-    """Single-device pass launches: consecutive spans of the full triangle,
-    each kernel sized to its actual tile count."""
-    lo = 0
-    for launch in plan.launch_sizes:
+def _local_launches(plan: ExecutionPlan, u_pad: Array,
+                    v_pad: Optional[Array] = None, start_pass: int = 0):
+    """Single-device pass launches: consecutive spans of the workload's
+    tile-id range, each kernel sized to its actual tile count.  start_pass
+    skips already-completed passes without computing them (checkpoint
+    resume)."""
+    grid_cols = plan.workload.grid_cols
+    sizes = plan.launch_sizes
+    lo = sum(sizes[:start_pass])
+    for launch in sizes[start_pass:]:
         buf = pcc_tiles(u_pad, lo, t=plan.t, l_blk=plan.l_blk,
                         pass_tiles=launch, interpret=plan.interpret,
-                        epilogue=plan.epilogue_spec)
+                        epilogue=plan.epilogue_spec,
+                        v_pad=v_pad, grid_cols=grid_cols)
         if not plan.fused and plan.measure.epilogue is not None:
             buf = plan.measure.epilogue(buf, plan.l)
         # local launches are exact-sized: every slot is valid
@@ -112,7 +119,8 @@ def _local_launches(plan: ExecutionPlan, u_pad: Array):
 
 
 def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
-                   shard_u: bool):
+                   shard_u: bool, v_pad: Optional[Array] = None,
+                   start_pass: int = 0):
     """shard_map pass launches (paper SSIII-D): all mesh axes flatten into
     one logical PE-rank axis; device `rank` owns the contiguous tile range
     [rank*per_dev, (rank+1)*per_dev) and each pass covers at most
@@ -124,9 +132,19 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
     all-gathered inside shard_map (for U too large to replicate from host;
     the gather re-runs per pass, so multi-pass shard_u trades gather
     traffic for output memory).
+
+    Rectangular workloads (v_pad given) replicate the second operand V
+    across the mesh per pass — V's tile blocks broadcast to whichever
+    device owns a job in their column, exactly as U does for rows.
+    shard_u stays a symmetric-workload option.
     """
     axes = tuple(mesh.axis_names)
+    grid_cols = plan.workload.grid_cols
     if shard_u:
+        if v_pad is not None:
+            raise ValueError("shard_u supports the symmetric workload only "
+                             "(one operand to shard); rectangular runs "
+                             "replicate both operands")
         rows = u_pad.shape[0]
         rows_pad = -(-rows // plan.p) * plan.p
         if rows_pad != rows:
@@ -135,6 +153,9 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
     else:
         in_spec = P(*([None] * u_pad.ndim))
     u_in = jax.device_put(u_pad, NamedSharding(mesh, in_spec))
+    rep_spec = P(None, None)
+    v_in = (None if v_pad is None
+            else jax.device_put(v_pad, NamedSharding(mesh, rep_spec)))
 
     fns = {}
 
@@ -142,7 +163,7 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
         if launch in fns:
             return fns[launch]
 
-        def device_fn(u: Array, off: Array) -> Array:
+        def compute(u: Array, v: Optional[Array], off: Array) -> Array:
             u_rep = u
             if shard_u:
                 # Gather minor axis first so the row order reassembles
@@ -158,16 +179,27 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
                              plan.total_tiles - 1)
             return pcc_tiles(u_rep, j0, t=plan.t, l_blk=plan.l_blk,
                              pass_tiles=launch, interpret=plan.interpret,
-                             epilogue=plan.epilogue_spec)
+                             epilogue=plan.epilogue_spec,
+                             v_pad=v, grid_cols=grid_cols)
 
-        fns[launch] = shard_map(device_fn, mesh=mesh,
-                                in_specs=(in_spec, P(None)),
-                                out_specs=P(axes), check_vma=False)
+        if v_pad is None:
+            def device_fn(u: Array, off: Array) -> Array:
+                return compute(u, None, off)
+            fns[launch] = shard_map(device_fn, mesh=mesh,
+                                    in_specs=(in_spec, P(None)),
+                                    out_specs=P(axes), check_vma=False)
+        else:
+            def device_fn2(u: Array, v: Array, off: Array) -> Array:
+                return compute(u, v, off)
+            fns[launch] = shard_map(device_fn2, mesh=mesh,
+                                    in_specs=(in_spec, rep_spec, P(None)),
+                                    out_specs=P(axes), check_vma=False)
         return fns[launch]
 
-    for k, launch in enumerate(plan.launch_sizes):
+    for k, launch in list(enumerate(plan.launch_sizes))[start_pass:]:
         off = jnp.full((1,), plan.pass_offset(k), jnp.int32)
-        buf = pass_fn(launch)(u_in, off)
+        args = (u_in, off) if v_in is None else (u_in, v_in, off)
+        buf = pass_fn(launch)(*args)
         if not plan.fused and plan.measure.epilogue is not None:
             buf = plan.measure.epilogue(buf, plan.l)
         # The raw sharded buffer is handed on as-is: clamped tail-device
@@ -180,14 +212,19 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
 
 
 def _stream(plan: ExecutionPlan, u_pad: Array, *, mesh: Optional[Mesh] = None,
-            shard_u: bool = False):
+            shard_u: bool = False, v_pad: Optional[Array] = None,
+            start_pass: int = 0):
     """Double-buffered pass stream of (ids, raw_buffer, sel, padded_ids):
     pulls (and thus async-dispatches) pass k+1 before yielding pass k, so a
     sink that blocks on host transfer overlaps the device's next pass
     (paper Alg. 2 signal/wait).  sel/padded_ids are None except on mesh
-    passes with clamped tail-device slots (see TileSink.consume_clamped)."""
-    launches = (_local_launches(plan, u_pad) if mesh is None
-                else _mesh_launches(plan, u_pad, mesh, shard_u))
+    passes with clamped tail-device slots (see TileSink.consume_clamped).
+    v_pad supplies the second operand of rectangular workloads; start_pass
+    resumes mid-run (already-completed passes are never dispatched)."""
+    launches = (_local_launches(plan, u_pad, v_pad, start_pass)
+                if mesh is None
+                else _mesh_launches(plan, u_pad, mesh, shard_u, v_pad,
+                                    start_pass))
     pending = None
     for item in launches:
         if pending is not None:
@@ -195,6 +232,44 @@ def _stream(plan: ExecutionPlan, u_pad: Array, *, mesh: Optional[Mesh] = None,
         pending = item
     if pending is not None:
         yield pending
+
+
+def run_sink(plan: ExecutionPlan, sink: Optional[TileSink], make_stream):
+    """The one sink-driving loop behind every entry point: open the sink,
+    recover its resume point, drain the (ids, buf, sel, padded) stream
+    that `make_stream(start_pass)` builds, committing each pass.
+
+    Sinks that persist progress (HostSink with a memmap path) report a
+    resume point via ``resume_pass()`` — completed passes are never
+    dispatched — and ``pass_complete(k)`` commits each pass as it lands.
+    getattr-with-default keeps duck-typed sinks written against the PR-3
+    contract (open/consume/result only) working unchanged."""
+    snk = sink if sink is not None else DenseSink()
+    snk.open(plan)
+    k0 = getattr(snk, "resume_pass", lambda: 0)()
+    pass_complete = getattr(snk, "pass_complete", lambda k: None)
+    k = k0
+    for ids, buf, sel, padded in make_stream(k0):
+        if sel is None:
+            snk.consume(ids, buf)
+        else:
+            snk.consume_clamped(padded, sel, ids, buf)
+        pass_complete(k)
+        k += 1
+    return snk.result()
+
+
+def execute_plan(plan: ExecutionPlan, u_pad: Array,
+                 v_pad: Optional[Array] = None, *,
+                 sink: Optional[TileSink] = None,
+                 mesh: Optional[Mesh] = None,
+                 shard_u: bool = False):
+    """Run a prepared plan end to end: stream every remaining pass into
+    the sink and finalise (see run_sink for the resume/commit protocol)."""
+    return run_sink(
+        plan, sink,
+        lambda k0: _stream(plan, u_pad, v_pad=v_pad, mesh=mesh,
+                           shard_u=shard_u, start_pass=k0))
 
 
 def stream_tiles(
@@ -264,7 +339,10 @@ def allpairs(
     compute_dtype=None,
 ):
     """All-pairs similarity: plan -> executor -> sink, on one device or a
-    mesh.  THE entry point; the historical drivers are wrappers over it.
+    mesh.  Since the workload facade (core/api.py) this is the *symmetric
+    spelling* of ``corr(x, ...)`` — bit-identical delegation; new code
+    should call ``corr`` directly (it also serves rectangular X-vs-Y and
+    masked workloads).
 
     measure: any registered measure name or Measure instance.
     sink:    output handling (core/sinks.py) — default DenseSink returns
@@ -282,25 +360,30 @@ def allpairs(
              interpret elsewhere); fuse_epilogue / compute_dtype as in
              prepare().
     """
-    p = 1 if mesh is None else int(np.prod(mesh.devices.shape))
-    plan = ExecutionPlan.create(
-        x.shape[0], x.shape[1], t=t, l_blk=l_blk, measure=measure, p=p,
-        max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
-        clip=clip, fuse_epilogue=fuse_epilogue, compute_dtype=compute_dtype)
-    snk = sink if sink is not None else DenseSink()
-    snk.open(plan)
-    for ids, buf, sel, padded in _stream(plan, plan.prepare(x), mesh=mesh,
-                                         shard_u=shard_u):
-        if sel is None:
-            snk.consume(ids, buf)
-        else:
-            snk.consume_clamped(padded, sel, ids, buf)
-    return snk.result()
+    from repro.core.api import corr  # lazy: api builds on this module
+    return corr(x, measure=measure, sink=sink, mesh=mesh, shard_u=shard_u,
+                t=t, l_blk=l_blk, max_tiles_per_pass=max_tiles_per_pass,
+                interpret=interpret, clip=clip, fuse_epilogue=fuse_epilogue,
+                compute_dtype=compute_dtype)
 
 
 # ---------------------------------------------------------------------------
 # Legacy drivers: thin wrappers, kept bit-identical (deprecated entry points)
 # ---------------------------------------------------------------------------
+
+
+def warn_deprecated_driver(name: str, replacement: str) -> None:
+    """One DeprecationWarning per legacy-driver call, naming corr().
+
+    stacklevel=3 points at the *user's* call site (user -> wrapper ->
+    here).  Shared by the tiled/streamed wrappers and the sharded drivers
+    (core/distributed.py) so the wording, category, and count (exactly one
+    per call — the wrapped corr()/stream_tiles() path never warns again)
+    stay uniform and testable."""
+    warnings.warn(
+        f"{name} is deprecated; use repro.core.api.corr({replacement}) — "
+        f"outputs are bit-identical through the unified executor",
+        DeprecationWarning, stacklevel=3)
 
 
 def allpairs_pcc(
@@ -318,9 +401,10 @@ def allpairs_pcc(
     """All-pairs similarity via the triangular-grid Pallas kernel.
     Returns the (n, n) similarity matrix (R for the default Pearson).
 
-    Deprecated spelling of ``allpairs(x, ...)`` (kept for history/paper
+    Deprecated spelling of ``corr(x, ...)`` (kept for history/paper
     fidelity; bit-identical through the unified executor).
     """
+    warn_deprecated_driver("allpairs_pcc", "x, measure=...")
     return allpairs(x, measure=measure, t=t, l_blk=l_blk,
                     max_tiles_per_pass=max_tiles_per_pass,
                     interpret=interpret, clip=clip,
@@ -344,8 +428,9 @@ def allpairs_pcc_streamed(
     yields (tile_ids, tiles) per pass as *host* numpy arrays, while the
     next pass is already dispatched on device (async dispatch =
     signal/wait).  The caller assembles (or reduces) the stream — new code
-    should pass a TileSink to ``allpairs`` instead.
+    should pass a TileSink to ``corr`` instead.
     """
+    warn_deprecated_driver("allpairs_pcc_streamed", "x, sink=HostSink(...)")
     for ids, buf in stream_tiles(
             x, t=t, l_blk=l_blk, measure=measure,
             max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
@@ -392,6 +477,8 @@ allpairs_similarity_streamed = allpairs_pcc_streamed
 
 __all__ = [
     "allpairs",
+    "execute_plan",
+    "run_sink",
     "stream_tiles",
     "prepare",
     "pad_u",

@@ -1,0 +1,317 @@
+"""`corr()`: one problem-centric facade over every pairwise workload.
+
+The paper's bijective job<->coordinate framework (SSIII-B) was derived for
+*symmetric* all-pairs, and the historical drivers hardwired that shape:
+one operand, n x n output, upper triangle mirrored.  The dominant
+production query shapes are wider (cf. CoMet, arXiv:1705.08213 /
+arXiv:1705.08210):
+
+  * rectangular — "correlate these m query profiles against the corpus":
+    X (n_rows, l) vs Y (n_cols, l), full (n_rows, n_cols) output, no
+    mirror;
+  * masked — "correlate despite missing samples": per-entry validity
+    masks, pairwise-complete statistics over each pair's common support.
+
+This module closes the gap without a second engine.  A frozen
+:class:`PairwiseProblem` captures *what* is being asked (operands,
+workload, measure, mask policy); :func:`corr` resolves it onto the
+existing plan/executor/sink core:
+
+    corr(x)                      symmetric all-pairs — bit-identical to the
+                                 historical allpairs(x) for every measure
+    corr(x, y)                   rectangular X-vs-Y over the grid bijection
+                                 (mapping.GridWorkload, second-operand
+                                 kernel block specs)
+    corr(x, where="nan")         pairwise-complete masked similarity: the
+                                 masked measure's component GEMMs (values,
+                                 ones/counts, cross sums — core/measures.py)
+                                 each ride the engine as a plain workload
+                                 and combine elementwise per pass
+    corr(x, sink=HostSink(path=p))           out-of-core assembly with
+    corr(x, resume_from=p)                   durable per-pass checkpoints
+
+Execution knobs (sink=, mesh=, shard_u=, t=, max_tiles_per_pass=,
+interpret=, compute_dtype=, ...) are orthogonal to the problem and keep
+their plan/executor semantics.  The legacy drivers (allpairs_pcc*,
+allpairs_pcc_sharded*) are deprecated wrappers over this facade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import measures
+from repro.core.allpairs import _stream, execute_plan, run_sink
+from repro.core.plan import ExecutionPlan, pad_operands
+from repro.core.sinks import HostSink, TileSink
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+
+Array = jax.Array
+MaskLike = Union[None, str, np.ndarray, Array, Tuple]
+
+
+def _as_mask(mask, data: Array, side: str) -> Array:
+    m = jnp.asarray(mask)
+    if m.shape != tuple(data.shape):
+        raise ValueError(
+            f"where mask for {side} has shape {m.shape}, expected "
+            f"{tuple(data.shape)}")
+    return m.astype(bool)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PairwiseProblem:
+    """What is being asked, independent of how it executes.
+
+    operands:    x (n_rows, l) and optional y (n_cols, l) — y=None is the
+                 symmetric all-pairs workload over x alone.
+    measure:     resolved Measure; masked runs additionally resolve the
+                 pairwise-complete MaskedMeasure of the same name.
+    mask policy: mask_x / mask_y are boolean validity masks (True = sample
+                 present), or None for fully observed.  Built by `create`
+                 from ``where=``: None (unmasked), "nan" (infer validity
+                 from NaNs), a boolean array for x, or an (x_mask, y_mask)
+                 tuple for rectangular problems.
+    """
+
+    x: Array
+    y: Optional[Array]
+    measure: measures.Measure
+    mask_x: Optional[Array] = None
+    mask_y: Optional[Array] = None
+
+    @property
+    def symmetric(self) -> bool:
+        return self.y is None
+
+    @property
+    def masked(self) -> bool:
+        return self.mask_x is not None
+
+    @property
+    def n_rows(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return (self.x if self.y is None else self.y).shape[0]
+
+    @property
+    def l(self) -> int:
+        return self.x.shape[1]
+
+    @classmethod
+    def create(cls, x: Array, y: Optional[Array] = None, *,
+               measure: measures.MeasureLike = "pearson",
+               where: MaskLike = None) -> "PairwiseProblem":
+        x = jnp.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"x must be (n, l), got shape {x.shape}")
+        if y is not None:
+            y = jnp.asarray(y)
+            if y.ndim != 2 or y.shape[1] != x.shape[1]:
+                raise ValueError(
+                    f"y must be (n_cols, l={x.shape[1]}), got shape "
+                    f"{None if y is None else y.shape}")
+        meas = measures.get(measure)
+        mask_x = mask_y = None
+        if where is not None:
+            # resolving the masked variant up front fails fast for
+            # measures with no pairwise-complete form (rank measures)
+            measures.get_masked(meas)
+            if isinstance(where, str):
+                if where != "nan":
+                    raise ValueError(
+                        f"where={where!r} not understood; pass a boolean "
+                        f"mask, an (x_mask, y_mask) tuple, or 'nan'")
+                mask_x = ~jnp.isnan(x)
+                mask_y = None if y is None else ~jnp.isnan(y)
+            elif isinstance(where, tuple):
+                wx, wy = where
+                mask_x = (~jnp.isnan(x) if wx is None
+                          else _as_mask(wx, x, "x"))
+                if y is None:
+                    if wy is not None:
+                        raise ValueError(
+                            "symmetric problem (y=None) takes a single "
+                            "mask, not an (x_mask, y_mask) tuple")
+                    mask_y = None
+                else:
+                    mask_y = (~jnp.isnan(y) if wy is None
+                              else _as_mask(wy, y, "y"))
+            else:
+                if y is not None:
+                    raise ValueError(
+                        "rectangular masked problems need masks for both "
+                        "sides: pass where=(x_mask, y_mask) (either may be "
+                        "None to infer from NaNs)")
+                mask_x = _as_mask(where, x, "x")
+        return cls(x=x, y=y, measure=meas, mask_x=mask_x, mask_y=mask_y)
+
+
+def corr(
+    x: Array,
+    y: Optional[Array] = None,
+    *,
+    measure: measures.MeasureLike = "pearson",
+    where: MaskLike = None,
+    sink: Optional[TileSink] = None,
+    mesh: Optional[Mesh] = None,
+    shard_u: bool = False,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    max_tiles_per_pass: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    clip: bool = True,
+    fuse_epilogue: bool = True,
+    compute_dtype=None,
+    resume_from: Optional[str] = None,
+):
+    """Pairwise similarity for any workload shape: plan -> executor -> sink.
+
+    x:       (n_rows, l) variables.
+    y:       optional (n_cols, l) second operand — rectangular X-vs-Y
+             cross-correlation over the full tile grid (row-major
+             bijection; nothing mirrored).  y=None is the symmetric
+             all-pairs workload (upper-triangle bijection + mirror),
+             bit-identical to the historical ``allpairs(x)``.
+    measure: any registered measure name or Measure (core/measures.py).
+    where:   mask policy for pairwise-complete (missing-data) similarity:
+             "nan" infers per-entry validity from NaNs; a boolean array
+             masks x (symmetric problems); an (x_mask, y_mask) tuple masks
+             both sides of a rectangular problem (either entry None =
+             infer from NaNs).  Each pair is scored over its *common*
+             valid samples via the masked measure's component GEMMs —
+             effective sample counts come from a parallel ones-GEMM.
+             Pairs with fewer than 2 common samples (or degenerate
+             common-support variance) score 0.  Supported for measures
+             with a registered pairwise-complete variant
+             (pearson/cosine/covariance).
+    sink:    output handling (core/sinks.py) — default DenseSink returns
+             the dense device matrix; HostSink assembles out-of-core to
+             host/memmap (with durable per-pass checkpoints when given a
+             path); TopKSink keeps the k strongest |r| per row;
+             ReductionSink/EdgeCountSink stream-reduce.
+    mesh:    a jax Mesh to shard over (paper SSIII-D); shard_u row-shards
+             the (symmetric) operand instead of replicating it.
+    resume_from: path of a checkpointed HostSink memmap from an
+             interrupted run — completed passes are skipped (the persisted
+             plan spec must match this call).  Implies
+             ``sink=HostSink(path=resume_from, resume=True)`` when no sink
+             is given.
+    t / l_blk / max_tiles_per_pass / interpret / clip / fuse_epilogue /
+    compute_dtype keep their ExecutionPlan semantics.
+    """
+    problem = PairwiseProblem.create(x, y, measure=measure, where=where)
+
+    if resume_from is not None:
+        if sink is None:
+            sink = HostSink(path=resume_from, resume=True)
+        elif isinstance(sink, HostSink) and sink._path == resume_from:
+            sink._resume = True
+        else:
+            raise ValueError(
+                "resume_from requires the default HostSink or a HostSink "
+                "whose path matches resume_from")
+
+    p = 1 if mesh is None else int(np.prod(mesh.devices.shape))
+    if problem.masked:
+        if compute_dtype is not None:
+            raise ValueError(
+                "compute_dtype narrowing is not supported with where= "
+                "(component GEMMs accumulate counts and sums that must "
+                "stay exact f32)")
+        if shard_u:
+            raise ValueError("shard_u is not supported with where= (the "
+                             "component GEMMs are rectangular workloads)")
+        return _run_masked(problem, sink=sink, mesh=mesh, p=p, t=t,
+                           l_blk=l_blk, max_tiles_per_pass=max_tiles_per_pass,
+                           interpret=interpret, clip=clip)
+
+    if problem.symmetric:
+        plan = ExecutionPlan.create(
+            problem.n_rows, problem.l, t=t, l_blk=l_blk,
+            measure=problem.measure, p=p,
+            max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
+            clip=clip, fuse_epilogue=fuse_epilogue,
+            compute_dtype=compute_dtype)
+        return execute_plan(plan, plan.prepare(problem.x), sink=sink,
+                            mesh=mesh, shard_u=shard_u)
+
+    plan = ExecutionPlan.create(
+        problem.n_rows, problem.l, n_cols=problem.n_cols, t=t, l_blk=l_blk,
+        measure=problem.measure, p=p,
+        max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
+        clip=clip, fuse_epilogue=fuse_epilogue, compute_dtype=compute_dtype)
+    u_pad, v_pad = plan.prepare_pair(problem.x, problem.y)
+    return execute_plan(plan, u_pad, v_pad, sink=sink, mesh=mesh,
+                        shard_u=shard_u)
+
+
+def _run_masked(problem: PairwiseProblem, *, sink, mesh, p, t, l_blk,
+                max_tiles_per_pass, interpret, clip):
+    """Masked execution: one engine run per component GEMM, combined
+    elementwise pass-by-pass.
+
+    Every component — including the symmetric case — runs the full
+    rectangular grid, because the cross terms (values x mask) are
+    non-symmetric even for y == x.  The component streams share one plan
+    (same geometry, raw-dot measure), so their pass boundaries, tile ids,
+    and clamped-slot selections line up exactly; zip-ing them keeps device
+    memory at #components pass buffers and lets the combined tiles flow
+    into any TileSink (run_sink: checkpointing included).
+    """
+    mm = measures.get_masked(problem.measure)
+    ops_x = measures.masked_operands(problem.x, problem.mask_x)
+    ops_y = (ops_x if problem.symmetric
+             else measures.masked_operands(problem.y, problem.mask_y))
+
+    plan = ExecutionPlan.create(
+        problem.n_rows, problem.l, n_cols=problem.n_cols, t=t, l_blk=l_blk,
+        measure="dot", p=p, max_tiles_per_pass=max_tiles_per_pass,
+        interpret=interpret, clip=False)
+    pad_x = {k: pad_operands(v, t, l_blk) for k, v in ops_x.items()}
+    pad_y = (pad_x if ops_y is ops_x
+             else {k: pad_operands(v, t, l_blk) for k, v in ops_y.items()})
+
+    # The sink sees the *masked* measure's identity (name + clip) and the
+    # problem's symmetry (symmetric_grid: the workload is a full square,
+    # but diagonal cells are still self-pairs — TopKSink/EdgeCountSink key
+    # on it), so checkpoint specs distinguish masked runs, bounded results
+    # clip iff requested (fused=False: combine leaves values unclipped,
+    # the sink applies the clip like any unfused run), and pair-semantic
+    # sinks behave as on the triangle.
+    sink_measure = measures.Measure(mm.name, measures.identity_transform,
+                                    None, mm.clip)
+    sink_plan = dataclasses.replace(plan, measure=sink_measure, fused=False,
+                                    clip=clip,
+                                    symmetric_grid=problem.symmetric)
+
+    def make_stream(k0):
+        streams = [
+            _stream(plan, pad_x[MASKED_ROW[c]], v_pad=pad_y[MASKED_COL[c]],
+                    mesh=mesh, start_pass=k0)
+            for c in mm.components
+        ]
+        for items in zip(*streams):
+            ids, _, sel, padded = items[0]
+            parts = {c: buf
+                     for c, (_, buf, _, _) in zip(mm.components, items)}
+            yield ids, mm.combine(parts), sel, padded
+
+    return run_sink(sink_plan, sink, make_stream)
+
+
+MASKED_ROW = {c: rk for c, (rk, _) in
+              measures.MASKED_COMPONENT_OPERANDS.items()}
+MASKED_COL = {c: ck for c, (_, ck) in
+              measures.MASKED_COMPONENT_OPERANDS.items()}
+
+
+__all__ = ["PairwiseProblem", "corr"]

@@ -38,7 +38,7 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core import measures
-from repro.core.allpairs import allpairs
+from repro.core.allpairs import allpairs, warn_deprecated_driver
 from repro.core.plan import tiles_per_device
 from repro.core.sinks import TileSink
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
@@ -66,6 +66,7 @@ def allpairs_pcc_sharded(
     stream to the sink pass by pass — the historical (p*per_dev, t, t)
     global array is no longer materialised.
     """
+    warn_deprecated_driver("allpairs_pcc_sharded", "x, mesh=mesh, ...")
     return allpairs(x, mesh=mesh, measure=measure, sink=sink, t=t,
                     l_blk=l_blk, max_tiles_per_pass=max_tiles_per_pass,
                     interpret=interpret, fuse_epilogue=fuse_epilogue,
@@ -91,6 +92,8 @@ def allpairs_pcc_sharded_u(
     semantics identical to allpairs_pcc_sharded.  With multiple passes the
     gather re-runs per pass (it is amortised over the pass's whole tile
     range); the historical single-pass behaviour is the default."""
+    warn_deprecated_driver("allpairs_pcc_sharded_u",
+                           "x, mesh=mesh, shard_u=True, ...")
     return allpairs(x, mesh=mesh, shard_u=True, measure=measure, sink=sink,
                     t=t, l_blk=l_blk, max_tiles_per_pass=max_tiles_per_pass,
                     interpret=interpret, fuse_epilogue=fuse_epilogue,

@@ -29,6 +29,7 @@ variant (beyond-paper) used for sliding-window-attention job matrices.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 from typing import Tuple
@@ -136,6 +137,33 @@ def square_job_coord(n: int, j: int) -> Tuple[int, int]:
     if not (0 <= j < n * n):
         raise ValueError(f"job id {j} out of range for n={n}")
     return j // n, j % n
+
+
+# -- rectangular (grid) mapping: the Eq. 7/8 family for r x c job matrices --
+
+
+def grid_job_id(rows: int, cols: int, y: int, x: int) -> int:
+    """Row-major job id in an r x c rectangular job matrix (Eq. 7 family)."""
+    if not (0 <= y < rows and 0 <= x < cols):
+        raise ValueError(f"(y={y}, x={x}) outside {rows}x{cols} job matrix")
+    return y * cols + x
+
+
+def grid_job_coord(rows: int, cols: int, j: int) -> Tuple[int, int]:
+    """Inverse row-major rectangular mapping (Eq. 8 family)."""
+    if not (0 <= j < rows * cols):
+        raise ValueError(f"job id {j} out of range for {rows}x{cols}")
+    return j // cols, j % cols
+
+
+def grid_job_coord_batch(rows: int, cols: int, ids) -> Tuple[np.ndarray,
+                                                             np.ndarray]:
+    """Vectorised exact inverse of the rectangular mapping, host numpy."""
+    j = np.asarray(ids, dtype=np.int64)
+    if j.size and (j.min() < 0 or j.max() >= rows * cols):
+        bad = j[(j < 0) | (j >= rows * cols)][0]
+        raise ValueError(f"job id {bad} out of range for {rows}x{cols}")
+    return j // cols, j % cols
 
 
 # -- banded variant (beyond-paper): jobs with y <= x < y + w ----------------
@@ -322,6 +350,78 @@ def job_coord_f32(n: int, j):
     return y, x
 
 
+# ---------------------------------------------------------------------------
+# Workloads: the bijection families behind one small protocol
+# ---------------------------------------------------------------------------
+# The plan/executor core is workload-shaped: everything it decides (pass
+# partitioning, device ranges, pass selections, sink assembly) depends only
+# on `job_count` and the id -> (row_tile, col_tile) inverse.  A Workload
+# packages one bijection family behind that surface:
+#
+#   TriangularWorkload  symmetric all-pairs over one operand — the paper's
+#                       Eq. 9/14 triangle (job_count = m(m+1)/2), mirrored
+#                       into the lower half at assembly (needs_symmetrize).
+#   GridWorkload        rectangular X-vs-Y cross-correlation — row-major
+#                       Eq. 7/8 family over an m_rows x m_cols tile grid;
+#                       nothing to mirror.
+#
+# Both are frozen/hashable so an ExecutionPlan stays a value object.
+
+
+@dataclasses.dataclass(frozen=True)
+class TriangularWorkload:
+    """Upper-triangle (incl. diagonal) tile jobs of a symmetric m x m grid."""
+
+    m: int
+
+    needs_symmetrize = True
+
+    @property
+    def m_rows(self) -> int:
+        return self.m
+
+    @property
+    def m_cols(self) -> int:
+        return self.m
+
+    @property
+    def job_count(self) -> int:
+        return tri_count(self.m)
+
+    @property
+    def grid_cols(self):
+        """Kernel hookup: None selects the triangular index maps."""
+        return None
+
+    def job_coord_batch(self, ids) -> Tuple[np.ndarray, np.ndarray]:
+        return job_coord_batch(self.m, ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridWorkload:
+    """All m_rows x m_cols tile jobs of a rectangular X-vs-Y grid,
+    numbered row-major.  Also covers full-square non-symmetric self
+    products (m_rows == m_cols with distinct operands), which the masked
+    measures' cross-GEMM components need."""
+
+    m_rows: int
+    m_cols: int
+
+    needs_symmetrize = False
+
+    @property
+    def job_count(self) -> int:
+        return self.m_rows * self.m_cols
+
+    @property
+    def grid_cols(self) -> int:
+        """Kernel hookup: the static column count of the grid index maps."""
+        return self.m_cols
+
+    def job_coord_batch(self, ids) -> Tuple[np.ndarray, np.ndarray]:
+        return grid_job_coord_batch(self.m_rows, self.m_cols, ids)
+
+
 __all__ = [
     "tri_count",
     "f_n",
@@ -330,6 +430,11 @@ __all__ = [
     "job_coord_batch",
     "square_job_id",
     "square_job_coord",
+    "grid_job_id",
+    "grid_job_coord",
+    "grid_job_coord_batch",
+    "TriangularWorkload",
+    "GridWorkload",
     "band_count",
     "band_job_id",
     "band_job_coord",

@@ -229,6 +229,15 @@ class Measure:
             vals = jnp.clip(vals, *self.clip)
         return vals
 
+def identity_transform(x: Array, *, dtype=None) -> Array:
+    """Pass-through row transform: the kernel computes raw inner products.
+    Used by the "dot" measure and by the masked measures' component GEMMs
+    (whose operands are precomputed host-side)."""
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, l) matrix, got shape {x.shape}")
+    return x.astype(dtype or x.dtype)
+
+
 PEARSON = Measure("pearson", pcc.transform, None, (-1.0, 1.0))
 SPEARMAN = Measure("spearman", spearman_transform, None, (-1.0, 1.0))
 COSINE = Measure("cosine", l2_normalize_rows, None, (-1.0, 1.0))
@@ -238,6 +247,7 @@ KENDALL = Measure("kendall", pair_sign_transform, _kendall_epilogue,
                   (-1.0, 1.0), epilogue_div=_kendall_div, exact_int8=True)
 KENDALL_B = Measure("kendall_tau_b", pair_sign_tie_scaled_transform, None,
                     (-1.0, 1.0))
+DOT = Measure("dot", identity_transform, None, None)
 
 _REGISTRY: Dict[str, Measure] = {
     "pearson": PEARSON,
@@ -250,6 +260,7 @@ _REGISTRY: Dict[str, Measure] = {
     "kendall_tau_a": KENDALL,
     "kendall_tau_b": KENDALL_B,
     "kendall_b": KENDALL_B,
+    "dot": DOT,
 }
 
 MeasureLike = Union[str, Measure]
@@ -309,6 +320,172 @@ def dense_reference(x: Array, measure: MeasureLike = "pearson", *,
     return meas.finalize(s, l, clip=clip)
 
 
+def dense_reference_pair(x: Array, y: Array,
+                         measure: MeasureLike = "pearson", *,
+                         clip: bool = True) -> Array:
+    """Rectangular (n_rows, n_cols) cross-similarity via dense U @ V^T —
+    oracle for the grid-workload tiled path.  Row transforms are per-row
+    maps, so X and Y transform independently."""
+    meas = get(measure)
+    l = x.shape[1]
+    if y.shape[1] != l:
+        raise ValueError(f"sample counts differ: x has l={l}, y has "
+                         f"l={y.shape[1]}")
+    u = meas.transform(x, dtype=jnp.promote_types(x.dtype, jnp.float32))
+    v = meas.transform(y, dtype=jnp.promote_types(y.dtype, jnp.float32))
+    s = jnp.dot(u, v.T, preferred_element_type=jnp.float32)
+    return meas.finalize(s, l, clip=clip)
+
+
+# ---------------------------------------------------------------------------
+# Masked measures: pairwise-complete similarity under missing data
+# ---------------------------------------------------------------------------
+# CoMet-style decomposition (arXiv:1705.08213, arXiv:1705.08210): with
+# missing samples zeroed (A = x * mask) the pairwise-complete statistics of
+# every pair factor into a handful of GEMMs over derived operands —
+#
+#   sxy = A  @ B^T    sum of products over the common support
+#   n   = Mx @ My^T   per-pair effective sample count (the "ones-GEMM")
+#   sx  = A  @ My^T   sum of x_i over the common support
+#   sy  = Mx @ B^T    sum of y_j over the common support
+#   qx  = A² @ My^T   sum of x_i² over the common support
+#   qy  = Mx @ B²^T   sum of y_j² over the common support
+#
+# — each of which is a plain rectangular workload for the tiled engine (the
+# cross terms A@M^T are non-symmetric even for y == x, which is exactly why
+# the grid bijection exists).  A MaskedMeasure names the components it needs
+# and combines them elementwise per tile, so masked runs stream through the
+# same executor/sink machinery with #components kernel passes and no change
+# to the kernel itself.
+#
+# Degenerate pairs (fewer than 2 common samples, or zero variance /norm on
+# the common support) score 0, matching the engine's existing conventions;
+# scipy returns NaN there (tests mask those entries out).
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedMeasure:
+    """A pairwise-complete similarity as component GEMMs + elementwise
+    combine.  `components` ⊆ {sxy, n, sx, sy, qx, qy}; `combine` maps the
+    per-tile component dict to finished similarity values."""
+
+    name: str
+    base: str                      # unmasked counterpart (registry name)
+    components: Tuple[str, ...]
+    combine: Callable[[Dict[str, Array]], Array]
+    clip: Optional[Tuple[float, float]] = None
+
+
+# Combines return *unclipped* values; the bounded-measure clip (guarding
+# float drift past ±1) is applied by the sink iff the caller asked for it,
+# exactly like the unmasked unfused path.
+
+
+def _masked_pearson_combine(p: Dict[str, Array]) -> Array:
+    n, sxy, sx, sy = p["n"], p["sxy"], p["sx"], p["sy"]
+    cov = n * sxy - sx * sy
+    vx = n * p["qx"] - sx * sx
+    vy = n * p["qy"] - sy * sy
+    den = jnp.sqrt(jnp.maximum(vx, 0.0) * jnp.maximum(vy, 0.0))
+    ok = (n >= 2.0) & (den > 0.0)
+    return jnp.where(ok, cov / jnp.where(ok, den, 1.0), 0.0)
+
+
+def _masked_cosine_combine(p: Dict[str, Array]) -> Array:
+    den = jnp.sqrt(jnp.maximum(p["qx"], 0.0) * jnp.maximum(p["qy"], 0.0))
+    ok = den > 0.0
+    return jnp.where(ok, p["sxy"] / jnp.where(ok, den, 1.0), 0.0)
+
+
+def _masked_cov_combine(p: Dict[str, Array]) -> Array:
+    n = p["n"]
+    ok = n >= 2.0
+    safe_n = jnp.where(ok, n, 1.0)
+    c = (p["sxy"] - p["sx"] * p["sy"] / safe_n) / jnp.maximum(safe_n - 1.0,
+                                                              1.0)
+    return jnp.where(ok, c, 0.0)
+
+
+MASKED_PEARSON = MaskedMeasure(
+    "pearson_complete", "pearson", ("sxy", "n", "sx", "sy", "qx", "qy"),
+    _masked_pearson_combine, (-1.0, 1.0))
+MASKED_COSINE = MaskedMeasure(
+    "cosine_complete", "cosine", ("sxy", "qx", "qy"),
+    _masked_cosine_combine, (-1.0, 1.0))
+MASKED_COVARIANCE = MaskedMeasure(
+    "covariance_complete", "covariance", ("sxy", "n", "sx", "sy"),
+    _masked_cov_combine, None)
+
+_MASKED_REGISTRY: Dict[str, MaskedMeasure] = {
+    "pearson": MASKED_PEARSON,
+    "pcc": MASKED_PEARSON,
+    "pearson_complete": MASKED_PEARSON,
+    "cosine": MASKED_COSINE,
+    "cosine_complete": MASKED_COSINE,
+    "covariance": MASKED_COVARIANCE,
+    "cov": MASKED_COVARIANCE,
+    "covariance_complete": MASKED_COVARIANCE,
+}
+
+
+def get_masked(measure: MeasureLike) -> MaskedMeasure:
+    """Resolve the pairwise-complete variant of a measure for masked runs
+    (``corr(..., where=)``)."""
+    if isinstance(measure, MaskedMeasure):
+        return measure
+    name = measure.name if isinstance(measure, Measure) else measure
+    try:
+        return _MASKED_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"measure {name!r} has no pairwise-complete (masked) variant; "
+            f"available: {tuple(sorted(set(m.name for m in _MASKED_REGISTRY.values())))} "
+            f"(rank-based measures need joint re-ranking per pair, which "
+            f"does not factor into per-row GEMM operands)") from None
+
+
+def masked_operands(x: Array, mask: Array) -> Dict[str, Array]:
+    """Derived row operands of one masked side: zeroed values A, the 0/1
+    mask M, and the zeroed squares A² (f32)."""
+    m = jnp.asarray(mask).astype(jnp.float32)
+    a = jnp.where(m > 0, jnp.nan_to_num(x.astype(jnp.float32)), 0.0)
+    return {"a": a, "m": m, "a2": a * a}
+
+
+# component name -> (row-side operand key, col-side operand key)
+MASKED_COMPONENT_OPERANDS: Dict[str, Tuple[str, str]] = {
+    "sxy": ("a", "a"),
+    "n": ("m", "m"),
+    "sx": ("a", "m"),
+    "sy": ("m", "a"),
+    "qx": ("a2", "m"),
+    "qy": ("m", "a2"),
+}
+
+
+def masked_dense_reference(x: Array, mask_x: Array,
+                           y: Optional[Array] = None,
+                           mask_y: Optional[Array] = None,
+                           measure: MeasureLike = "pearson", *,
+                           clip: bool = True) -> Array:
+    """Dense pairwise-complete oracle: the same component GEMMs as the
+    tiled masked path, computed with plain jnp.dot.  y=None scores x
+    against itself (full square — the cross components are non-symmetric
+    even then)."""
+    mm = get_masked(measure)
+    ox = masked_operands(x, mask_x)
+    oy = ox if y is None else masked_operands(y, mask_y)
+    parts = {}
+    for comp in mm.components:
+        rk, ck = MASKED_COMPONENT_OPERANDS[comp]
+        parts[comp] = jnp.dot(ox[rk], oy[ck].T,
+                              preferred_element_type=jnp.float32)
+    r = mm.combine(parts)
+    if clip and mm.clip is not None:
+        r = jnp.clip(r, *mm.clip)
+    return r
+
+
 def kendall_tau_a_literal(x: Array) -> np.ndarray:
     """O(n^2 l^2) literal Kendall tau-a reference (float64, host).
 
@@ -327,6 +504,7 @@ def kendall_tau_a_literal(x: Array) -> np.ndarray:
 
 __all__ = [
     "Measure",
+    "MaskedMeasure",
     "MeasureLike",
     "EpilogueSpec",
     "PEARSON",
@@ -335,16 +513,26 @@ __all__ = [
     "COVARIANCE",
     "KENDALL",
     "KENDALL_B",
+    "DOT",
+    "MASKED_PEARSON",
+    "MASKED_COSINE",
+    "MASKED_COVARIANCE",
+    "MASKED_COMPONENT_OPERANDS",
     "get",
+    "get_masked",
     "register",
     "available",
     "resolve_fusion",
+    "identity_transform",
     "rank_rows",
     "spearman_transform",
     "l2_normalize_rows",
     "center_rows",
     "pair_sign_transform",
     "pair_sign_tie_scaled_transform",
+    "masked_operands",
+    "masked_dense_reference",
     "dense_reference",
+    "dense_reference_pair",
     "kendall_tau_a_literal",
 ]

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import measures, tiling
+from repro.core import mapping, measures, tiling
 from repro.kernels.pcc_tile import (DEFAULT_LBLK, DEFAULT_TILE, EpilogueSpec)
 
 Array = jax.Array
@@ -73,6 +73,25 @@ class ExecutionPlan:
     p: int                               # devices (flat mesh size; 1 = local)
     per_dev: int                         # ceil(total_tiles / p)
     max_tiles_per_pass: int              # per-device pass bound (C4)
+    # Workload: which bijection family numbers the tile jobs.  Triangular
+    # (symmetric all-pairs over one operand, the paper's Eq. 9/14) unless
+    # `create` was given n_cols (rectangular X-vs-Y grid, row-major Eq. 7/8
+    # family).  Every pass-partition/device-range/selection method below
+    # routes through workload.job_count; sinks route assembly through
+    # workload.job_coord_batch / needs_symmetrize.
+    workload: object = None
+    tile_c: Optional[tiling.TilePlan] = None  # column-operand geometry (rect)
+    # A grid workload whose rows and columns are the SAME variable set
+    # (masked symmetric runs: the cross-component GEMMs force the full
+    # square, but the output diagonal is still "self vs self").  Sinks with
+    # pair semantics (TopKSink, EdgeCountSink) key on `symmetric_problem`,
+    # not on the workload shape.
+    symmetric_grid: bool = False
+
+    def __post_init__(self):
+        if self.workload is None:
+            object.__setattr__(
+                self, "workload", mapping.TriangularWorkload(self.tile.m))
 
     # -- geometry delegates -------------------------------------------------
 
@@ -97,13 +116,41 @@ class ExecutionPlan:
         return self.tile.n_pad
 
     @property
+    def n_rows(self) -> int:
+        """Row count of the output (== n; rectangular-aware alias)."""
+        return self.tile.n
+
+    @property
+    def n_cols(self) -> int:
+        """Column count of the output: n for symmetric, the second
+        operand's row count for rectangular workloads."""
+        return (self.tile if self.tile_c is None else self.tile_c).n
+
+    @property
+    def col_pad(self) -> int:
+        return (self.tile if self.tile_c is None else self.tile_c).n_pad
+
+    @property
+    def symmetric(self) -> bool:
+        return self.workload.needs_symmetrize
+
+    @property
+    def symmetric_problem(self) -> bool:
+        """Whether row i and column i of the output are the same variable
+        (diagonal = self-pairs, each unordered pair present in both
+        orders) — True for the triangular workload and for symmetric-grid
+        (masked symmetric) runs."""
+        return self.workload.needs_symmetrize or self.symmetric_grid
+
+    @property
     def total_tiles(self) -> int:
-        return self.tile.total_tiles
+        return self.workload.job_count
 
     # -- construction -------------------------------------------------------
 
     @classmethod
     def create(cls, n: int, l: int, *,
+               n_cols: Optional[int] = None,
                t: int = DEFAULT_TILE,
                l_blk: int = DEFAULT_LBLK,
                measure: measures.MeasureLike = "pearson",
@@ -115,9 +162,18 @@ class ExecutionPlan:
                compute_dtype=None) -> "ExecutionPlan":
         """Resolve measure, fusion, precision, padding, pass partitioning
         and per-device ranges — everything the drivers used to re-derive.
+
+        n_cols selects the rectangular workload: jobs cover the full
+        (ceil(n/t) x ceil(n_cols/t)) tile grid of an X-vs-Y cross product
+        instead of the symmetric triangle, and the executor takes a second
+        operand holding the n_cols column variables.
         """
         meas = measures.get(measure)
         tile = tiling.TilePlan.create(n, l, t)
+        tile_c = (None if n_cols is None
+                  else tiling.TilePlan.create(n_cols, l, t))
+        workload = (mapping.TriangularWorkload(tile.m) if tile_c is None
+                    else mapping.GridWorkload(tile.m, tile_c.m))
         if p <= 0:
             raise ValueError(f"p must be positive, got {p}")
         cd = None
@@ -131,7 +187,7 @@ class ExecutionPlan:
                     f"truncated)")
         spec, fused = measures.resolve_fusion(meas, fuse_epilogue, tile.l,
                                               clip=clip)
-        per_dev = tiles_per_device(tile.total_tiles, p)
+        per_dev = tiles_per_device(workload.job_count, p)
         if max_tiles_per_pass is not None and max_tiles_per_pass <= 0:
             # validate before the None-means-unbounded resolution: 0 must
             # not silently coerce to "one full pass"
@@ -141,9 +197,16 @@ class ExecutionPlan:
         return cls(measure=meas, tile=tile, l_blk=l_blk,
                    interpret=resolve_interpret(interpret), clip=clip,
                    fused=fused, epilogue_spec=spec, compute_dtype=cd,
-                   p=p, per_dev=per_dev, max_tiles_per_pass=mtp)
+                   p=p, per_dev=per_dev, max_tiles_per_pass=mtp,
+                   workload=workload, tile_c=tile_c)
 
     # -- operand preparation ------------------------------------------------
+
+    def _prepare_one(self, x: Array) -> Array:
+        u = self.measure.transform(x, dtype=jnp.float32)
+        if self.compute_dtype is not None:
+            u = u.astype(self.compute_dtype)
+        return pad_operands(u, self.t, self.l_blk)
 
     def prepare(self, x: Array) -> Array:
         """Row-transform x (Eq. 4 analogue for the measure), optionally
@@ -157,10 +220,25 @@ class ExecutionPlan:
             raise ValueError(
                 f"x shape {x.shape} does not match plan (n={self.n}, "
                 f"l={self.l})")
-        u = self.measure.transform(x, dtype=jnp.float32)
-        if self.compute_dtype is not None:
-            u = u.astype(self.compute_dtype)
-        return pad_operands(u, self.t, self.l_blk)
+        return self._prepare_one(x)
+
+    def prepare_pair(self, x: Array, y: Array) -> Tuple[Array, Array]:
+        """Rectangular operand preparation: row-transform both operands
+        independently (the row transforms are per-row maps, so a cross
+        product needs no joint statistics) and pad each to kernel
+        alignment.  Requires a rectangular plan."""
+        if self.tile_c is None:
+            raise ValueError("prepare_pair requires a rectangular plan "
+                             "(create(..., n_cols=))")
+        if tuple(x.shape) != (self.n_rows, self.l):
+            raise ValueError(
+                f"x shape {x.shape} does not match plan "
+                f"(n_rows={self.n_rows}, l={self.l})")
+        if tuple(y.shape) != (self.n_cols, self.l):
+            raise ValueError(
+                f"y shape {y.shape} does not match plan "
+                f"(n_cols={self.n_cols}, l={self.l})")
+        return self._prepare_one(x), self._prepare_one(y)
 
     # -- distribution (paper SSIII-D, C5) ------------------------------------
 
@@ -235,6 +313,26 @@ class ExecutionPlan:
         if full:
             return ids, None
         return ids, np.concatenate(sel_parts)
+
+    # -- checkpoint identity -------------------------------------------------
+
+    def spec_dict(self) -> dict:
+        """JSON-serialisable identity of this plan: everything that must
+        match for a partially written HostSink memmap to be resumable
+        (core/sinks.HostSink checkpointing).  Deliberately excludes
+        `interpret` (a backend choice, not a result-shape choice)."""
+        return {
+            "n_rows": self.n_rows, "n_cols": self.n_cols, "l": self.l,
+            "t": self.t, "l_blk": self.l_blk,
+            "measure": self.measure.name,
+            "workload": type(self.workload).__name__,
+            "symmetric_grid": self.symmetric_grid,
+            "compute_dtype": (None if self.compute_dtype is None
+                              else self.compute_dtype.name),
+            "clip": self.clip, "fused": self.fused,
+            "p": self.p, "max_tiles_per_pass": self.max_tiles_per_pass,
+            "total_tiles": self.total_tiles, "n_pass": self.n_pass,
+        }
 
     def pass_padded_ids(self, k: int) -> np.ndarray:
         """Clamped tile id of *every* slot of pass k's (p * launch) output,

@@ -29,6 +29,8 @@ from __future__ import annotations
 
 import abc
 import copy
+import json
+import os
 from typing import Callable, Optional
 
 import jax
@@ -49,6 +51,15 @@ class TileSink(abc.ABC):
     def open(self, plan: ExecutionPlan) -> None:
         """Called once before the first pass; allocate state here."""
         self.plan = plan
+
+    def resume_pass(self) -> int:
+        """First pass index the executor should run.  0 unless the sink
+        recovered persisted progress in open() (HostSink checkpointing) —
+        the executor never dispatches passes below this index."""
+        return 0
+
+    def pass_complete(self, k: int) -> None:
+        """Pass k's tiles have been consumed; durable sinks commit here."""
 
     @abc.abstractmethod
     def consume(self, ids: np.ndarray, tiles: Array) -> None:
@@ -91,6 +102,16 @@ def _scatter_tiles_device(r_pad: Array, tiles: Array, coords: Array) -> Array:
 _scatter_tiles_device = jax.jit(_scatter_tiles_device)
 
 
+def scatter_tiles_at(r_pad: Array, tiles: Array, ys: np.ndarray,
+                     xs: np.ndarray, t: int) -> Array:
+    """Scatter (t, t) tiles into r_pad at tile coordinates (ys, xs) via one
+    batched device scatter.  Workload-agnostic: callers invert ids with
+    whichever bijection numbers their jobs."""
+    coords = jnp.stack([jnp.asarray(ys * t, jnp.int32),
+                        jnp.asarray(xs * t, jnp.int32)], axis=1)
+    return _scatter_tiles_device(r_pad, tiles.astype(r_pad.dtype), coords)
+
+
 def scatter_tiles(r_pad: Array, tiles: Array, ids: np.ndarray, t: int,
                   m: int) -> Array:
     """Scatter (t, t) tiles into the padded upper-triangle of R.
@@ -99,22 +120,26 @@ def scatter_tiles(r_pad: Array, tiles: Array, ids: np.ndarray, t: int,
     (mapping.job_coord_batch, vectorised numpy) and the tiles land via a
     single batched device scatter.  Duplicate ids (a clamped short pass)
     carry identical tile contents, so write order does not matter.
+    (Triangular spelling, kept for the legacy drivers; the sinks route
+    through the plan's workload + scatter_tiles_at.)
     """
     ys, xs = mapping.job_coord_batch(m, np.asarray(ids))
-    coords = jnp.stack([jnp.asarray(ys * t, jnp.int32),
-                        jnp.asarray(xs * t, jnp.int32)], axis=1)
-    return _scatter_tiles_device(r_pad, tiles.astype(r_pad.dtype), coords)
+    return scatter_tiles_at(r_pad, tiles, ys, xs, t)
 
 
 def place_tiles_host(r: np.ndarray, tiles: np.ndarray, ys: np.ndarray,
-                     xs: np.ndarray, t: int) -> None:
-    """Write a batch of (t, t) tiles (and their lower-triangle mirrors) into
-    the host matrix r in-place — vectorised fancy-index scatter, no per-tile
-    Python loop.  Works on plain arrays and np.memmap alike."""
+                     xs: np.ndarray, t: int, mirror: bool = True) -> None:
+    """Write a batch of (t, t) tiles (and, for symmetric workloads, their
+    lower-triangle mirrors) into the host matrix r in-place — vectorised
+    fancy-index scatter, no per-tile Python loop.  Works on plain arrays
+    and np.memmap alike.  mirror=False for rectangular workloads, whose
+    grid has no transpose twin."""
     span = np.arange(t)
     rows = (ys[:, None] * t + span)[:, :, None]  # (P, t, 1)
     cols = (xs[:, None] * t + span)[:, None, :]  # (P, 1, t)
     r[rows, cols] = tiles
+    if not mirror:
+        return
     off = ys != xs
     if np.any(off):
         r[cols[off].transpose(0, 2, 1), rows[off].transpose(0, 2, 1)] = \
@@ -130,17 +155,22 @@ def symmetrize(r_pad: Array, n: int) -> Array:
 
 
 class DenseSink(TileSink):
-    """Accumulate tiles into an (n_pad, n_pad) device matrix; result() is
-    the symmetrised (n, n) similarity — the four classic drivers' output,
-    bit-identical to the pre-refactor assembly."""
+    """Accumulate tiles into a padded device matrix; result() is the
+    symmetrised (n, n) similarity for triangular workloads — the four
+    classic drivers' output, bit-identical to the pre-refactor assembly —
+    or the cropped (n_rows, n_cols) cross-similarity for rectangular
+    workloads (nothing to mirror)."""
 
     def open(self, plan: ExecutionPlan) -> None:
         super().open(plan)
-        self.r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+        self.r_pad = jnp.zeros((plan.n_pad, plan.col_pad), jnp.float32)
+
+    def _scatter(self, ids: np.ndarray, tiles: Array) -> None:
+        ys, xs = self.plan.workload.job_coord_batch(np.asarray(ids))
+        self.r_pad = scatter_tiles_at(self.r_pad, tiles, ys, xs, self.plan.t)
 
     def consume(self, ids: np.ndarray, tiles: Array) -> None:
-        self.r_pad = scatter_tiles(self.r_pad, tiles, ids, self.plan.t,
-                                   self.plan.m)
+        self._scatter(ids, tiles)
 
     def consume_clamped(self, padded_ids: np.ndarray, sel: np.ndarray,
                         ids: np.ndarray, tiles: Array) -> None:
@@ -149,11 +179,13 @@ class DenseSink(TileSink):
         # the write set equals the valid set — no cross-device gather, and
         # bit-identical to the historical clamped-id assembly.
         del sel, ids
-        self.r_pad = scatter_tiles(self.r_pad, tiles, padded_ids,
-                                   self.plan.t, self.plan.m)
+        self._scatter(padded_ids, tiles)
 
     def result(self) -> Array:
-        r = symmetrize(self.r_pad, self.plan.n)
+        if self.plan.workload.needs_symmetrize:
+            r = symmetrize(self.r_pad, self.plan.n)
+        else:
+            r = self.r_pad[: self.plan.n_rows, : self.plan.n_cols]
         # Fused runs leave the kernel fully finalised (epilogue + clip).
         # Unfused runs had the epilogue applied on the pass stream; only the
         # bounded-measure clip remains — elementwise, so applying it after
@@ -165,44 +197,103 @@ class DenseSink(TileSink):
 
 
 class HostSink(TileSink):
-    """Assemble tiles (and their mirrors) into a host matrix — a caller
-    array, an np.memmap at `path`, or a freshly allocated ndarray.  Device
-    memory stays bounded by one pass; the full n x n lives on host/disk.
+    """Assemble tiles (and, for symmetric workloads, their mirrors) into a
+    host matrix — a caller array, an np.memmap at `path`, or a freshly
+    allocated ndarray.  Device memory stays bounded by one pass; the full
+    result lives on host/disk.
 
     The host transfer in consume() blocks on the *previous* pass only (the
     executor has already dispatched the next), preserving Alg. 2's
     compute/offload overlap.
+
+    Checkpoint/resume: with a memmap `path`, every completed pass is
+    committed durably — the memmap is flushed and a sidecar
+    ``<path>.progress.json`` records the plan spec plus the last completed
+    pass index.  ``HostSink(path=..., resume=True)`` (or
+    ``corr(..., resume_from=path)``) validates the persisted spec against
+    the current plan, reopens the memmap in place, and reports the resume
+    point to the executor — completed passes are never recomputed, and a
+    run killed mid-pass re-runs only that pass.
     """
 
     def __init__(self, out: Optional[np.ndarray] = None,
-                 path: Optional[str] = None):
+                 path: Optional[str] = None, resume: bool = False):
         if out is not None and path is not None:
             raise ValueError("pass either a preallocated `out` or a memmap "
                              "`path`, not both")
+        if resume and path is None:
+            raise ValueError("resume=True requires a memmap `path` (the "
+                             "progress sidecar lives next to it)")
         self._out = out
         self._path = path
+        self._resume = resume
+
+    @property
+    def progress_path(self) -> Optional[str]:
+        return None if self._path is None else self._path + ".progress.json"
+
+    def _write_progress(self, completed: int) -> None:
+        # flush data before advancing the watermark: a crash between the
+        # two leaves a pass marked incomplete (re-run), never a pass marked
+        # complete with unflushed tiles (silent corruption)
+        if hasattr(self.r, "flush"):
+            self.r.flush()
+        tmp = self.progress_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"spec": self.plan.spec_dict(), "completed": completed},
+                      f)
+        os.replace(tmp, self.progress_path)
 
     def open(self, plan: ExecutionPlan) -> None:
         super().open(plan)
-        shape = (plan.n_pad, plan.n_pad)
+        shape = (plan.n_pad, plan.col_pad)
+        self._completed = -1
         if self._out is not None:
             if self._out.shape != shape:
                 raise ValueError(
                     f"out shape {self._out.shape} != padded {shape}")
             self.r = self._out
         elif self._path is not None:
-            self.r = np.memmap(self._path, dtype=np.float32, mode="w+",
-                               shape=shape)
-            self.r[:] = 0.0
+            if self._resume:
+                try:
+                    with open(self.progress_path) as f:
+                        state = json.load(f)
+                except (OSError, json.JSONDecodeError) as e:
+                    raise ValueError(
+                        f"cannot resume from {self._path!r}: progress "
+                        f"sidecar unreadable ({e})") from None
+                spec = plan.spec_dict()
+                if state.get("spec") != spec:
+                    raise ValueError(
+                        f"cannot resume from {self._path!r}: persisted plan "
+                        f"spec {state.get('spec')} does not match the "
+                        f"requested run {spec}")
+                self.r = np.memmap(self._path, dtype=np.float32, mode="r+",
+                                   shape=shape)
+                self._completed = int(state["completed"])
+            else:
+                self.r = np.memmap(self._path, dtype=np.float32, mode="w+",
+                                   shape=shape)
+                self.r[:] = 0.0
+                self._write_progress(-1)
         else:
             self.r = np.zeros(shape, np.float32)
 
+    def resume_pass(self) -> int:
+        return self._completed + 1
+
+    def pass_complete(self, k: int) -> None:
+        self._completed = k
+        if self._path is not None:
+            self._write_progress(k)
+
     def consume(self, ids: np.ndarray, tiles: Array) -> None:
-        ys, xs = mapping.job_coord_batch(self.plan.m, np.asarray(ids))
-        place_tiles_host(self.r, np.asarray(tiles), ys, xs, self.plan.t)
+        ys, xs = self.plan.workload.job_coord_batch(np.asarray(ids))
+        place_tiles_host(self.r, np.asarray(tiles), ys, xs, self.plan.t,
+                         mirror=self.plan.workload.needs_symmetrize)
 
     def result(self) -> np.ndarray:
-        r = self.r[: self.plan.n, : self.plan.n]
+        r = self.r[: self.plan.n_rows, : self.plan.n_cols]
         meas = self.plan.measure
         if self.plan.clip and meas.clip is not None:
             np.clip(r, meas.clip[0], meas.clip[1], out=r)
@@ -232,7 +323,7 @@ class ReductionSink(TileSink):
                       else copy.deepcopy(self._init))
 
     def consume(self, ids: np.ndarray, tiles: Array) -> None:
-        ys, xs = mapping.job_coord_batch(self.plan.m, np.asarray(ids))
+        ys, xs = self.plan.workload.job_coord_batch(np.asarray(ids))
         self.state = self._fn(self.state, ids, np.asarray(tiles), ys, xs,
                               self.plan)
 
@@ -260,6 +351,11 @@ class EdgeCountSink(TileSink):
 
     def open(self, plan: ExecutionPlan) -> None:
         super().open(plan)
+        if not plan.symmetric_problem:
+            raise ValueError(
+                "EdgeCountSink counts unordered pairs of one variable set — "
+                "it requires a symmetric problem (corr(x) or masked "
+                "corr(x, where=...)), not a rectangular X-vs-Y run")
         if self._labels is not None and self._labels.shape != (plan.n,):
             raise ValueError(
                 f"labels shape {self._labels.shape} != (n={plan.n},)")
@@ -270,7 +366,7 @@ class EdgeCountSink(TileSink):
     def consume(self, ids: np.ndarray, tiles: Array) -> None:
         plan = self.plan
         t, n = plan.t, plan.n
-        ys, xs = mapping.job_coord_batch(plan.m, np.asarray(ids))
+        ys, xs = plan.workload.job_coord_batch(np.asarray(ids))
         vals = np.asarray(tiles)
         span = np.arange(t)
         rows = ys[:, None] * t + span          # (P, t) global row indices
@@ -299,13 +395,87 @@ class EdgeCountSink(TileSink):
         return out
 
 
+class TopKSink(TileSink):
+    """Streaming per-row top-k neighbours: keep the k strongest-|r| partners
+    of every row without materialising the matrix — O(n_rows * k) state.
+
+    For symmetric workloads a tile (y, x) contributes its entries to the
+    rows of block y *and* (mirrored) to the rows of block x, and self-pairs
+    (row == col) are excluded; rectangular workloads rank each X row's
+    neighbours among the Y rows.  Each pass merges its candidate
+    (row, col, value) triples into the running per-row top-k (sorted by
+    descending |value|), so memory never exceeds the state plus one pass.
+
+    result() is {"indices": (n_rows, k) int64, "values": (n_rows, k) f32};
+    rows with fewer than k valid partners pad with index -1 / value 0.
+    """
+
+    def __init__(self, k: int):
+        if k <= 0:
+            raise ValueError(f"k must be positive, got {k}")
+        self.k = int(k)
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        self.vals = np.zeros((plan.n_rows, self.k), np.float32)
+        self.idx = np.full((plan.n_rows, self.k), -1, np.int64)
+
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        plan = self.plan
+        t, n_r, n_c = plan.t, plan.n_rows, plan.n_cols
+        ys, xs = plan.workload.job_coord_batch(np.asarray(ids))
+        vals = np.asarray(tiles)
+        span = np.arange(t)
+        rows = (ys[:, None] * t + span)[:, :, None]  # (P, t, 1)
+        cols = (xs[:, None] * t + span)[:, None, :]  # (P, 1, t)
+        rows_g = np.broadcast_to(rows, vals.shape)
+        cols_g = np.broadcast_to(cols, vals.shape)
+        ok = (rows_g < n_r) & (cols_g < n_c)
+        if plan.symmetric_problem:
+            # row i's own column is not a neighbour (true for the triangle
+            # AND for symmetric-grid masked runs, where the workload is a
+            # full square but the diagonal is still self-vs-self)
+            ok &= rows_g != cols_g
+        r_ids, c_ids, v = rows_g[ok], cols_g[ok], vals[ok]
+        if plan.workload.needs_symmetrize:
+            # mirror off-diagonal tiles: entry (i, j) is also row j's
+            # neighbour i.  Diagonal tiles already hold both orders, and
+            # grid workloads (symmetric or not) carry every cell once.
+            off = (ys != xs)[:, None, None] & ok
+            r_ids = np.concatenate([r_ids, cols_g[off]])
+            c_ids = np.concatenate([c_ids, rows_g[off]])
+            v = np.concatenate([v, vals[off]])
+        self._merge(r_ids, c_ids, v)
+
+    def _merge(self, r_ids: np.ndarray, c_ids: np.ndarray,
+               v: np.ndarray) -> None:
+        order = np.argsort(r_ids, kind="stable")
+        r_s, c_s, v_s = r_ids[order], c_ids[order], v[order]
+        uniq, starts = np.unique(r_s, return_index=True)
+        bounds = np.append(starts, len(r_s))
+        for u, lo, hi in zip(uniq, bounds[:-1], bounds[1:]):
+            cand_v = np.concatenate([self.vals[u], v_s[lo:hi]])
+            cand_i = np.concatenate([self.idx[u], c_s[lo:hi]])
+            key = np.abs(cand_v)
+            key[cand_i < 0] = -np.inf  # empty slots lose to any candidate
+            sel = np.argsort(-key, kind="stable")[: self.k]
+            self.vals[u] = cand_v[sel]
+            self.idx[u] = cand_i[sel]
+
+    def result(self) -> dict:
+        self.vals[self.idx < 0] = 0.0
+        return {"indices": self.idx, "values": self.vals}
+
+
 __all__ = [
     "TileSink",
     "DenseSink",
     "HostSink",
     "ReductionSink",
     "EdgeCountSink",
+    "TopKSink",
     "scatter_tiles",
+    "scatter_tiles_at",
     "place_tiles_host",
     "symmetrize",
 ]

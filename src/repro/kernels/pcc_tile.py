@@ -149,6 +149,20 @@ def _col_map(i, k, jstart_ref, *, m: int, total: int):
     return x_t, k
 
 
+def _grid_row_map(i, k, jstart_ref, *, mc: int, total: int):
+    """Rectangular-grid row index_map: tile id -> y_t = jt // m_cols.
+    Pure int32 division — no sqrt inversion needed for the grid family."""
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return jt // mc, k
+
+
+def _grid_col_map(i, k, jstart_ref, *, mc: int, total: int):
+    """Rectangular-grid column index_map: tile id -> x_t = jt % m_cols,
+    indexing the *second* operand V."""
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return jt - (jt // mc) * mc, k
+
+
 def _out_map(i, k, jstart_ref, *, m: int, total: int):
     del k, jstart_ref
     return i, 0, 0
@@ -156,7 +170,8 @@ def _out_map(i, k, jstart_ref, *, m: int, total: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("t", "l_blk", "pass_tiles", "interpret", "epilogue"),
+    static_argnames=("t", "l_blk", "pass_tiles", "interpret", "epilogue",
+                     "grid_cols"),
 )
 def pcc_tiles(
     u_pad: jax.Array,
@@ -167,9 +182,11 @@ def pcc_tiles(
     pass_tiles: int,
     interpret: bool = False,
     epilogue: Optional[EpilogueSpec] = None,
+    v_pad: Optional[jax.Array] = None,
+    grid_cols: Optional[int] = None,
 ) -> jax.Array:
-    """Compute `pass_tiles` consecutive upper-triangle tiles starting at
-    tile id `j_start` (runtime scalar), following paper Alg. 1.
+    """Compute `pass_tiles` consecutive tiles starting at tile id `j_start`
+    (runtime scalar), following paper Alg. 1.
 
     u_pad: (n_pad, l_pad) pre-transformed variables (Eq. 4), zero-padded so
            n_pad % t == 0 and l_pad % l_blk == 0.  May be f32, bf16, or (for
@@ -177,6 +194,15 @@ def pcc_tiles(
     j_start: int32 scalar — first tile id of this pass (J_start in Alg. 1).
     epilogue: optional static EpilogueSpec fused into the final k-step so
            tiles leave VMEM already finalised (no second HBM pass).
+    v_pad: optional second operand (n_cols_pad, l_pad) for rectangular
+           X-vs-Y workloads — the column BlockSpec pulls its blocks from V
+           instead of U.  Requires grid_cols.  None reuses U (symmetric).
+    grid_cols: None runs the triangular bijection over U against itself
+           (tile ids number the upper triangle, Eq. 9/14 — the paper's
+           symmetric workload, bit-identical to the historical kernel).  An
+           int selects the rectangular grid family: tile ids number an
+           (m_rows x grid_cols) grid row-major, y = jt // grid_cols indexes
+           U and x = jt % grid_cols indexes V.
     Returns (pass_tiles, t, t) f32 tile results (R' in Alg. 1).
     """
     n_pad, l_pad = u_pad.shape
@@ -185,8 +211,23 @@ def pcc_tiles(
     if pass_tiles <= 0:
         raise ValueError(f"pass_tiles must be positive, got {pass_tiles} "
                          f"(remainder launches must be sized, not empty)")
+    if v_pad is not None and grid_cols is None:
+        raise ValueError("a second operand (v_pad) requires grid_cols — the "
+                         "triangular bijection is single-operand")
+    v = u_pad if v_pad is None else v_pad
     m = n_pad // t
-    total = m * (m + 1) // 2
+    if grid_cols is None:
+        total = m * (m + 1) // 2
+        row_map = functools.partial(_row_map, m=m, total=total)
+        col_map = functools.partial(_col_map, m=m, total=total)
+    else:
+        if v.shape[1] != l_pad or v.shape[0] != grid_cols * t:
+            raise ValueError(
+                f"column operand {v.shape} does not match grid_cols="
+                f"{grid_cols} tiles of t={t} over l_pad={l_pad}")
+        total = m * grid_cols
+        row_map = functools.partial(_grid_row_map, mc=grid_cols, total=total)
+        col_map = functools.partial(_grid_col_map, mc=grid_cols, total=total)
     l_blocks = l_pad // l_blk
 
     grid = (pass_tiles, l_blocks)
@@ -198,14 +239,8 @@ def pcc_tiles(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec(
-                    (t, l_blk),
-                    functools.partial(_row_map, m=m, total=total),
-                ),
-                pl.BlockSpec(
-                    (t, l_blk),
-                    functools.partial(_col_map, m=m, total=total),
-                ),
+                pl.BlockSpec((t, l_blk), row_map),
+                pl.BlockSpec((t, l_blk), col_map),
             ],
             out_specs=pl.BlockSpec(
                 (1, t, t), functools.partial(_out_map, m=m, total=total)
@@ -213,7 +248,7 @@ def pcc_tiles(
         ),
         out_shape=jax.ShapeDtypeStruct((pass_tiles, t, t), jnp.float32),
         interpret=interpret,
-    )(jnp.asarray(j_start, jnp.int32).reshape(1), u_pad, u_pad)
+    )(jnp.asarray(j_start, jnp.int32).reshape(1), u_pad, v)
     return out
 
 

@@ -1,0 +1,536 @@
+"""corr() workload facade: symmetric parity, rectangular and masked
+oracles, checkpoint/resume, TopKSink, deprecation contract, and
+repartition edge cases under both workloads (ISSUE 4 acceptance criteria).
+"""
+
+import json
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allpairs as ap
+from repro.core import mapping, measures, tiling
+from repro.core.allpairs import (allpairs, allpairs_pcc,
+                                 allpairs_pcc_streamed, stream_tiles)
+from repro.core.api import PairwiseProblem, corr
+from repro.core.plan import ExecutionPlan
+from repro.core.sinks import (DenseSink, EdgeCountSink, HostSink, TopKSink,
+                              scatter_tiles, symmetrize)
+from repro.kernels.pcc_tile import pcc_tiles
+
+ALL_MEASURES = ["pearson", "spearman", "cosine", "covariance", "kendall",
+                "kendall_tau_b", "dot"]
+
+
+def _x(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+def _nan_x(n, l, seed=0, frac=0.3):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, l)).astype(np.float32)
+    x[rng.random((n, l)) < frac] = np.nan
+    # keep every row at least 2-observed so oracles stay defined
+    x[:, :2] = rng.standard_normal((n, 2)).astype(np.float32)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Symmetric path: corr(x) is bit-identical to the PR-3 executor pipeline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("measure", ALL_MEASURES)
+def test_corr_symmetric_bit_identical_to_pre_facade_pipeline(measure):
+    """corr(x) == the PR-3 plan/executor/sink loop inlined with the
+    *single-operand* kernel spelling (no v_pad/grid_cols), for every
+    registered measure: same launches, same scatter, same symmetrize."""
+    n, l, t, mtp = 33, 12, 8, 4
+    x = _x(n, l, seed=7)
+    meas = measures.get(measure)
+    u_pad, plan = ap.prepare(x, t=t, l_blk=8, measure=measure)
+    spec, fused = measures.resolve_fusion(meas, True, plan.l, clip=True)
+    r_pad = jnp.zeros((plan.n_pad, plan.n_pad), jnp.float32)
+    pass_sizes = tiling.pass_launch_sizes(plan.total_tiles, mtp)
+    lo = 0
+    for launch in pass_sizes:
+        out = pcc_tiles(u_pad, lo, t=t, l_blk=8, pass_tiles=launch,
+                        interpret=True, epilogue=spec)
+        if not fused and meas.epilogue is not None:
+            out = meas.epilogue(out, plan.l)
+        r_pad = scatter_tiles(r_pad, out, np.arange(lo, lo + launch), t,
+                              plan.m)
+        lo += launch
+    want = symmetrize(r_pad, n)
+    if not fused and meas.clip is not None:
+        want = jnp.clip(want, *meas.clip)
+
+    got = corr(x, measure=measure, t=t, l_blk=8, max_tiles_per_pass=mtp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and allpairs() delegates to the same facade, bit-for-bit
+    via_allpairs = allpairs(x, measure=measure, t=t, l_blk=8,
+                            max_tiles_per_pass=mtp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(via_allpairs))
+
+
+# ---------------------------------------------------------------------------
+# Rectangular workload
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_rows,n_cols,l", [
+    (32, 16, 12),   # tile-aligned
+    (33, 21, 17),   # both edges ragged
+    (8, 40, 9),     # wide: fewer rows than one tile column
+    (40, 7, 9),     # narrow: single ragged column tile
+])
+def test_corr_rectangular_matches_dense_oracle(n_rows, n_cols, l):
+    x, y = _x(n_rows, l, seed=1), _x(n_cols, l, seed=2)
+    ref = np.asarray(measures.dense_reference_pair(x, y))
+    for mtp in (None, 3):
+        got = np.asarray(corr(x, y, t=8, l_blk=8, max_tiles_per_pass=mtp))
+        assert got.shape == (n_rows, n_cols)
+        np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_corr_rectangular_matches_corrcoef_oracle():
+    """np.corrcoef-style oracle: the (i, j) block of the joint correlation
+    matrix of [x; y] is exactly the rectangular cross-correlation."""
+    x, y = _x(19, 23, seed=3), _x(11, 23, seed=4)
+    joint = np.corrcoef(np.concatenate([np.asarray(x), np.asarray(y)]))
+    ref = joint[:19, 19:]
+    got = np.asarray(corr(x, y, t=8, l_blk=8, max_tiles_per_pass=4))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("measure", ALL_MEASURES)
+def test_corr_rectangular_all_measures(measure):
+    x, y = _x(18, 10, seed=5), _x(13, 10, seed=6)
+    ref = np.asarray(measures.dense_reference_pair(x, y, measure))
+    got = np.asarray(corr(x, y, t=8, l_blk=8, measure=measure,
+                          max_tiles_per_pass=5))
+    np.testing.assert_allclose(got, ref, atol=1e-5, err_msg=measure)
+
+
+def test_corr_rectangular_host_sink_and_reductions():
+    x, y = _x(26, 14, seed=8), _x(17, 14, seed=9)
+    dense = np.asarray(corr(x, y, t=8, l_blk=8, max_tiles_per_pass=3))
+    host = corr(x, y, t=8, l_blk=8, max_tiles_per_pass=3, sink=HostSink())
+    np.testing.assert_array_equal(np.asarray(host), dense)
+    # EdgeCountSink is a symmetric-workload reduction: rectangular refused
+    with pytest.raises(ValueError, match="symmetric"):
+        corr(x, y, t=8, l_blk=8, sink=EdgeCountSink(0.5))
+    # shard_u has one operand to shard: rectangular refused
+    with pytest.raises(ValueError, match="shard_u"):
+        corr(x, y, t=8, l_blk=8, shard_u=True,
+             mesh=__import__("jax").make_mesh((1,), ("d",)))
+
+
+def test_grid_workload_bijection_properties():
+    wl = mapping.GridWorkload(5, 3)
+    assert wl.job_count == 15 and not wl.needs_symmetrize
+    ids = np.arange(15)
+    ys, xs = wl.job_coord_batch(ids)
+    np.testing.assert_array_equal(ys * 3 + xs, ids)
+    assert ys.max() == 4 and xs.max() == 2
+    with pytest.raises(ValueError, match="out of range"):
+        wl.job_coord_batch([15])
+    tri = mapping.TriangularWorkload(5)
+    assert tri.job_count == mapping.tri_count(5)
+    assert tri.needs_symmetrize and tri.grid_cols is None
+
+
+def test_rectangular_pass_selection_unique_and_complete():
+    plan = ExecutionPlan.create(40, 12, n_cols=22, t=8, p=5,
+                                max_tiles_per_pass=2)
+    # 5 row tiles x 3 col tiles = 15 jobs
+    assert plan.total_tiles == 15 and not plan.symmetric
+    flat = np.concatenate([plan.pass_selection(k)[0]
+                           for k in range(plan.n_pass)])
+    np.testing.assert_array_equal(np.sort(flat), np.arange(15))
+
+
+# ---------------------------------------------------------------------------
+# Masked (pairwise-complete) measures
+# ---------------------------------------------------------------------------
+
+
+def _pairwise_complete_oracle(a: np.ndarray, b: np.ndarray,
+                              measure: str) -> np.ndarray:
+    """Literal per-pair oracle over each pair's common support (the
+    scipy/pandas pairwise-complete convention, with degenerate pairs -> 0
+    per the engine's conventions)."""
+    stats = pytest.importorskip("scipy.stats")
+    out = np.zeros((a.shape[0], b.shape[0]), np.float64)
+    for i in range(a.shape[0]):
+        for j in range(b.shape[0]):
+            ok = ~np.isnan(a[i]) & ~np.isnan(b[j])
+            u, v = a[i, ok].astype(np.float64), b[j, ok].astype(np.float64)
+            if ok.sum() < 2:
+                continue
+            if measure == "pearson":
+                if u.std() == 0 or v.std() == 0:
+                    continue
+                out[i, j] = stats.pearsonr(u, v).statistic
+            elif measure == "covariance":
+                out[i, j] = np.cov(u, v, ddof=1)[0, 1]
+            elif measure == "cosine":
+                den = np.sqrt((u * u).sum() * (v * v).sum())
+                out[i, j] = (u * v).sum() / den if den > 0 else 0.0
+    return out
+
+
+@pytest.mark.parametrize("measure", ["pearson", "covariance", "cosine"])
+def test_corr_masked_symmetric_matches_scipy_oracle(measure):
+    xm = _nan_x(17, 24, seed=11)
+    got = np.asarray(corr(jnp.asarray(xm), where="nan", measure=measure,
+                          t=8, l_blk=8, max_tiles_per_pass=3))
+    ref = _pairwise_complete_oracle(xm, xm, measure)
+    np.testing.assert_allclose(got, ref, atol=2e-4, err_msg=measure)
+    # masked output is exactly symmetric (bit-symmetric component GEMMs)
+    np.testing.assert_array_equal(got, got.T)
+
+
+@pytest.mark.parametrize("measure", ["pearson", "covariance", "cosine"])
+def test_corr_masked_rectangular_matches_scipy_oracle(measure):
+    xm, ym = _nan_x(14, 20, seed=12), _nan_x(9, 20, seed=13)
+    got = np.asarray(corr(jnp.asarray(xm), jnp.asarray(ym), where="nan",
+                          measure=measure, t=8, l_blk=8,
+                          max_tiles_per_pass=2))
+    ref = _pairwise_complete_oracle(xm, ym, measure)
+    assert got.shape == (14, 9)
+    np.testing.assert_allclose(got, ref, atol=2e-4, err_msg=measure)
+
+
+def test_corr_masked_bool_mask_equals_nan_mask():
+    """An explicit boolean mask and the equivalent NaN pattern agree."""
+    rng = np.random.default_rng(14)
+    x = rng.standard_normal((12, 18)).astype(np.float32)
+    mask = rng.random((12, 18)) > 0.3
+    mask[:, :2] = True
+    x_nan = np.where(mask, x, np.nan).astype(np.float32)
+    via_mask = np.asarray(corr(jnp.asarray(x), where=jnp.asarray(mask),
+                               t=8, l_blk=8))
+    via_nan = np.asarray(corr(jnp.asarray(x_nan), where="nan", t=8, l_blk=8))
+    np.testing.assert_array_equal(via_mask, via_nan)
+
+
+def test_corr_masked_fully_observed_matches_unmasked():
+    """An all-True mask reproduces the unmasked measure (up to float
+    noise of the different GEMM decomposition)."""
+    x = _x(15, 40, seed=15)
+    masked = np.asarray(corr(x, where=jnp.ones(x.shape, bool), t=8, l_blk=8))
+    plain = np.asarray(corr(x, t=8, l_blk=8))
+    np.testing.assert_allclose(masked, plain, atol=2e-4)
+
+
+def test_corr_masked_rejections():
+    xm = jnp.asarray(_nan_x(10, 12, seed=16))
+    with pytest.raises(ValueError, match="no pairwise-complete"):
+        corr(xm, where="nan", measure="spearman", t=8, l_blk=8)
+    with pytest.raises(ValueError, match="compute_dtype"):
+        corr(xm, where="nan", t=8, l_blk=8, compute_dtype=jnp.bfloat16)
+    with pytest.raises(ValueError, match="not understood"):
+        corr(xm, where="nans", t=8, l_blk=8)
+    with pytest.raises(ValueError, match="shape"):
+        corr(xm, where=jnp.ones((3, 3), bool), t=8, l_blk=8)
+    y = _x(5, 12, seed=17)
+    with pytest.raises(ValueError, match="both"):
+        corr(xm, y, where=jnp.ones(xm.shape, bool), t=8, l_blk=8)
+
+
+def test_corr_masked_topk_excludes_self_pairs():
+    """Masked symmetric runs use a full-square grid, but the diagonal is
+    still self-vs-self: TopKSink must not spend a slot on it (regression:
+    the workload-shape check alone let self-pairs through)."""
+    xm = jnp.asarray(_nan_x(20, 25, seed=40))
+    top = corr(xm, where="nan", t=8, l_blk=8, max_tiles_per_pass=3,
+               sink=TopKSink(4))
+    assert not np.any(top["indices"] == np.arange(20)[:, None])
+    dense = np.asarray(corr(xm, where="nan", t=8, l_blk=8))
+    want = _topk_oracle(dense, 4, exclude_diag=True)
+    for i in range(20):
+        assert set(top["indices"][i]) == set(want[i]), i
+
+
+def test_corr_masked_edge_count_matches_dense_adjacency():
+    """EdgeCountSink accepts symmetric masked runs (symmetric problem on a
+    grid workload) and counts each unordered pair exactly once."""
+    xm = jnp.asarray(_nan_x(18, 22, seed=41))
+    dense = np.asarray(corr(xm, where="nan", t=8, l_blk=8))
+    thr = 0.4
+    adj = (np.abs(dense) >= thr) & ~np.eye(18, dtype=bool)
+    got = corr(xm, where="nan", t=8, l_blk=8, max_tiles_per_pass=3,
+               sink=EdgeCountSink(thr))
+    assert got["edges"] == int(adj.sum()) // 2
+    np.testing.assert_array_equal(got["degrees"], adj.sum(1))
+
+
+def test_corr_masked_clip_flag_respected():
+    """clip=True output is exactly the clip of the clip=False output —
+    the combine leaves values unclipped and the sink applies the bound
+    iff requested, like any unfused run."""
+    xm = jnp.asarray(_nan_x(14, 16, seed=42))
+    unclipped = np.asarray(corr(xm, where="nan", t=8, l_blk=8, clip=False))
+    clipped = np.asarray(corr(xm, where="nan", t=8, l_blk=8, clip=True))
+    np.testing.assert_array_equal(np.clip(unclipped, -1.0, 1.0), clipped)
+
+
+def test_pairwise_problem_resolution():
+    x = _x(6, 8, seed=18)
+    p = PairwiseProblem.create(x)
+    assert p.symmetric and not p.masked and p.n_cols == 6
+    p2 = PairwiseProblem.create(x, _x(4, 8), measure="cosine")
+    assert not p2.symmetric and p2.n_cols == 4
+    p3 = PairwiseProblem.create(x, where="nan")
+    assert p3.masked and p3.mask_y is None
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+class _KilledSink(HostSink):
+    """HostSink that dies after `die_after` consumed passes — simulates a
+    job killed mid-stream with some passes durably committed."""
+
+    def __init__(self, path, die_after):
+        super().__init__(path=path)
+        self._die_after = die_after
+        self._seen = 0
+
+    def consume(self, ids, tiles):
+        if self._seen >= self._die_after:
+            raise RuntimeError("killed mid-run")
+        self._seen += 1
+        super().consume(ids, tiles)
+
+
+@pytest.mark.parametrize("die_after", [1, 2])
+def test_corr_kill_and_resume_equals_uninterrupted(tmp_path, die_after):
+    x = _x(40, 16, seed=19)
+    kw = dict(t=8, l_blk=8, max_tiles_per_pass=4, measure="covariance")
+    full = np.asarray(corr(x, sink=HostSink(path=str(tmp_path / "a.mm")),
+                           **kw))
+    path = str(tmp_path / "b.mm")
+    with pytest.raises(RuntimeError, match="killed"):
+        corr(x, sink=_KilledSink(path, die_after), **kw)
+    prog = json.loads((tmp_path / "b.mm.progress.json").read_text())
+    assert prog["completed"] == die_after - 1  # the dying pass not committed
+    assert prog["spec"]["measure"] == "covariance"
+    resumed = np.asarray(corr(x, resume_from=path, **kw))
+    np.testing.assert_array_equal(resumed, full)
+
+
+def test_corr_resume_skips_completed_passes(tmp_path, monkeypatch):
+    """Resume never re-dispatches committed passes: spy on the kernel."""
+    x = _x(33, 17, seed=20)
+    path = str(tmp_path / "r.mm")
+    kw = dict(t=8, l_blk=8, max_tiles_per_pass=4)  # 15 tiles -> 4 passes
+    with pytest.raises(RuntimeError):
+        corr(x, sink=_KilledSink(path, 2), **kw)
+
+    seen = []
+    real = pcc_tiles
+
+    def spy(u, j0, **k):
+        seen.append(k["pass_tiles"])
+        return real(u, j0, **k)
+
+    monkeypatch.setattr(ap, "pcc_tiles", spy)
+    resumed = np.asarray(corr(x, resume_from=path, **kw))
+    assert seen == [4, 3]  # passes 0-1 skipped; 2 and the remainder run
+    full = np.asarray(corr(x, **kw))
+    np.testing.assert_array_equal(resumed, full)
+
+
+def test_corr_resume_rejects_mismatched_spec(tmp_path):
+    x = _x(24, 10, seed=21)
+    path = str(tmp_path / "s.mm")
+    corr(x, t=8, l_blk=8, max_tiles_per_pass=2, sink=HostSink(path=path))
+    with pytest.raises(ValueError, match="does not match"):
+        corr(x, t=8, l_blk=8, max_tiles_per_pass=3, resume_from=path)
+    with pytest.raises(ValueError, match="does not match"):
+        corr(x, t=8, l_blk=8, max_tiles_per_pass=2, measure="cosine",
+             resume_from=path)
+    with pytest.raises(ValueError, match="unreadable"):
+        corr(x, t=8, l_blk=8, resume_from=str(tmp_path / "missing.mm"))
+    with pytest.raises(ValueError, match="HostSink"):
+        corr(x, t=8, l_blk=8, max_tiles_per_pass=2, resume_from=path,
+             sink=DenseSink())
+
+
+def test_corr_resume_rectangular_roundtrip(tmp_path):
+    x, y = _x(25, 12, seed=22), _x(18, 12, seed=23)
+    kw = dict(t=8, l_blk=8, max_tiles_per_pass=3)
+    full = np.asarray(corr(x, y, **kw))
+    path = str(tmp_path / "rect.mm")
+    with pytest.raises(RuntimeError):
+        corr(x, y, sink=_KilledSink(path, 2), **kw)
+    resumed = np.asarray(corr(x, y, resume_from=path, **kw))
+    np.testing.assert_array_equal(resumed, full)
+
+
+# ---------------------------------------------------------------------------
+# TopKSink
+# ---------------------------------------------------------------------------
+
+
+def _topk_oracle(r: np.ndarray, k: int, exclude_diag: bool):
+    key = np.abs(r).astype(np.float64)
+    if exclude_diag:
+        np.fill_diagonal(key, -np.inf)
+    idx = np.argsort(-key, axis=1, kind="stable")[:, :k]
+    return idx
+
+
+@pytest.mark.parametrize("mtp", [None, 3])
+def test_topk_sink_matches_dense_argsort(mtp):
+    x = _x(34, 30, seed=24)
+    dense = np.asarray(corr(x, t=8, l_blk=8))
+    got = corr(x, t=8, l_blk=8, max_tiles_per_pass=mtp, sink=TopKSink(5))
+    want_idx = _topk_oracle(dense, 5, exclude_diag=True)
+    # values are distinct with continuous data: indices match exactly as sets
+    for i in range(34):
+        assert set(got["indices"][i]) == set(want_idx[i]), i
+        np.testing.assert_allclose(
+            got["values"][i], dense[i, got["indices"][i]], atol=1e-6)
+        # and sorted by descending |r|
+        mags = np.abs(got["values"][i])
+        assert np.all(mags[:-1] >= mags[1:] - 1e-7)
+
+
+def test_topk_sink_rectangular_and_small_rows():
+    x, y = _x(21, 15, seed=25), _x(4, 15, seed=26)
+    dense = np.asarray(corr(x, y, t=8, l_blk=8))
+    got = corr(x, y, t=8, l_blk=8, max_tiles_per_pass=2, sink=TopKSink(6))
+    # only 4 candidate columns: 2 pad slots per row
+    assert got["indices"].shape == (21, 6)
+    for i in range(21):
+        valid = got["indices"][i] >= 0
+        assert valid.sum() == 4
+        assert set(got["indices"][i][valid]) == set(range(4))
+        np.testing.assert_array_equal(got["values"][i][~valid], 0.0)
+    with pytest.raises(ValueError, match="positive"):
+        TopKSink(0)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation contract of the legacy wrappers
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_wrappers_warn_once_and_match_corr():
+    x = _x(29, 14, seed=27)
+    kw = dict(t=8, l_blk=8, max_tiles_per_pass=4)
+    ref = np.asarray(corr(x, **kw))
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = np.asarray(allpairs_pcc(x, **kw))
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "corr(" in str(dep[0].message)
+    np.testing.assert_array_equal(got, ref)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        chunks = list(allpairs_pcc_streamed(x, **kw))
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "corr(" in str(dep[0].message)
+    streamed = list(stream_tiles(x, **kw))
+    assert len(chunks) == len(streamed)
+    for (ids_a, tiles_a), (ids_b, tiles_b) in zip(chunks, streamed):
+        np.testing.assert_array_equal(ids_a, ids_b)
+        np.testing.assert_array_equal(tiles_a, np.asarray(tiles_b))
+
+
+def test_legacy_sharded_wrappers_warn_once_and_match_corr():
+    import jax
+    from repro.core.distributed import (allpairs_pcc_sharded,
+                                        allpairs_pcc_sharded_u)
+    x = _x(20, 10, seed=28)
+    mesh = jax.make_mesh((1,), ("d",))
+    ref = np.asarray(corr(x, t=8, l_blk=8, mesh=mesh))
+    for fn, kw in [(allpairs_pcc_sharded, {}),
+                   (allpairs_pcc_sharded_u, {})]:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            got = np.asarray(fn(x, mesh, t=8, l_blk=8, **kw))
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1 and "corr(" in str(dep[0].message), fn.__name__
+        np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan.repartition edge cases under both workloads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_cols", [None, 22])
+def test_repartition_p_exceeds_total_tiles(n_cols):
+    plan = ExecutionPlan.create(17, 9, n_cols=n_cols, t=8, p=2)
+    total = plan.total_tiles
+    re = plan.repartition(total + 5)  # more devices than tiles
+    assert re.per_dev == 1
+    ranges = re.device_ranges
+    # the first `total` devices own one tile each; the rest are empty
+    assert all(hi - lo == 1 for lo, hi in ranges[:total])
+    assert all(hi == lo for lo, hi in ranges[total:])
+    flat = np.concatenate([plan_ids for plan_ids in
+                           (np.arange(lo, hi) for lo, hi in ranges)])
+    np.testing.assert_array_equal(np.sort(flat), np.arange(total))
+    # pass machinery stays consistent on the empty-tail mesh
+    flat2 = np.concatenate([re.pass_selection(k)[0]
+                            for k in range(re.n_pass)])
+    np.testing.assert_array_equal(np.sort(flat2), np.arange(total))
+
+
+@pytest.mark.parametrize("n_cols", [None, 13])
+def test_repartition_to_single_device(n_cols):
+    plan = ExecutionPlan.create(40, 11, n_cols=n_cols, t=8, p=6,
+                                max_tiles_per_pass=3)
+    re = plan.repartition(1)
+    assert re.p == 1 and re.per_dev == plan.total_tiles
+    # the pass bound survives re-slicing (it was clamped to the old
+    # per-device range at creation and single-device ranges only grow)
+    assert re.max_tiles_per_pass == plan.max_tiles_per_pass
+    assert re.workload == plan.workload and re.tile_c == plan.tile_c
+    sizes = re.launch_sizes
+    assert sum(sizes) == plan.total_tiles
+    ids, sel = re.pass_selection(0)
+    assert sel is None  # single device: no clamped tail slots
+
+
+@pytest.mark.parametrize("mtp,residue", [(5, 0), (7, 1), (4, 3), (2, 1),
+                                         (3, 0), (8, 7)])
+def test_repartition_rectangular_preserves_pass_residues(mtp, residue):
+    """Rectangular plan, 5x3 grid = 15 tiles: residues {0, 1, mtp-1} of
+    total % mtp survive repartition — the final launch is always the true
+    remainder of the *new* per-device range, never a padded maximum."""
+    plan = ExecutionPlan.create(40, 9, n_cols=22, t=8, max_tiles_per_pass=mtp)
+    assert plan.total_tiles == 15 and 15 % mtp == residue
+    for new_p in (1, 2, 4, 15, 20):
+        re = plan.repartition(new_p)
+        assert re.max_tiles_per_pass == min(mtp, re.per_dev)
+        sizes = re.launch_sizes
+        assert sum(sizes) == re.per_dev
+        assert all(s == re.max_tiles_per_pass for s in sizes[:-1])
+        rem = re.per_dev % re.max_tiles_per_pass
+        assert sizes[-1] == (rem if rem else re.max_tiles_per_pass)
+        flat = np.concatenate([re.pass_selection(k)[0]
+                               for k in range(re.n_pass)])
+        np.testing.assert_array_equal(np.sort(flat), np.arange(15))
+
+
+def test_repartition_execution_invariance_rectangular():
+    """The rectangular result is invariant to repartitioning — same grid,
+    different pass/device slicing (elastic recovery contract)."""
+    x, y = _x(33, 10, seed=29), _x(18, 10, seed=30)
+    base = np.asarray(corr(x, y, t=8, l_blk=8))
+    for mtp in (1, 2, 5, 15):
+        part = np.asarray(corr(x, y, t=8, l_blk=8, max_tiles_per_pass=mtp))
+        np.testing.assert_array_equal(part, base)
