@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary).
   table2  — real-dataset-shaped speedup                      (paper Table II)
   fig2    — scalability vs device count                      (paper Fig. 2)
   kernels — tile/kernel microbenchmarks + grid-savings       (paper SSIII-C)
+  serving — plan-cache hit/miss + batched vs serial queries  (serving layer)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only table1,...]
 """
@@ -19,7 +20,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: table1,table2,fig2,kernels")
+                    help="comma-separated subset: "
+                         "table1,table2,fig2,kernels,serving")
     ap.add_argument("--json", default="",
                     help="append this run as one trajectory point to the "
                          "given BENCH_*.json file (see common.save_trajectory)")
@@ -46,6 +48,9 @@ def main() -> None:
     if want("kernels"):
         from benchmarks import kernels
         kernels.run()
+    if want("serving"):
+        from benchmarks import serving
+        serving.run()
 
     if args.json:
         path = common.save_trajectory(args.json, args.label or None)

@@ -39,7 +39,8 @@ allpairs_pcc_sharded*) are deprecated wrappers over this facade.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+import weakref
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -48,12 +49,119 @@ from jax.sharding import Mesh
 
 from repro.core import measures
 from repro.core.allpairs import _stream, execute_plan, run_sink
+from repro.core.lru import LruStatsCache
 from repro.core.plan import ExecutionPlan, pad_operands
 from repro.core.sinks import HostSink, TileSink
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
 
 Array = jax.Array
 MaskLike = Union[None, str, np.ndarray, Array, Tuple]
+
+
+# ---------------------------------------------------------------------------
+# Cached operand preparation: the serving seam
+# ---------------------------------------------------------------------------
+
+
+class TransformCache(LruStatsCache):
+    """Memoises prepared operands (row transform + dtype narrowing + pad)
+    per corpus array.
+
+    The measure row transform is the only per-operand device work of a run
+    (epilogues fuse into the kernel), and it is O(n·l) — re-running it for
+    an operand the process has already prepared is pure waste.  This cache
+    is the one seam both consumers share: ``corr()`` routes every unmasked
+    operand through the process-wide default instance, and a serving
+    :class:`~repro.serving.corpus.CorpusHandle` owns a private instance for
+    its registered corpus, so probe queries skip the corpus transform
+    entirely.
+
+    Keying is by *object identity* of the operand (plus the transform's
+    parameters: measure, compute dtype, tile alignment).  Only operands
+    the *caller* handed over as ``jax.Array`` are cached, and an entry
+    holds only a *weak* reference to its operand: the moment the caller
+    drops the array, the entry evicts itself (weakref death callback), so
+    the cache never extends an operand's lifetime — a loop over many
+    distinct corpora peaks at the same device memory it did before the
+    cache existed, and a recycled ``id()`` can never alias a dead entry
+    (the callback removed it at collection time; an identity check on
+    lookup guards the race).  The prepared operand is pinned exactly as
+    long as its source array is alive — "while you hold the corpus, its
+    transform stays warm".  Host numpy inputs are mutable and convert to
+    a fresh device array per call, so ``corr()`` bypasses the cache for
+    them (``prepared_operand(cacheable=False)``) — they re-transform as
+    they always did, and never pin memory or evict reusable entries.
+
+    Bounded LRU; thread-safe (the serving layer prepares operands from a
+    dispatcher thread while user threads call ``corr()``).
+    """
+
+    def __init__(self, capacity: int = 8):
+        super().__init__(capacity)
+
+    @staticmethod
+    def _key(x: Array, measure: measures.Measure, compute_dtype,
+             t: int, l_blk: int) -> tuple:
+        cd = None if compute_dtype is None else jnp.dtype(compute_dtype).name
+        return (id(x), id(measure), cd, int(t), int(l_blk))
+
+    def prepared(self, x: Array, measure: measures.Measure, compute_dtype,
+                 t: int, l_blk: int, build: Callable[[], Array]) -> Array:
+        """The prepared operand for (x, measure, compute_dtype, t, l_blk),
+        built via `build()` on a miss.  Non-jax.Array operands are built
+        uncached (mutable host arrays have no stable identity)."""
+        if not isinstance(x, jax.Array):
+            return build()
+        key = self._key(x, measure, compute_dtype, t, l_blk)
+        entry = self._lookup(key)
+        if entry is not None and entry[0]() is x and entry[1] is measure:
+            return entry[2]
+        # build outside the lock: transforms may dispatch device work
+        u_pad = build()
+        try:
+            ref = weakref.ref(x, lambda _, k=key: self._evict(k))
+        except TypeError:
+            # non-weakref-able array type: serve uncached rather than pin
+            return u_pad
+        self._insert(key, (ref, measure, u_pad))
+        return u_pad
+
+
+_PREPARED = TransformCache()
+
+
+def prepared_operand(plan: ExecutionPlan, x: Array, *,
+                     cache: Optional[TransformCache] = None,
+                     expect_rows: Optional[int] = None,
+                     cacheable: bool = True) -> Array:
+    """``plan.prepare(x)`` through a transform cache (default: the
+    process-wide one ``corr()`` uses).  expect_rows overrides the row-count
+    check for rectangular column operands (plan.prepare validates against
+    n_rows; the prepared output itself only depends on measure, dtype and
+    alignment, so cached entries are shared across workload shapes).
+    cacheable=False skips the cache outright — ``corr()`` passes it for
+    operands the caller supplied as host numpy, whose jnp.asarray
+    conversion is a fresh device array every call (caching those would pin
+    dead buffers and evict live entries without ever hitting)."""
+    rows = plan.n_rows if expect_rows is None else expect_rows
+    if tuple(x.shape) != (rows, plan.l):
+        raise ValueError(
+            f"operand shape {tuple(x.shape)} does not match plan "
+            f"(rows={rows}, l={plan.l})")
+    if not cacheable:
+        return plan._prepare_one(x)
+    c = cache if cache is not None else _PREPARED
+    return c.prepared(x, plan.measure, plan.compute_dtype, plan.t, plan.l_blk,
+                      build=lambda: plan._prepare_one(x))
+
+
+def clear_prepared_cache() -> None:
+    """Drop every cached prepared operand (tests; memory pressure)."""
+    _PREPARED.clear()
+
+
+def prepared_cache_stats() -> dict:
+    return _PREPARED.stats()
 
 
 def _as_mask(mask, data: Array, side: str) -> Array:
@@ -241,15 +349,23 @@ def corr(
             max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
             clip=clip, fuse_epilogue=fuse_epilogue,
             compute_dtype=compute_dtype)
-        return execute_plan(plan, plan.prepare(problem.x), sink=sink,
-                            mesh=mesh, shard_u=shard_u)
+        # the cached-transform seam: repeat calls over the same corpus
+        # array run the O(n·l) row transform exactly once (the same seam
+        # serving's CorpusHandle uses — see TransformCache).  problem.x is
+        # the caller's object only when they passed a jax.Array; a numpy
+        # input converts to a fresh array per call and must not be cached.
+        u_pad = prepared_operand(plan, problem.x, cacheable=problem.x is x)
+        return execute_plan(plan, u_pad, sink=sink, mesh=mesh,
+                            shard_u=shard_u)
 
     plan = ExecutionPlan.create(
         problem.n_rows, problem.l, n_cols=problem.n_cols, t=t, l_blk=l_blk,
         measure=problem.measure, p=p,
         max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
         clip=clip, fuse_epilogue=fuse_epilogue, compute_dtype=compute_dtype)
-    u_pad, v_pad = plan.prepare_pair(problem.x, problem.y)
+    u_pad = prepared_operand(plan, problem.x, cacheable=problem.x is x)
+    v_pad = prepared_operand(plan, problem.y, expect_rows=problem.n_cols,
+                             cacheable=problem.y is y)
     return execute_plan(plan, u_pad, v_pad, sink=sink, mesh=mesh,
                         shard_u=shard_u)
 
@@ -314,4 +430,11 @@ MASKED_COL = {c: ck for c, (_, ck) in
               measures.MASKED_COMPONENT_OPERANDS.items()}
 
 
-__all__ = ["PairwiseProblem", "corr"]
+__all__ = [
+    "PairwiseProblem",
+    "corr",
+    "TransformCache",
+    "prepared_operand",
+    "prepared_cache_stats",
+    "clear_prepared_cache",
+]

@@ -203,10 +203,8 @@ class ExecutionPlan:
     # -- operand preparation ------------------------------------------------
 
     def _prepare_one(self, x: Array) -> Array:
-        u = self.measure.transform(x, dtype=jnp.float32)
-        if self.compute_dtype is not None:
-            u = u.astype(self.compute_dtype)
-        return pad_operands(u, self.t, self.l_blk)
+        return prepare_operand_raw(x, self.measure, self.compute_dtype,
+                                   self.t, self.l_blk)
 
     def prepare(self, x: Array) -> Array:
         """Row-transform x (Eq. 4 analogue for the measure), optionally
@@ -239,6 +237,31 @@ class ExecutionPlan:
                 f"y shape {y.shape} does not match plan "
                 f"(n_cols={self.n_cols}, l={self.l})")
         return self._prepare_one(x), self._prepare_one(y)
+
+    def prepare_rows(self, x: Array) -> Array:
+        """Prepare a row slab that may hold *fewer* rows than the plan.
+
+        Serving seam (serving/batcher.py): a plan built for a row count
+        bucketed up to a tile multiple serves any probe slab with
+        rows <= n_rows — the slab is transformed and narrowed exactly like
+        prepare(), then zero-padded up to the plan's padded row count.
+        Zero rows are inert (every transform maps them to zero rows, which
+        correlate 0 with everything), so the extra slots never contaminate
+        real output rows and the per-row results are bit-identical to an
+        exact-shape run.
+        """
+        if x.ndim != 2 or x.shape[1] != self.l:
+            raise ValueError(
+                f"x shape {x.shape} does not match plan sample count "
+                f"(l={self.l})")
+        if x.shape[0] > self.n_rows:
+            raise ValueError(
+                f"x has {x.shape[0]} rows, more than the plan's bucketed "
+                f"row count {self.n_rows}")
+        u = self._prepare_one(x)
+        if u.shape[0] < self.n_pad:
+            u = jnp.pad(u, ((0, self.n_pad - u.shape[0]), (0, 0)))
+        return u
 
     # -- distribution (paper SSIII-D, C5) ------------------------------------
 
@@ -334,6 +357,12 @@ class ExecutionPlan:
             "total_tiles": self.total_tiles, "n_pass": self.n_pass,
         }
 
+    def spec_key(self) -> tuple:
+        """Hashable form of :meth:`spec_dict`: a stable (name, value) tuple
+        usable as a dict key — the identity plan caches
+        (serving/plan_cache.py) compare and hash."""
+        return tuple(sorted(self.spec_dict().items()))
+
     def pass_padded_ids(self, k: int) -> np.ndarray:
         """Clamped tile id of *every* slot of pass k's (p * launch) output,
         invalid slots included.  Matches the kernel's per-slot clamp (slot i
@@ -346,6 +375,20 @@ class ExecutionPlan:
         base = (np.arange(self.p, dtype=np.int64)[:, None] * self.per_dev
                 + off + np.arange(launch, dtype=np.int64)[None, :])
         return np.minimum(base.reshape(-1), self.total_tiles - 1)
+
+
+def prepare_operand_raw(x: Array, measure: measures.Measure, compute_dtype,
+                        t: int, l_blk: int) -> Array:
+    """The one operand-preparation pipeline: row transform at >= f32,
+    optional narrowing to the stored compute dtype, zero-pad to kernel
+    alignment.  Both ExecutionPlan.prepare*() and the serving layer's
+    CorpusHandle call this — the serving bit-identity contract (batched
+    answers == standalone corr()) depends on there being exactly one
+    implementation."""
+    u = measure.transform(x, dtype=jnp.float32)
+    if compute_dtype is not None:
+        u = u.astype(compute_dtype)
+    return pad_operands(u, t, l_blk)
 
 
 def pad_operands(u: Array, t: int, l_blk: int) -> Array:
@@ -362,6 +405,7 @@ def pad_operands(u: Array, t: int, l_blk: int) -> Array:
 __all__ = [
     "ExecutionPlan",
     "pad_operands",
+    "prepare_operand_raw",
     "resolve_interpret",
     "tiles_per_device",
 ]

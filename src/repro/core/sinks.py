@@ -395,6 +395,73 @@ class EdgeCountSink(TileSink):
         return out
 
 
+class RowBlockSink(TileSink):
+    """Assemble a grid workload's tiles directly into independent per-segment
+    host arrays — the serving batcher's scatter (serving/batcher.py).
+
+    One coalesced launch computes the stacked probe slabs of several
+    requests against the corpus; this sink lands each request's rows in its
+    own (m_i, n_cols) array as the tiles stream past, so no
+    (rows_bucket, n_cols) intermediate is ever materialised and each
+    result's lifetime is independent of its batch-mates (a request's future
+    can release its rows without pinning the whole batch).
+
+    `bounds` are half-open global row ranges [(lo, hi), ...] — typically
+    the request boundaries of a stacked probe slab.  Ranges may straddle
+    tile boundaries arbitrarily; rows outside every range (slab padding up
+    to the plan's row bucket) are discarded.
+    """
+
+    def __init__(self, bounds):
+        self._bounds = [(int(lo), int(hi)) for lo, hi in bounds]
+        for lo, hi in self._bounds:
+            if lo < 0 or hi < lo:
+                raise ValueError(f"bad row range [{lo}, {hi})")
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        if plan.workload.needs_symmetrize:
+            raise ValueError(
+                "RowBlockSink assembles grid workloads (rectangular "
+                "X-vs-Y); symmetric triangular runs mirror tiles across "
+                "segments — use HostSink/DenseSink there")
+        for lo, hi in self._bounds:
+            if hi > plan.n_rows:
+                raise ValueError(
+                    f"row range [{lo}, {hi}) exceeds plan rows "
+                    f"{plan.n_rows}")
+        # padded column width: tiles write whole (t, t) blocks; result()
+        # crops to the true column count
+        self._outs = [np.zeros((hi - lo, self.plan.col_pad), np.float32)
+                      for lo, hi in self._bounds]
+
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        plan = self.plan
+        t = plan.t
+        ys, xs = plan.workload.job_coord_batch(np.asarray(ids))
+        vals = np.asarray(tiles)
+        span = np.arange(t)
+        for (lo, hi), out in zip(self._bounds, self._outs):
+            pick = (ys * t < hi) & (ys * t + t > lo)
+            if not pick.any():
+                continue
+            sub = vals[pick]
+            rows = (ys[pick, None] * t + span)[:, :, None]    # (P, t, 1)
+            cols = (xs[pick, None] * t + span)[:, None, :]    # (P, 1, t)
+            ok = (rows >= lo) & (rows < hi)
+            okb = np.broadcast_to(ok, sub.shape)
+            out[np.broadcast_to(rows - lo, sub.shape)[okb],
+                np.broadcast_to(cols, sub.shape)[okb]] = sub[okb]
+
+    def result(self) -> list:
+        meas = self.plan.measure
+        outs = [o[:, : self.plan.n_cols] for o in self._outs]
+        if self.plan.clip and meas.clip is not None:
+            for o in outs:
+                np.clip(o, meas.clip[0], meas.clip[1], out=o)
+        return outs
+
+
 class TopKSink(TileSink):
     """Streaming per-row top-k neighbours: keep the k strongest-|r| partners
     of every row without materialising the matrix — O(n_rows * k) state.
@@ -404,7 +471,9 @@ class TopKSink(TileSink):
     (row == col) are excluded; rectangular workloads rank each X row's
     neighbours among the Y rows.  Each pass merges its candidate
     (row, col, value) triples into the running per-row top-k (sorted by
-    descending |value|), so memory never exceeds the state plus one pass.
+    descending |value|, ties broken by ascending column index — a
+    canonical order, so the kept set is independent of pass partitioning),
+    so memory never exceeds the state plus one pass.
 
     result() is {"indices": (n_rows, k) int64, "values": (n_rows, k) f32};
     rows with fewer than k valid partners pad with index -1 / value 0.
@@ -458,7 +527,14 @@ class TopKSink(TileSink):
             cand_i = np.concatenate([self.idx[u], c_s[lo:hi]])
             key = np.abs(cand_v)
             key[cand_i < 0] = -np.inf  # empty slots lose to any candidate
-            sel = np.argsort(-key, kind="stable")[: self.k]
+            # canonical total order: |value| desc, then column asc.  A row's
+            # candidate columns are unique, so this total order makes the
+            # retained top-k a *set function* of the candidates seen —
+            # independent of pass partitioning, merge order, and state
+            # capacity >= k, ties included.  That is what lets the serving
+            # batcher slice one TopKSink(k_max) run into per-request top-k
+            # lists bit-identical to standalone TopKSink(k) runs.
+            sel = np.lexsort((cand_i, -key))[: self.k]
             self.vals[u] = cand_v[sel]
             self.idx[u] = cand_i[sel]
 
@@ -473,6 +549,7 @@ __all__ = [
     "HostSink",
     "ReductionSink",
     "EdgeCountSink",
+    "RowBlockSink",
     "TopKSink",
     "scatter_tiles",
     "scatter_tiles_at",

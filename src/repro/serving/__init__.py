@@ -1,0 +1,42 @@
+"""repro.serving — corr() as a long-lived, request-batched query service.
+
+The serving layer the ROADMAP's production north-star asks for: register
+an expression corpus once, then serve interactive "m probes vs corpus"
+queries (the rectangular GridWorkload shape) with the per-call costs a
+one-shot ``corr()`` pays — row transform, plan construction, kernel
+tracing, per-launch overhead — amortised across requests:
+
+  corpus.py      CorpusHandle: per-measure corpus transforms + norms,
+                 computed once, cached on device (the same TransformCache
+                 seam ``corr()`` itself uses).
+  plan_cache.py  ProblemSpec / PlanCache: frozen plans keyed on bucketed
+                 problem specs; repeat shapes never re-plan or re-trace.
+  batcher.py     Query / QueryBatcher: coalesce concurrent queries into
+                 one padded grid launch, scatter per-request results back
+                 (dense rows via RowBlockSink, top-k via one TopKSink).
+  server.py      CorrServer: sync + async submission, max-wait/max-batch
+                 dispatch policy, per-request serving stats.
+
+Results are bit-identical to standalone ``corr()`` calls — batching and
+caching are pure execution policy (docs/serving.md).
+"""
+
+from repro.serving.batcher import BatchInfo, Query, QueryBatcher
+from repro.serving.corpus import CorpusHandle, as_corpus
+from repro.serving.plan_cache import (PlanCache, ProblemSpec, bucket_rows,
+                                      mesh_key)
+from repro.serving.server import CorrServer, ServedResult
+
+__all__ = [
+    "BatchInfo",
+    "CorpusHandle",
+    "CorrServer",
+    "PlanCache",
+    "ProblemSpec",
+    "Query",
+    "QueryBatcher",
+    "ServedResult",
+    "as_corpus",
+    "bucket_rows",
+    "mesh_key",
+]

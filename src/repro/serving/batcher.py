@@ -1,0 +1,201 @@
+"""QueryBatcher: coalesce small probe queries into one grid launch.
+
+Interactive co-expression queries are small — a handful of probe profiles
+against an n-gene corpus — and launching the tiled engine per query wastes
+it: each launch pays kernel dispatch, pass-loop overhead, and (for novel
+shapes) a trace.  Continuous-batching serving systems (Orca, PAPERS.md)
+amortise exactly this by folding concurrent requests into one
+hardware-shaped batch; for pairwise correlation the fold is free because
+the engine's output rows are *independent* — row i of U@Vᵀ depends only on
+row i of U — so stacking request slabs row-wise changes no result bit.
+
+``execute()`` takes a list of :class:`Query` objects and serves them as a
+minimal number of launches:
+
+  1. group by (measure, output kind) — dense rows and per-row top-k need
+     different sinks;
+  2. per group: stack the probe slabs row-wise, bucket the stacked row
+     count to a tile multiple (plan_cache.bucket_rows) and fetch the
+     frozen plan from the :class:`~repro.serving.plan_cache.PlanCache`;
+  3. run ONE ``execute_plan`` launch — the corpus operand comes prepared
+     from the :class:`~repro.serving.corpus.CorpusHandle` cache, the slab
+     goes through ``ExecutionPlan.prepare_rows`` (zero-row padding up to
+     the bucket is inert);
+  4. scatter per-request results back out: dense groups stream through
+     :class:`~repro.core.sinks.RowBlockSink` straight into independent
+     per-request arrays; top-k groups run one
+     :class:`~repro.core.sinks.TopKSink` at the group's max k and each
+     request takes its row range and leading k_i columns (top-k is
+     prefix-stable: the first k_i of a top-k_max list ARE the top-k_i).
+
+Results are bit-identical to per-request ``corr(probes, corpus, ...)``
+calls (tests/test_serving.py pins this, ragged tile-straddling slabs
+included).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import measures
+from repro.core.allpairs import execute_plan
+from repro.core.sinks import RowBlockSink, TopKSink
+from repro.serving.corpus import CorpusHandle, as_corpus
+from repro.serving.plan_cache import PlanCache, ProblemSpec
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Query:
+    """One serving request: (m, l) probe profiles vs the corpus.
+
+    k=None returns the dense (m, n) correlation rows; an integer k returns
+    the per-row top-k strongest-|r| corpus partners ({"indices", "values"}
+    as TopKSink).  measure=None inherits the batcher's default.
+    """
+
+    probes: Any
+    k: Optional[int] = None
+    measure: Optional[measures.MeasureLike] = None
+
+    def __post_init__(self):
+        self.probes = jnp.asarray(self.probes)
+        if self.probes.ndim != 2 or self.probes.shape[0] < 1:
+            raise ValueError(
+                f"probes must be (m >= 1, l), got shape {self.probes.shape}")
+        if self.k is not None and self.k <= 0:
+            raise ValueError(f"k must be positive, got {self.k}")
+
+    @property
+    def m(self) -> int:
+        return self.probes.shape[0]
+
+
+@dataclasses.dataclass
+class BatchInfo:
+    """What one coalesced launch looked like (surfaced per request)."""
+
+    requests: int           # queries coalesced into this launch
+    rows: int               # real probe rows in the slab
+    rows_bucket: int        # padded launch rows (tile multiple)
+    plan_cache_hit: bool
+    passes: int
+
+    @property
+    def occupancy(self) -> float:
+        """Real rows / launched rows — 1.0 means no padding waste."""
+        return self.rows / self.rows_bucket if self.rows_bucket else 0.0
+
+
+class QueryBatcher:
+    """Executes query batches against one registered corpus.
+
+    Synchronous core of the serving layer: :class:`CorrServer` owns the
+    queueing/wait policy and calls ``execute()`` from its dispatcher
+    thread; direct callers can use it as a batch API.
+    """
+
+    def __init__(self, corpus, *,
+                 measure: measures.MeasureLike = "pearson",
+                 plan_cache: Optional[PlanCache] = None,
+                 t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
+                 compute_dtype=None, clip: bool = True,
+                 fuse_epilogue: bool = True,
+                 max_tiles_per_pass: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 mesh=None):
+        self.corpus: CorpusHandle = as_corpus(corpus, t=t, l_blk=l_blk)
+        self.measure = measures.get(measure)
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self.t = int(t)
+        self.l_blk = int(l_blk)
+        self.compute_dtype = compute_dtype
+        self.clip = clip
+        self.fuse_epilogue = fuse_epilogue
+        self.max_tiles_per_pass = max_tiles_per_pass
+        self.interpret = interpret
+        self.mesh = mesh
+
+    # -- internals ----------------------------------------------------------
+
+    def _resolve_measure(self, q: Query) -> measures.Measure:
+        return self.measure if q.measure is None else measures.get(q.measure)
+
+    def _spec(self, rows: int, meas: measures.Measure) -> ProblemSpec:
+        return ProblemSpec.for_query(
+            rows, self.corpus.n, self.corpus.l, measure=meas,
+            t=self.t, l_blk=self.l_blk, compute_dtype=self.compute_dtype,
+            clip=self.clip, fuse_epilogue=self.fuse_epilogue,
+            max_tiles_per_pass=self.max_tiles_per_pass,
+            interpret=self.interpret, mesh=self.mesh)
+
+    def _launch_group(self, meas: measures.Measure, group: List[Query],
+                      topk: bool):
+        """One coalesced launch for queries sharing (measure, kind)."""
+        slab = (group[0].probes if len(group) == 1
+                else jnp.concatenate([q.probes for q in group]))
+        rows = slab.shape[0]
+        plan, hit = self.plan_cache.get(self._spec(rows, meas))
+        u_pad = plan.prepare_rows(slab)
+        v_pad = self.corpus.operand(meas, self.compute_dtype)
+
+        bounds, lo = [], 0
+        for q in group:
+            bounds.append((lo, lo + q.m))
+            lo += q.m
+
+        if topk:
+            kmax = max(q.k for q in group)
+            top = execute_plan(plan, u_pad, v_pad,
+                               sink=TopKSink(kmax), mesh=self.mesh)
+            outs = [{"indices": top["indices"][lo:hi, : q.k].copy(),
+                     "values": top["values"][lo:hi, : q.k].copy()}
+                    for (lo, hi), q in zip(bounds, group)]
+        else:
+            outs = execute_plan(plan, u_pad, v_pad,
+                                sink=RowBlockSink(bounds), mesh=self.mesh)
+        info = BatchInfo(requests=len(group), rows=rows,
+                         rows_bucket=plan.n_rows, plan_cache_hit=hit,
+                         passes=plan.n_pass)
+        return outs, info
+
+    # -- public -------------------------------------------------------------
+
+    def execute(self, queries: List[Query]):
+        """Serve a batch of queries with the fewest launches, returning
+        (results, infos) aligned with the input order.  results[i] is the
+        dense (m_i, n) array or the top-k dict of queries[i]; infos[i]
+        describes the launch that served it."""
+        for q in queries:
+            if q.probes.shape[1] != self.corpus.l:
+                raise ValueError(
+                    f"probes have l={q.probes.shape[1]} samples, corpus "
+                    f"has l={self.corpus.l}")
+        groups: Dict[tuple, List[int]] = {}
+        group_meas: Dict[tuple, measures.Measure] = {}
+        for i, q in enumerate(queries):
+            meas = self._resolve_measure(q)
+            # group by measure *identity*, not name: a custom Measure
+            # shadowing a registry name must not share a launch with it
+            key = (id(meas), q.k is not None)
+            groups.setdefault(key, []).append(i)
+            group_meas[key] = meas
+
+        results: List[Any] = [None] * len(queries)
+        infos: List[Optional[BatchInfo]] = [None] * len(queries)
+        for key, idxs in groups.items():
+            group = [queries[i] for i in idxs]
+            outs, info = self._launch_group(group_meas[key], group, key[1])
+            for i, out in zip(idxs, outs):
+                results[i] = out
+                infos[i] = info
+        return results, infos
+
+
+__all__ = ["Query", "QueryBatcher", "BatchInfo"]

@@ -1,0 +1,133 @@
+"""CorpusHandle: a registered expression corpus, transformed once.
+
+The serving workload (ROADMAP "serve corr() behind the request batching
+layer") is "m probes vs the corpus": biologists query which of n corpus
+genes co-express with a handful of probes (the rectangular GridWorkload
+shape of core/api.py).  The corpus side of that product is *fixed* — an
+(n, l) expression matrix registered once — so its per-measure row
+transform (the only per-operand device work of a run, O(n·l)) and derived
+statistics should be computed once and reused by every query, not re-run
+per call.
+
+A ``CorpusHandle`` owns a private :class:`~repro.core.api.TransformCache`
+— the same seam ``corr()`` routes its operands through — keyed per
+(measure, compute_dtype, tile alignment).  ``operand()`` returns the
+prepared (transformed, narrowed, padded) device operand the batcher hands
+to the executor as ``v_pad``; ``row_norms()`` exposes the per-row L2
+norms of the transformed corpus (a cheap screen for degenerate rows:
+pearson/cosine rows with zero variance/norm transform to zero rows and
+score 0 with everything).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import measures
+from repro.core.api import TransformCache
+from repro.core.plan import prepare_operand_raw
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+
+Array = jax.Array
+
+
+class CorpusHandle:
+    """An (n, l) corpus registered with the serving layer.
+
+    Holds a strong reference to the corpus device array (stable identity
+    for the transform cache; the device buffer is pinned for the handle's
+    lifetime) plus the cached per-measure prepared operands.  Handles are
+    cheap views over the cache — build one per corpus and share it across
+    servers/batchers.
+    """
+
+    def __init__(self, x, *, t: int = DEFAULT_TILE,
+                 l_blk: int = DEFAULT_LBLK, cache_capacity: int = 8):
+        x = jnp.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"corpus must be (n, l), got shape {x.shape}")
+        self.x = x
+        self.t = int(t)
+        self.l_blk = int(l_blk)
+        self._cache = TransformCache(capacity=cache_capacity)
+        self._norms: Dict[str, Array] = {}
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def l(self) -> int:
+        return self.x.shape[1]
+
+    def _prepare(self, meas: measures.Measure, compute_dtype) -> Array:
+        # the one shared preparation pipeline (plan.prepare_operand_raw):
+        # serving bit-identity requires exactly what corr() would prepare
+        return prepare_operand_raw(self.x, meas, compute_dtype,
+                                   self.t, self.l_blk)
+
+    def operand(self, measure: measures.MeasureLike = "pearson",
+                compute_dtype=None) -> Array:
+        """The prepared corpus operand for a measure — transformed,
+        optionally narrowed, padded to kernel alignment — computed at most
+        once per (measure, compute_dtype) and cached on device.
+
+        Bit-identical to what ``corr(probes, corpus, measure=...)`` would
+        prepare internally (same transform, same padding), so batched
+        serving results match one-shot calls exactly.
+        """
+        meas = measures.get(measure)
+        cd = None if compute_dtype is None else jnp.dtype(compute_dtype)
+        return self._cache.prepared(
+            self.x, meas, cd, self.t, self.l_blk,
+            build=lambda: self._prepare(meas, cd))
+
+    def row_norms(self, measure: measures.MeasureLike = "pearson") -> Array:
+        """Per-row L2 norms of the transformed corpus (cached).
+
+        For pearson/spearman/cosine the transform L2-normalises rows, so
+        norms are 1 except for degenerate (constant / all-zero) rows,
+        which are exactly 0 — a free validity screen for query results.
+        """
+        meas = measures.get(measure)
+        norms = self._norms.get(meas.name)
+        if norms is None:
+            u = self.operand(meas)[: self.n]
+            norms = jnp.sqrt(jnp.sum(
+                u.astype(jnp.float32) ** 2, axis=1))
+            self._norms[meas.name] = norms
+        return norms
+
+    def stats(self) -> dict:
+        """Transform-cache counters: `misses` is the number of corpus
+        transforms actually run (the serving invariant: one per
+        (measure, dtype), however many queries arrive)."""
+        return self._cache.stats()
+
+    def __repr__(self) -> str:
+        return (f"CorpusHandle(n={self.n}, l={self.l}, t={self.t}, "
+                f"l_blk={self.l_blk}, cached={len(self._cache)})")
+
+
+def as_corpus(corpus, *, t: int = DEFAULT_TILE,
+              l_blk: int = DEFAULT_LBLK) -> CorpusHandle:
+    """Coerce an array or handle to a CorpusHandle (arrays register fresh;
+    handles pass through, their alignment must match)."""
+    if isinstance(corpus, CorpusHandle):
+        if (corpus.t, corpus.l_blk) != (t, l_blk):
+            raise ValueError(
+                f"corpus handle alignment (t={corpus.t}, l_blk="
+                f"{corpus.l_blk}) does not match requested (t={t}, "
+                f"l_blk={l_blk})")
+        return corpus
+    if isinstance(corpus, (np.ndarray, jax.Array)) or hasattr(
+            corpus, "__array__"):
+        return CorpusHandle(corpus, t=t, l_blk=l_blk)
+    raise TypeError(f"cannot register corpus of type {type(corpus)}")
+
+
+__all__ = ["CorpusHandle", "as_corpus"]

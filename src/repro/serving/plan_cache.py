@@ -1,0 +1,152 @@
+"""PlanCache: frozen ExecutionPlans keyed on bucketed problem specs.
+
+Serving turns ``corr()`` from a one-shot batch call into a stream of small
+queries, and the per-call costs that one big run amortises stop being
+amortised: plan construction is cheap host Python, but every *new padded
+shape* reaching the jitted kernel (kernels/pcc_tile.pcc_tiles) re-traces
+and re-compiles.  Two levers kill that cost:
+
+  * **shape bucketing** — probe row counts round up to the tile multiple
+    (``bucket_rows``), so every query with 1..t probes shares one plan and
+    one compiled kernel; zero-padded probe rows are inert
+    (ExecutionPlan.prepare_rows).  The corpus side is registered once per
+    CorpusHandle and keeps its exact row count — bucketing it would leak
+    phantom padding columns into results.
+  * **spec-keyed reuse** — a frozen :class:`ProblemSpec` captures every
+    plan-identity field (measure, bucketed shapes, sample count, tile
+    geometry, dtype, mesh); equal specs get the *same* ExecutionPlan
+    object back, so the jit cache sees identical static arguments and
+    never re-traces (cf. Orca-style iteration-level serving, PAPERS.md:
+    the plan cache is the "session state" requests attach to).
+
+The cache is a bounded LRU with hit/miss counters surfaced per request by
+the server (``CorrServer.stats()``) and by ``benchmarks/serving.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import measures
+from repro.core.lru import LruStatsCache
+from repro.core.plan import ExecutionPlan
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+
+
+def bucket_rows(rows: int, t: int) -> int:
+    """Round a probe row count up to the tile multiple — the shape bucket
+    every query of 1..t, t+1..2t, ... probes shares."""
+    if rows <= 0:
+        raise ValueError(f"rows must be positive, got {rows}")
+    return -(-rows // t) * t
+
+
+def mesh_key(mesh) -> Optional[tuple]:
+    """Hashable identity of a jax Mesh for spec keying: axis names/sizes
+    plus the flat device ids (two meshes over different devices must not
+    share plans/executors even when shapes agree)."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.shape.items()),
+            tuple(d.id for d in mesh.devices.flat))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """The bucketed identity of a serving query shape — the cache key.
+
+    Mirrors ``ExecutionPlan.spec_dict()`` (plus the mesh, which the plan
+    only records as a flat device count): two queries with equal specs are
+    served by the same frozen plan and hit the same compiled kernels.
+    ``cols`` is None for symmetric all-pairs specs; for rectangular specs
+    it is the corpus's *exact* row count (only the probe side buckets).
+
+    Measure identity is (name, object id): registered names resolve to
+    module singletons (stable id), and unregistered custom Measure
+    instances — which ``corr()`` accepts — are distinguished by identity
+    even when their names shadow a registry key.  The resolved object
+    itself rides along outside the equality/hash (``measure_ref``), which
+    both lets ``build()`` use it directly (never a registry lookup that
+    could miss or resolve to a different measure) and keeps it alive so
+    its id cannot be recycled while a cache holds the spec.
+    """
+
+    measure: str
+    rows: int                      # bucketed probe rows (tile multiple)
+    cols: Optional[int]            # exact corpus rows; None = symmetric
+    l: int                         # sample count
+    measure_id: int = 0            # id(resolved Measure) — identity key
+    measure_ref: Optional[measures.Measure] = dataclasses.field(
+        default=None, compare=False, repr=False)
+    t: int = DEFAULT_TILE
+    l_blk: int = DEFAULT_LBLK
+    compute_dtype: Optional[str] = None
+    clip: bool = True
+    fuse_epilogue: bool = True
+    max_tiles_per_pass: Optional[int] = None
+    interpret: Optional[bool] = None
+    mesh: Optional[tuple] = None   # mesh_key(mesh) or None
+
+    @classmethod
+    def for_query(cls, n_probes: int, corpus_n: Optional[int], l: int, *,
+                  measure: measures.MeasureLike = "pearson",
+                  t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
+                  compute_dtype=None, clip: bool = True,
+                  fuse_epilogue: bool = True,
+                  max_tiles_per_pass: Optional[int] = None,
+                  interpret: Optional[bool] = None,
+                  mesh=None) -> "ProblemSpec":
+        """Spec for an m-probes-vs-corpus query (corpus_n None = the
+        symmetric all-pairs workload over the probes themselves, un-bucketed
+        — its output is (n, n) and phantom rows would be phantom columns)."""
+        cd = None if compute_dtype is None else jnp.dtype(compute_dtype).name
+        rows = (n_probes if corpus_n is None
+                else bucket_rows(n_probes, t))
+        meas = measures.get(measure)
+        return cls(measure=meas.name, measure_id=id(meas), measure_ref=meas,
+                   rows=rows, cols=corpus_n, l=l, t=t, l_blk=l_blk,
+                   compute_dtype=cd, clip=clip, fuse_epilogue=fuse_epilogue,
+                   max_tiles_per_pass=max_tiles_per_pass,
+                   interpret=interpret, mesh=mesh_key(mesh))
+
+    def build(self) -> ExecutionPlan:
+        """Construct the ExecutionPlan this spec describes."""
+        p = 1 if self.mesh is None else len(self.mesh[1])
+        return ExecutionPlan.create(
+            self.rows, self.l, n_cols=self.cols, t=self.t, l_blk=self.l_blk,
+            measure=(self.measure_ref if self.measure_ref is not None
+                     else self.measure), p=p,
+            max_tiles_per_pass=self.max_tiles_per_pass,
+            interpret=self.interpret, clip=self.clip,
+            fuse_epilogue=self.fuse_epilogue,
+            compute_dtype=self.compute_dtype)
+
+
+class PlanCache(LruStatsCache):
+    """Bounded LRU of spec -> frozen ExecutionPlan, with hit/miss stats.
+
+    Returning the *same* plan object for equal specs is the point: the
+    executor's kernel calls pass plan-derived static arguments, so repeat
+    shapes reuse compiled code instead of re-tracing.  Thread-safe (the
+    server resolves plans from its dispatcher thread while sync callers
+    resolve their own).
+    """
+
+    def __init__(self, capacity: int = 32):
+        super().__init__(capacity)
+
+    def get(self, spec: ProblemSpec) -> Tuple[ExecutionPlan, bool]:
+        """(plan, was_hit) for a spec; builds and caches on miss, evicting
+        the least-recently-used spec beyond capacity."""
+        plan = self._lookup(spec)
+        if plan is not None:
+            return plan, True
+        plan = spec.build()  # host-side planning, outside the lock
+        self._insert(spec, plan)
+        return plan, False
+
+
+__all__ = ["ProblemSpec", "PlanCache", "bucket_rows", "mesh_key"]

@@ -1,0 +1,250 @@
+"""CorrServer: a long-lived query service over one registered corpus.
+
+The front end of the serving layer (docs/serving.md).  A server owns
+
+  * a :class:`~repro.serving.corpus.CorpusHandle` (corpus transforms run
+    once per measure, cached on device),
+  * a :class:`~repro.serving.plan_cache.PlanCache` (repeat query shapes
+    reuse frozen plans and compiled kernels),
+  * a :class:`~repro.serving.batcher.QueryBatcher` plus ONE dispatcher
+    thread that coalesces concurrent requests under a max-wait /
+    max-batch-rows policy.
+
+Submission is thread-safe from any number of caller threads:
+
+    with CorrServer(corpus, t=..., max_wait_s=0.002) as srv:
+        fut = srv.submit(probes, k=10)        # async: Future[ServedResult]
+        res = srv.query(other_probes)         # sync: ServedResult
+
+``submit()`` enqueues and returns a Future immediately; the dispatcher
+collects everything that arrives within ``max_wait_s`` of the *oldest*
+queued request (or until ``max_batch_rows`` probe rows are waiting) and
+serves the whole batch as a minimal number of launches.  All kernel
+launches, transforms, and result transfers happen on the dispatcher
+thread; the caller thread only validates and device-puts its own probe
+array (``jnp.asarray`` in Query) — safe under JAX's thread-safe
+dispatch, and the enqueue itself is lock-protected.
+
+Every result carries per-request stats: queue wait, service time, batch
+occupancy, and whether the launch hit the plan cache — the observability
+the serving benchmark (benchmarks/serving.py) and capacity planning need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, List, Optional
+
+from repro.core import measures
+from repro.serving.batcher import Query, QueryBatcher
+from repro.serving.plan_cache import PlanCache
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+
+
+@dataclasses.dataclass
+class ServedResult:
+    """A request's answer plus how it was served.
+
+    value: the dense (m, n) rows or the {"indices", "values"} top-k dict —
+           bit-identical to a standalone ``corr()`` call.
+    stats: queue_s (enqueue -> dispatch), service_s (dispatch -> done),
+           batch_requests / batch_rows / batch_occupancy, plan_cache_hit,
+           passes.
+    """
+
+    value: Any
+    stats: dict
+
+
+@dataclasses.dataclass
+class _Pending:
+    query: Query
+    future: Future
+    t_enqueue: float
+
+
+class CorrServer:
+    """Plan-cached, request-batched ``corr()`` queries against a corpus.
+
+    max_wait_s:     how long the dispatcher holds the oldest request open
+                    for batch-mates before launching (latency it is willing
+                    to trade for occupancy).
+    max_batch_rows: flush as soon as this many probe rows are queued — a
+                    batch never exceeds it unless a single request does
+                    (single requests are never split).
+    Remaining kwargs keep their ``corr()`` semantics and fix the serving
+    configuration (tile geometry, default measure, precision, mesh).
+    """
+
+    def __init__(self, corpus, *,
+                 measure: measures.MeasureLike = "pearson",
+                 t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
+                 max_wait_s: float = 0.002, max_batch_rows: int = 4096,
+                 plan_cache: Optional[PlanCache] = None,
+                 compute_dtype=None, clip: bool = True,
+                 fuse_epilogue: bool = True,
+                 max_tiles_per_pass: Optional[int] = None,
+                 interpret: Optional[bool] = None, mesh=None):
+        if max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        if max_batch_rows <= 0:
+            raise ValueError(
+                f"max_batch_rows must be positive, got {max_batch_rows}")
+        self.batcher = QueryBatcher(
+            corpus, measure=measure, plan_cache=plan_cache, t=t, l_blk=l_blk,
+            compute_dtype=compute_dtype, clip=clip,
+            fuse_epilogue=fuse_epilogue,
+            max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
+            mesh=mesh)
+        self.max_wait_s = float(max_wait_s)
+        self.max_batch_rows = int(max_batch_rows)
+        self._cv = threading.Condition()
+        self._queue: List[_Pending] = []
+        self._closed = False
+        self._batches = 0
+        self._requests = 0
+        self._rows = 0
+        self._occupancy_sum = 0.0
+        self._thread = threading.Thread(target=self._dispatch_loop,
+                                        name="corr-server-dispatch",
+                                        daemon=True)
+        self._thread.start()
+
+    # -- submission ---------------------------------------------------------
+
+    @property
+    def corpus(self):
+        return self.batcher.corpus
+
+    @property
+    def plan_cache(self) -> PlanCache:
+        return self.batcher.plan_cache
+
+    def submit(self, probes, *, k: Optional[int] = None,
+               measure: Optional[measures.MeasureLike] = None
+               ) -> "Future[ServedResult]":
+        """Enqueue one query; returns immediately with a Future that
+        resolves to a :class:`ServedResult` once a batch serves it."""
+        q = Query(probes, k=k, measure=measure)  # validates shapes eagerly
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("CorrServer is closed")
+            self._queue.append(_Pending(q, fut, time.monotonic()))
+            self._cv.notify_all()
+        return fut
+
+    def query(self, probes, *, k: Optional[int] = None,
+              measure: Optional[measures.MeasureLike] = None
+              ) -> ServedResult:
+        """Synchronous spelling of submit(): blocks for the result (the
+        request still rides whatever batch the dispatcher forms, so a sync
+        caller pays at most max_wait_s of coalescing latency)."""
+        return self.submit(probes, k=k, measure=measure).result()
+
+    # -- dispatcher ---------------------------------------------------------
+
+    def _take_batch(self) -> List[_Pending]:
+        """Collect the next batch (called with _cv held, queue non-empty):
+        wait out the oldest request's max_wait_s window (flushing early on
+        max_batch_rows), then pop whole requests FIFO up to the row cap."""
+        deadline = self._queue[0].t_enqueue + self.max_wait_s
+        while not self._closed:
+            rows = sum(p.query.m for p in self._queue)
+            remaining = deadline - time.monotonic()
+            if rows >= self.max_batch_rows or remaining <= 0:
+                break
+            self._cv.wait(timeout=remaining)
+        batch, rows = [], 0
+        while self._queue:
+            nxt = self._queue[0]
+            if batch and rows + nxt.query.m > self.max_batch_rows:
+                break
+            batch.append(self._queue.pop(0))
+            rows += nxt.query.m
+        return batch
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if not self._queue and self._closed:
+                    return
+                batch = self._take_batch()
+            if batch:
+                self._serve(batch)
+
+    def _serve(self, batch: List[_Pending]) -> None:
+        # Transition every future to RUNNING first: from here on a client
+        # cancel() returns False instead of racing our set_result (a cancel
+        # landing between a cancelled() check and set_result would raise
+        # InvalidStateError and kill the dispatcher thread).  Requests
+        # cancelled before dispatch drop out of the batch uncomputed.
+        batch = [p for p in batch if p.future.set_running_or_notify_cancel()]
+        if not batch:
+            return
+        t_start = time.monotonic()
+        try:
+            results, infos = self.batcher.execute([p.query for p in batch])
+        except BaseException as e:  # noqa: BLE001 — fail the whole batch
+            for p in batch:
+                p.future.set_exception(e)
+            return
+        t_done = time.monotonic()
+        with self._cv:
+            self._batches += 1
+            self._requests += len(batch)
+            self._rows += sum(p.query.m for p in batch)
+            self._occupancy_sum += sum(i.occupancy for i in infos
+                                       ) / max(len(infos), 1)
+        for p, value, info in zip(batch, results, infos):
+            stats = {
+                "queue_s": t_start - p.t_enqueue,
+                "service_s": t_done - t_start,
+                "batch_requests": info.requests,
+                "batch_rows": info.rows,
+                "batch_occupancy": info.occupancy,
+                "plan_cache_hit": info.plan_cache_hit,
+                "passes": info.passes,
+            }
+            p.future.set_result(ServedResult(value=value, stats=stats))
+
+    # -- lifecycle / observability ------------------------------------------
+
+    def stats(self) -> dict:
+        """Server-level counters plus the plan- and transform-cache views
+        (the serving benchmark reads these)."""
+        with self._cv:
+            batches = self._batches
+            served = {
+                "requests": self._requests,
+                "batches": batches,
+                "rows": self._rows,
+                "mean_batch_occupancy": (self._occupancy_sum / batches
+                                         if batches else 0.0),
+                "queued": len(self._queue),
+            }
+        served["plan_cache"] = self.plan_cache.stats()
+        served["corpus"] = self.corpus.stats()
+        return served
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain the queue (every accepted Future resolves), then stop the
+        dispatcher.  Idempotent."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "CorrServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = ["CorrServer", "ServedResult"]
