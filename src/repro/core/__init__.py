@@ -10,11 +10,13 @@ Public API:
   tiling       tile plans, pass partitioning, PE ranges (C3, C4, C5)
   allpairs     the plan-driven executor + deprecated symmetric drivers
   distributed  deprecated shard_map driver wrappers
-  permutation  batched permutation testing
+  significance permutation/bootstrap p-values as a replica-axis workload
+               (corr(pvalues=PermutationSpec(...)))
+  permutation  deprecated legacy wrapper over significance
 """
 
 from repro.core import (allpairs, api, distributed, mapping, measures, pcc,
-                        permutation, plan, sinks, tiling)
+                        permutation, plan, significance, sinks, tiling)
 from repro.core.allpairs import (allpairs_pcc, allpairs_pcc_streamed,
                                  allpairs_similarity,
                                  allpairs_similarity_streamed, stream_tiles)
@@ -24,8 +26,10 @@ from repro.core.distributed import allpairs_pcc_sharded, allpairs_pcc_sharded_u
 from repro.core.measures import Measure, dense_reference
 from repro.core.pcc import pearson_gemm, pearson_literal, transform
 from repro.core.plan import ExecutionPlan
-from repro.core.sinks import (DenseSink, EdgeCountSink, HostSink,
-                              ReductionSink, TileSink, TopKSink)
+from repro.core.significance import (PermutationSpec,
+                                     dense_significance_reference)
+from repro.core.sinks import (DenseSink, EdgeCountSink, ExceedanceSink,
+                              HostSink, ReductionSink, TileSink, TopKSink)
 
 __all__ = [
     "corr",
@@ -40,14 +44,18 @@ __all__ = [
     "pcc",
     "permutation",
     "plan",
+    "significance",
     "sinks",
     "tiling",
     "ExecutionPlan",
+    "PermutationSpec",
+    "dense_significance_reference",
     "TileSink",
     "DenseSink",
     "HostSink",
     "ReductionSink",
     "EdgeCountSink",
+    "ExceedanceSink",
     "TopKSink",
     "allpairs_pcc",
     "allpairs_pcc_streamed",

@@ -51,6 +51,7 @@ from repro.core import measures
 from repro.core.allpairs import _stream, execute_plan, run_sink
 from repro.core.lru import LruStatsCache
 from repro.core.plan import ExecutionPlan, pad_operands
+from repro.core.significance import PermutationSpec, run_significance
 from repro.core.sinks import HostSink, TileSink
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
 
@@ -280,6 +281,7 @@ def corr(
     fuse_epilogue: bool = True,
     compute_dtype=None,
     resume_from: Optional[str] = None,
+    pvalues: Optional[PermutationSpec] = None,
 ):
     """Pairwise similarity for any workload shape: plan -> executor -> sink.
 
@@ -313,6 +315,15 @@ def corr(
              plan spec must match this call).  Implies
              ``sink=HostSink(path=resume_from, resume=True)`` when no sink
              is given.
+    pvalues: a :class:`~repro.core.significance.PermutationSpec` makes the
+             run a significance workload (paper SSIV): B permuted (or
+             bootstrapped) replicas of the column operand ride every pass
+             as a replica grid axis, null exceedance counts reduce on
+             device (never a (B, n, n) array), and the call returns
+             ``(r, p)`` — the usual sink result plus p-values under the
+             add-one estimator.  ``pvalues.sink`` routes the p-value tiles
+             (dense by default); not supported with ``where=`` (the masked
+             component GEMMs have no single observed statistic to permute).
     t / l_blk / max_tiles_per_pass / interpret / clip / fuse_epilogue /
     compute_dtype keep their ExecutionPlan semantics.
     """
@@ -329,7 +340,14 @@ def corr(
                 "whose path matches resume_from")
 
     p = 1 if mesh is None else int(np.prod(mesh.devices.shape))
+    replicas = 0 if pvalues is None else pvalues.iterations
+    replica_chunk = None if pvalues is None else pvalues.chunk
     if problem.masked:
+        if pvalues is not None:
+            raise ValueError(
+                "pvalues= is not supported with where=: a masked run has "
+                "no single observed GEMM to permute (each pair's statistic "
+                "combines several component GEMMs over its common support)")
         if compute_dtype is not None:
             raise ValueError(
                 "compute_dtype narrowing is not supported with where= "
@@ -348,13 +366,17 @@ def corr(
             measure=problem.measure, p=p,
             max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
             clip=clip, fuse_epilogue=fuse_epilogue,
-            compute_dtype=compute_dtype)
+            compute_dtype=compute_dtype,
+            replicas=replicas, replica_chunk=replica_chunk)
         # the cached-transform seam: repeat calls over the same corpus
         # array run the O(n·l) row transform exactly once (the same seam
         # serving's CorpusHandle uses — see TransformCache).  problem.x is
         # the caller's object only when they passed a jax.Array; a numpy
         # input converts to a fresh array per call and must not be cached.
         u_pad = prepared_operand(plan, problem.x, cacheable=problem.x is x)
+        if pvalues is not None:
+            return run_significance(plan, pvalues, u_pad, columns=problem.x,
+                                    sink=sink, mesh=mesh, shard_u=shard_u)
         return execute_plan(plan, u_pad, sink=sink, mesh=mesh,
                             shard_u=shard_u)
 
@@ -362,10 +384,15 @@ def corr(
         problem.n_rows, problem.l, n_cols=problem.n_cols, t=t, l_blk=l_blk,
         measure=problem.measure, p=p,
         max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
-        clip=clip, fuse_epilogue=fuse_epilogue, compute_dtype=compute_dtype)
+        clip=clip, fuse_epilogue=fuse_epilogue, compute_dtype=compute_dtype,
+        replicas=replicas, replica_chunk=replica_chunk)
     u_pad = prepared_operand(plan, problem.x, cacheable=problem.x is x)
     v_pad = prepared_operand(plan, problem.y, expect_rows=problem.n_cols,
                              cacheable=problem.y is y)
+    if pvalues is not None:
+        return run_significance(plan, pvalues, u_pad, columns=problem.y,
+                                v_pad=v_pad, sink=sink, mesh=mesh,
+                                shard_u=shard_u)
     return execute_plan(plan, u_pad, v_pad, sink=sink, mesh=mesh,
                         shard_u=shard_u)
 

@@ -197,6 +197,21 @@ class Measure:
     exact_int8:   the transform's output is exactly representable in int8
                   (e.g. Kendall's +/-1/0 pair signs), enabling the int8
                   operand path of `prepare(compute_dtype=jnp.int8)`.
+    permute_gather: the transform commutes with sample permutation —
+                  transform(x[:, perm]) == transform(x)[:, perm] — because
+                  its per-row statistics (mean, norm, ranks) are
+                  permutation-invariant and it maps sample i to output
+                  column i.  Significance runs (core/significance.py) then
+                  build permuted replicas by *gathering columns of the
+                  already-prepared operand* (no re-transform per replica,
+                  and bit-identical to the legacy permutation path, which
+                  permuted U).  Must stay False for transforms that widen
+                  the sample axis (the Kendall pair expansions: permuting
+                  samples permutes pairs AND flips signs, which no column
+                  gather expresses — note C(3, 2) == 3, so a width check
+                  alone cannot detect this) and for any custom transform
+                  not proven to commute; False just routes replicas through
+                  the always-correct re-transform path.
     """
 
     name: str
@@ -205,6 +220,7 @@ class Measure:
     clip: Optional[Tuple[float, float]] = None
     epilogue_div: Optional[Callable[[int], float]] = None
     exact_int8: bool = False
+    permute_gather: bool = False
 
     @property
     def fusable(self) -> bool:
@@ -238,16 +254,19 @@ def identity_transform(x: Array, *, dtype=None) -> Array:
     return x.astype(dtype or x.dtype)
 
 
-PEARSON = Measure("pearson", pcc.transform, None, (-1.0, 1.0))
-SPEARMAN = Measure("spearman", spearman_transform, None, (-1.0, 1.0))
-COSINE = Measure("cosine", l2_normalize_rows, None, (-1.0, 1.0))
+PEARSON = Measure("pearson", pcc.transform, None, (-1.0, 1.0),
+                  permute_gather=True)
+SPEARMAN = Measure("spearman", spearman_transform, None, (-1.0, 1.0),
+                   permute_gather=True)
+COSINE = Measure("cosine", l2_normalize_rows, None, (-1.0, 1.0),
+                 permute_gather=True)
 COVARIANCE = Measure("covariance", center_rows, _cov_epilogue, None,
-                     epilogue_div=_cov_div)
+                     epilogue_div=_cov_div, permute_gather=True)
 KENDALL = Measure("kendall", pair_sign_transform, _kendall_epilogue,
                   (-1.0, 1.0), epilogue_div=_kendall_div, exact_int8=True)
 KENDALL_B = Measure("kendall_tau_b", pair_sign_tie_scaled_transform, None,
                     (-1.0, 1.0))
-DOT = Measure("dot", identity_transform, None, None)
+DOT = Measure("dot", identity_transform, None, None, permute_gather=True)
 
 _REGISTRY: Dict[str, Measure] = {
     "pearson": PEARSON,

@@ -1,28 +1,45 @@
-"""Permutation testing for all-pairs PCC significance (paper SSIV).
+"""Legacy permutation-testing entry point (paper SSIV) — deprecated shell.
 
-The paper motivates LightPCC with permutation tests (>= 1000 iterations)
-for statistical inference of pairwise correlation.  We implement the batched
-version: iteration b applies a random sample-permutation pi_b to one side,
+``permutation_pvalues`` predates the engine's significance workload and
+had three real bugs:
 
-    R_b = U @ pi_b(U)^T
+* **chunk-dependent results** — keys were split per chunk-*step*
+  (``split(key, ceil(B/chunk))``), so the same ``key`` + ``iterations``
+  drew different permutations whenever the chunk size changed;
+* **wasted ragged tail** — the final step launched a full chunk of
+  n x n GEMMs, discarded it, and recomputed the remainder;
+* **silent fixed seed** — ``key=None`` quietly used ``PRNGKey(0)``, so
+  repeated "independent" runs reused identical nulls.
 
-which is a *non-symmetric* all-pairs computation (R_b is not symmetric), so
-it exercises the square mapping (Eq. 7/8) rather than the triangular one.
-p-value(i, j) = (1 + #{b : |R_b[i,j]| >= |R[i,j]|}) / (1 + B).
+It is now a thin wrapper over the engine path,
+``corr(x, pvalues=PermutationSpec(...))`` (core/significance.py), which
+fixes all three structurally: one key per *iteration* is derived up front
+(chunk is a pure memory knob), replica launches are exact-sized
+(ExecutionPlan.replica_chunk_sizes), and the new API requires an explicit
+key — this wrapper keeps the old default but warns.
 
-Memory is bounded by streaming over permutation chunks; each chunk is a
-batched GEMM (B_chunk, n, n), embarrassingly parallel over the mesh batch
-axis in the distributed variant.
+Behaviour notes vs the original:
+
+* p-values follow the fixed per-iteration key derivation, so they differ
+  from the historical (buggy) values except when ``chunk`` divided
+  ``iterations`` evenly and equalled the split width — but are now
+  invariant to ``chunk``;
+* the returned p matrix is the engine's canonical *symmetric* output
+  (the upper-triangle comparison mirrored), where the legacy dense path
+  returned a slightly asymmetric matrix (entry (j, i) compared
+  ``<U_j, pi(U_i)>`` instead);
+* ``precision`` is accepted but ignored: the tiled kernel always
+  accumulates f32 on the MXU.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.pcc import pearson_from_u, transform
+from repro.core.significance import PermutationSpec
 
 
 def permutation_pvalues(
@@ -33,48 +50,22 @@ def permutation_pvalues(
     key: Optional[jax.Array] = None,
     precision=None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (R, pvalues), each (n, n).
-
-    Permutes the sample axis of the "column" side each iteration; counts
-    exceedances of |R_b| over |R_observed| with the add-one estimator.
+    """Returns (R, pvalues), each (n, n) — Pearson significance via the
+    engine's replica-axis workload.  Deprecated spelling of
+    ``corr(x, pvalues=PermutationSpec(iterations=..., key=..., chunk=...))``.
     """
+    del precision  # the tiled kernel always accumulates f32 on the MXU
     if key is None:
+        warnings.warn(
+            "permutation_pvalues(key=None) falls back to the fixed seed "
+            "PRNGKey(0): repeated 'independent' runs draw identical null "
+            "permutations.  Pass an explicit key= (the "
+            "corr(pvalues=PermutationSpec(...)) API requires one).",
+            UserWarning, stacklevel=2)
         key = jax.random.PRNGKey(0)
-    u = transform(x, dtype=jnp.float32)
-    r_obs = pearson_from_u(u, precision=precision)
-    abs_obs = jnp.abs(r_obs)
-    l = u.shape[1]
-
-    @jax.jit
-    def chunk_counts(key_chunk):
-        def one(k):
-            perm = jax.random.permutation(k, l)
-            r_b = jnp.dot(u, u[:, perm].T, precision=precision)
-            return (jnp.abs(r_b) >= abs_obs).astype(jnp.int32)
-
-        keys = jax.random.split(key_chunk, chunk)
-        return jax.vmap(one)(keys).sum(axis=0)
-
-    counts = jnp.zeros(r_obs.shape, jnp.int32)
-    steps = -(-iterations // chunk)
-    keys = jax.random.split(key, steps)
-    done = 0
-    for s in range(steps):
-        c = chunk_counts(keys[s])
-        take = min(chunk, iterations - done)
-        if take < chunk:
-            # recompute exactly for the ragged tail to keep iteration count honest
-            def one(k):
-                perm = jax.random.permutation(k, l)
-                r_b = jnp.dot(u, u[:, perm].T, precision=precision)
-                return (jnp.abs(r_b) >= abs_obs).astype(jnp.int32)
-            sub = jax.vmap(one)(jax.random.split(keys[s], take)).sum(axis=0)
-            counts = counts + sub
-        else:
-            counts = counts + c
-        done += take
-    pvals = (1.0 + counts) / (1.0 + iterations)
-    return r_obs, pvals
+    from repro.core.api import corr  # lazy: api builds on significance
+    return corr(x, pvalues=PermutationSpec(iterations=iterations, key=key,
+                                           chunk=chunk))
 
 
 __all__ = ["permutation_pvalues"]

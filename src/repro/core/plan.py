@@ -37,6 +37,11 @@ from repro.kernels.pcc_tile import (DEFAULT_LBLK, DEFAULT_TILE, EpilogueSpec)
 
 Array = jax.Array
 
+# Default replica-launch width of significance runs (ExecutionPlan.create
+# replica_chunk=None): bounds the stacked column-operand memory at
+# 64 x operand, matching the legacy permutation_pvalues chunk default.
+DEFAULT_REPLICA_CHUNK = 64
+
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     """None means "infer from the backend": compiled Pallas on TPU,
@@ -87,6 +92,13 @@ class ExecutionPlan:
     # pair semantics (TopKSink, EdgeCountSink) key on `symmetric_problem`,
     # not on the workload shape.
     symmetric_grid: bool = False
+    # Significance replica axis (core/significance.py): B permuted/
+    # bootstrapped variants of the column operand ride each pass as a third
+    # kernel grid axis, replica_chunk at a time (the device-memory knob —
+    # results are invariant to it, exactly like max_tiles_per_pass).
+    # replicas == 0 is a plain run.
+    replicas: int = 0
+    replica_chunk: int = 0
 
     def __post_init__(self):
         if self.workload is None:
@@ -159,7 +171,9 @@ class ExecutionPlan:
                interpret: Optional[bool] = None,
                clip: bool = True,
                fuse_epilogue: bool = True,
-               compute_dtype=None) -> "ExecutionPlan":
+               compute_dtype=None,
+               replicas: int = 0,
+               replica_chunk: Optional[int] = None) -> "ExecutionPlan":
         """Resolve measure, fusion, precision, padding, pass partitioning
         and per-device ranges — everything the drivers used to re-derive.
 
@@ -194,11 +208,19 @@ class ExecutionPlan:
             raise ValueError(
                 f"max_tiles_per_pass must be positive, got {max_tiles_per_pass}")
         mtp = min(per_dev, max_tiles_per_pass or per_dev)
+        if replicas < 0:
+            raise ValueError(f"replicas must be >= 0, got {replicas}")
+        if replica_chunk is not None and replica_chunk <= 0:
+            raise ValueError(
+                f"replica_chunk must be positive, got {replica_chunk}")
+        rc = 0 if replicas == 0 else min(replicas,
+                                         replica_chunk or DEFAULT_REPLICA_CHUNK)
         return cls(measure=meas, tile=tile, l_blk=l_blk,
                    interpret=resolve_interpret(interpret), clip=clip,
                    fused=fused, epilogue_spec=spec, compute_dtype=cd,
                    p=p, per_dev=per_dev, max_tiles_per_pass=mtp,
-                   workload=workload, tile_c=tile_c)
+                   workload=workload, tile_c=tile_c,
+                   replicas=replicas, replica_chunk=rc)
 
     # -- operand preparation ------------------------------------------------
 
@@ -308,6 +330,17 @@ class ExecutionPlan:
         """Device-local tile offset at which pass k starts."""
         return k * self.max_tiles_per_pass
 
+    @property
+    def replica_chunk_sizes(self) -> Tuple[int, ...]:
+        """Replica-launch sizes of a significance run: every chunk launches
+        replica_chunk variants except the last, which launches the exact
+        remainder — the replica analogue of launch_sizes, so no launch ever
+        computes (then discards) permutations past `replicas` (the legacy
+        ragged-tail bug).  Empty for plain runs."""
+        if self.replicas == 0:
+            return ()
+        return tiling.pass_launch_sizes(self.replicas, self.replica_chunk)
+
     def pass_selection(self, k: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
         """Valid tiles of pass k across the whole mesh.
 
@@ -355,6 +388,10 @@ class ExecutionPlan:
             "clip": self.clip, "fused": self.fused,
             "p": self.p, "max_tiles_per_pass": self.max_tiles_per_pass,
             "total_tiles": self.total_tiles, "n_pass": self.n_pass,
+            # replica_chunk is deliberately absent: like the pass split it
+            # is a pure memory knob — p-values are invariant to it, so a
+            # resumed significance run may re-chunk freely
+            "replicas": self.replicas,
         }
 
     def spec_key(self) -> tuple:
@@ -403,6 +440,7 @@ def pad_operands(u: Array, t: int, l_blk: int) -> Array:
 
 
 __all__ = [
+    "DEFAULT_REPLICA_CHUNK",
     "ExecutionPlan",
     "pad_operands",
     "prepare_operand_raw",

@@ -1,0 +1,474 @@
+"""Permutation/bootstrap significance as a first-class engine workload.
+
+The paper motivates LightPCC with permutation testing (SSIV: >= 1000
+iterations per dataset) — all-pairs correlation is usually computed *to
+ask which pairs are real*.  This module runs that question through the
+plan/executor/sink core instead of the legacy dense batched-GEMM path
+(core/permutation.py, now a thin wrapper over this module):
+
+    r, p = corr(x, pvalues=PermutationSpec(iterations=1000, key=0))
+
+Replica axis.  Iteration b applies a random sample reordering pi_b to the
+*column* operand; R_b = U @ pi_b(V)^T is then a plain all-pairs workload
+over the same row operand.  Rather than one launch per iteration, the
+stacked (R, cols_pad, l_pad) replica operand rides the existing Pallas
+tile kernel as a leading grid axis (kernels/pcc_tile.py `replica` mode):
+one launch per pass covers a whole replica chunk, for both bijection
+families (triangle and rectangular grid) and on a shard_map mesh, where
+replicas ride the per-pass device ranges unchanged.
+
+Replica operands.  Measures whose row transform commutes with sample
+permutation (Measure.permute_gather — mean/norm/ranks are permutation-
+invariant) build replicas by *gathering columns of the already-prepared
+operand*: no per-replica re-transform, and bit-identical to the legacy
+path, which permuted U.  Everything else — bootstrap resampling always,
+and transforms that widen the sample axis (Kendall's pair expansion) —
+routes through the always-correct re-transform of the permuted raw data.
+
+Exceedance semantics.  p(i, j) = (1 + #{b : |R_b| >= |R|}) / (1 + B), the
+add-one estimator.  Both sides of the comparison are *finalised* values
+(epilogue + the bounded-measure clip), which for every built-in measure
+matches the legacy comparison bit-for-bit: the epilogue is a shared
+positive scale, and clipping both sides of `>=` at the same bound cannot
+change the outcome.  Counts accumulate *on device* per pass — an int32
+buffer of O(pass tiles), sharded across the mesh, never a (B, n, n)
+array — and stream through an ExceedanceSink (core/sinks.py) into any
+inner TileSink (dense, host/memmap checkpointed, top-k).
+
+Memory model.  Peak device memory beyond the operands is one pass's
+observed tiles + counts (max_tiles_per_pass * t * t) plus one replica
+chunk's stacked operand and output (replica_chunk * (operand + pass
+tiles)).  `PermutationSpec.chunk` is a pure memory knob: one key is
+derived per *iteration* up front (jax.random.split(key, B)) and chunks
+slice that sequence, so p-values are invariant to chunk — and to the
+pass split — by construction.  Multi-pass runs rebuild each chunk's
+replica stack per pass (gathers are cheap; the serving layer caches the
+stacks as corpus null state instead — serving/corpus.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import measures
+from repro.core.plan import ExecutionPlan
+from repro.core.sinks import DenseSink, ExceedanceSink, TileSink
+from repro.kernels.pcc_tile import pcc_tiles
+
+Array = jax.Array
+KeyLike = Union[int, Array]
+
+METHODS = ("permute", "bootstrap")
+
+
+def canonical_key(key: KeyLike) -> Array:
+    """Accept an int seed or a PRNG key array; return a PRNG key."""
+    if isinstance(key, (int, np.integer)):
+        return jax.random.PRNGKey(int(key))
+    return key
+
+
+def key_fingerprint(key: KeyLike) -> str:
+    """Short stable digest of a PRNG key — embedded in the p-value plan's
+    pseudo-measure name so checkpoint specs (HostSink sidecars) and serving
+    null-state caches distinguish different null distributions."""
+    k = canonical_key(key)
+    try:
+        data = np.asarray(jax.random.key_data(k))
+    except (AttributeError, TypeError):
+        data = np.asarray(k)
+    return hashlib.sha1(data.tobytes()).hexdigest()[:12]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PermutationSpec:
+    """What null distribution to test against (corr(pvalues=...)).
+
+    iterations: number of null replicas B (paper SSIV: >= 1000 for real
+                inference; the add-one estimator floors p at 1/(B+1)).
+    key:        PRNG key or int seed — REQUIRED.  The legacy API's silent
+                PRNGKey(0) default meant repeated "independent" runs drew
+                identical permutations; here independence is explicit.
+    method:     "permute" draws a sample permutation per iteration (exact
+                null: samples exchangeable under H0); "bootstrap" draws a
+                with-replacement resample (bootstrap null; always routes
+                through the re-transform path, since resampling changes
+                per-row statistics).
+    chunk:      replicas per kernel launch — a pure device-memory knob
+                (default plan.DEFAULT_REPLICA_CHUNK).  P-values are
+                invariant to it: one key per iteration is derived up
+                front and chunks slice the sequence.
+    sink:       optional inner TileSink receiving the finished p-value
+                tiles (wrapped in an ExceedanceSink) — HostSink for
+                out-of-core/checkpointed p-values, TopKSink, etc.
+                Default assembles a dense device matrix.
+    """
+
+    iterations: int
+    key: Optional[KeyLike] = None
+    method: str = "permute"
+    chunk: Optional[int] = None
+    sink: Optional[TileSink] = None
+
+    def __post_init__(self):
+        if self.iterations <= 0:
+            raise ValueError(
+                f"iterations must be positive, got {self.iterations}")
+        if self.key is None:
+            raise ValueError(
+                "PermutationSpec requires an explicit key: the legacy "
+                "default silently reused the fixed seed PRNGKey(0), making "
+                "repeated 'independent' runs draw identical null "
+                "permutations.  Pass key=<int seed> or a jax PRNG key.")
+        if self.method not in METHODS:
+            raise ValueError(
+                f"method must be one of {METHODS}, got {self.method!r}")
+        if self.chunk is not None and self.chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {self.chunk}")
+
+
+def iteration_keys(spec: PermutationSpec) -> Array:
+    """One PRNG key per iteration, independent of chunking — THE fix for
+    the legacy chunk-dependence bug (keys were split per chunk-step, so
+    the same seed yielded different permutations under a different chunk
+    size).  Chunks slice this sequence."""
+    return jax.random.split(canonical_key(spec.key), spec.iterations)
+
+
+def pvalue_measure(plan: ExecutionPlan, spec: PermutationSpec) -> measures.Measure:
+    """Identity pseudo-measure naming the p-value output's full identity
+    (base measure, method, B, key) — the p-plan's `measure`, so HostSink
+    checkpoint specs can never confuse a p-value memmap with an r memmap
+    or two different null distributions with each other."""
+    name = (f"{plan.measure.name}:pvalues:{spec.method}:"
+            f"B{spec.iterations}:{key_fingerprint(spec.key)}")
+    return measures.Measure(name, measures.identity_transform, None, None)
+
+
+def replica_operand(plan: ExecutionPlan, keys: Array, *, method: str,
+                    columns: Array, cols_prepared: Array) -> Array:
+    """Stacked column-operand variants for one replica chunk:
+    (len(keys), cols_pad, l_pad).
+
+    Gather path (method == "permute" and measure.permute_gather): each
+    replica gathers sample-columns of the already-prepared operand —
+    transform(x[:, pi]) == transform(x)[:, pi] for these measures, so this
+    skips the per-replica transform and bit-matches the legacy path (which
+    permuted U).  Padding columns stay in place, so zero padding is
+    preserved.  Everything else re-transforms the reordered raw data
+    (`columns`), which is correct for any measure.
+    """
+    l = plan.l
+    cols_pad, l_pad = cols_prepared.shape
+    if method == "permute" and plan.measure.permute_gather:
+        tail = jnp.arange(l, l_pad, dtype=jnp.int32)
+
+        def one(k):
+            idx = jax.random.permutation(k, l)
+            if l_pad > l:
+                idx = jnp.concatenate([idx.astype(jnp.int32), tail])
+            return jnp.take(cols_prepared, idx, axis=1)
+
+        return jax.vmap(one)(keys)
+
+    def one(k):
+        if method == "bootstrap":
+            idx = jax.random.randint(k, (l,), 0, l)
+        else:
+            idx = jax.random.permutation(k, l)
+        ub = plan.measure.transform(jnp.take(columns, idx, axis=1),
+                                    dtype=jnp.float32)
+        if plan.compute_dtype is not None:
+            ub = ub.astype(plan.compute_dtype)
+        return ub
+
+    stack = jax.vmap(one)(keys)
+    pad_r = cols_pad - stack.shape[1]
+    pad_l = l_pad - stack.shape[2]
+    if pad_r or pad_l:
+        stack = jnp.pad(stack, ((0, 0), (0, pad_r), (0, pad_l)))
+    return stack
+
+
+def _cmp_vals(plan: ExecutionPlan, raw):
+    """|finalised| values for the exceedance comparison: epilogue + the
+    bounded-measure clip applied to the raw accumulator.  Clipping *both*
+    sides of >= at the same bound never changes the outcome, which keeps
+    the count bit-identical to the legacy raw-replica-vs-clipped-observed
+    comparison for Pearson."""
+    return jnp.abs(plan.measure.finalize(raw, plan.l, clip=plan.clip))
+
+
+def _obs_tiles(plan: ExecutionPlan, raw):
+    """Reconstruct the executor stream's observed-tile buffer from the raw
+    accumulator — bit-identical to what _local/_mesh_launches yield: the
+    fused kernel applies EpilogueSpec.apply to the same VMEM accumulator
+    the raw launch writes to HBM, and the unfused stream applies the
+    measure epilogue on the pass buffer (clip deferred to the sink)."""
+    if plan.fused:
+        if plan.epilogue_spec is None or plan.epilogue_spec.is_identity():
+            return raw
+        return plan.epilogue_spec.apply(raw)
+    if plan.measure.epilogue is not None:
+        return plan.measure.epilogue(raw, plan.l)
+    return raw
+
+
+def run_significance(
+    plan: ExecutionPlan,
+    spec: PermutationSpec,
+    u_pad: Array,
+    *,
+    columns: Array,
+    v_pad: Optional[Array] = None,
+    sink: Optional[TileSink] = None,
+    mesh: Optional[Mesh] = None,
+    shard_u: bool = False,
+    replica_source: Optional[Callable[[int, Array], Array]] = None,
+):
+    """Execute a significance plan end to end; returns (r, p) results.
+
+    plan must carry the replica axis (ExecutionPlan.create(replicas=B,
+    replica_chunk=...)); u_pad is the prepared row operand, v_pad the
+    prepared column operand of rectangular workloads (None = symmetric:
+    replicas permute U itself).  `columns` is the *raw* column-side data,
+    needed by the re-transform replica path.  `sink` receives the observed
+    r tiles (default DenseSink); spec.sink receives the p-value tiles
+    through an ExceedanceSink.  replica_source overrides chunk-stack
+    construction — the serving layer's null-state cache seam: called as
+    replica_source(chunk_index, keys_slice), must return what
+    replica_operand would.
+
+    Both output legs resume independently (HostSink checkpoints): passes
+    below a sink's resume point are recomputed only if the *other* sink
+    still needs them, and each leg's pass_complete commits separately.
+    """
+    if plan.replicas != spec.iterations:
+        raise ValueError(
+            f"plan.replicas={plan.replicas} does not match "
+            f"spec.iterations={spec.iterations} — build the plan with "
+            f"ExecutionPlan.create(replicas=spec.iterations, ...)")
+    keys = iteration_keys(spec)
+    cols_prepared = u_pad if v_pad is None else v_pad
+    grid_cols = plan.workload.grid_cols
+    rchunks = plan.replica_chunk_sizes
+
+    if replica_source is None:
+        def replica_source(ci: int, keys_c: Array) -> Array:
+            del ci
+            return replica_operand(plan, keys_c, method=spec.method,
+                                   columns=columns,
+                                   cols_prepared=cols_prepared)
+
+    def chunk_slices():
+        lo = 0
+        for ci, rc in enumerate(rchunks):
+            yield ci, rc, keys[lo:lo + rc]
+            lo += rc
+
+    r_sink = sink if sink is not None else DenseSink()
+    r_sink.open(plan)
+    p_plan = dataclasses.replace(plan, measure=pvalue_measure(plan, spec),
+                                 fused=False, clip=False, epilogue_spec=None)
+    p_sink = ExceedanceSink(inner=spec.sink)
+    p_sink.open(p_plan)
+    k0_r = getattr(r_sink, "resume_pass", lambda: 0)()
+    k0_p = getattr(p_sink, "resume_pass", lambda: 0)()
+    k0 = min(k0_r, k0_p)
+    r_done = getattr(r_sink, "pass_complete", lambda k: None)
+    p_done = getattr(p_sink, "pass_complete", lambda k: None)
+
+    if mesh is None:
+        for k in range(k0, plan.n_pass):
+            launch = plan.launch_sizes[k]
+            j0 = plan.pass_offset(k)
+            raw = pcc_tiles(u_pad, j0, t=plan.t, l_blk=plan.l_blk,
+                            pass_tiles=launch, interpret=plan.interpret,
+                            epilogue=None, v_pad=v_pad, grid_cols=grid_cols)
+            ids = np.arange(j0, j0 + launch, dtype=np.int64)
+            if k >= k0_r:
+                r_sink.consume(ids, _obs_tiles(plan, raw))
+                r_done(k)
+            if k >= k0_p:
+                abs_obs = _cmp_vals(plan, raw)
+                counts = jnp.zeros(raw.shape, jnp.int32)
+                for ci, rc, keys_c in chunk_slices():
+                    reps = replica_source(ci, keys_c)
+                    rep_raw = pcc_tiles(u_pad, j0, t=plan.t, l_blk=plan.l_blk,
+                                        pass_tiles=launch,
+                                        interpret=plan.interpret,
+                                        epilogue=None, v_pad=reps,
+                                        grid_cols=grid_cols)
+                    hits = _cmp_vals(plan, rep_raw) >= abs_obs[None]
+                    counts = counts + jnp.sum(hits.astype(jnp.int32), axis=0)
+                p_sink.consume(ids, counts)
+                p_done(k)
+        return r_sink.result(), p_sink.result()
+
+    # -- mesh execution: replicas ride the per-pass shard_map unchanged ------
+    axes = tuple(mesh.axis_names)
+    if shard_u:
+        if v_pad is not None:
+            raise ValueError("shard_u supports the symmetric workload only "
+                             "(one operand to shard); rectangular runs "
+                             "replicate both operands")
+        rows = u_pad.shape[0]
+        rows_pad = -(-rows // plan.p) * plan.p
+        if rows_pad != rows:
+            u_pad = jnp.pad(u_pad, ((0, rows_pad - rows), (0, 0)))
+        in_spec = P(axes, None)
+    else:
+        in_spec = P(None, None)
+    u_in = jax.device_put(u_pad, NamedSharding(mesh, in_spec))
+    rep_spec = P(None, None, None)
+    rep_shard = NamedSharding(mesh, rep_spec)
+    v_in = (None if v_pad is None
+            else jax.device_put(v_pad, NamedSharding(mesh, P(None, None))))
+
+    def gathered(u: Array) -> Array:
+        u_rep = u
+        for ax in reversed(axes):
+            u_rep = jax.lax.all_gather(u_rep, ax, axis=0, tiled=True)
+        return u_rep[: plan.n_pad]
+
+    def rank_j0(off: Array) -> Array:
+        rank = jnp.int32(0)
+        for ax in axes:
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        return jnp.minimum(rank * plan.per_dev + off[0],
+                           plan.total_tiles - 1)
+
+    obs_fns, cnt_fns = {}, {}
+
+    def obs_fn(launch: int):
+        if launch not in obs_fns:
+            def compute(u, v, off):
+                u_rep = gathered(u) if shard_u else u
+                return pcc_tiles(u_rep, rank_j0(off), t=plan.t,
+                                 l_blk=plan.l_blk, pass_tiles=launch,
+                                 interpret=plan.interpret, epilogue=None,
+                                 v_pad=v, grid_cols=grid_cols)
+
+            if v_in is None:
+                obs_fns[launch] = shard_map(
+                    lambda u, off: compute(u, None, off), mesh=mesh,
+                    in_specs=(in_spec, P(None)), out_specs=P(axes),
+                    check_vma=False)
+            else:
+                obs_fns[launch] = shard_map(
+                    compute, mesh=mesh,
+                    in_specs=(in_spec, P(None, None), P(None)),
+                    out_specs=P(axes), check_vma=False)
+        return obs_fns[launch]
+
+    def cnt_fn(launch: int, rc: int):
+        # keyed by (launch, replicas): at most two launch sizes and two
+        # chunk sizes occur per plan, so at most four traced variants
+        if (launch, rc) not in cnt_fns:
+            def compute(u, reps, abs_obs, off):
+                u_rep = gathered(u) if shard_u else u
+                buf = pcc_tiles(u_rep, rank_j0(off), t=plan.t,
+                                l_blk=plan.l_blk, pass_tiles=launch,
+                                interpret=plan.interpret, epilogue=None,
+                                v_pad=reps, grid_cols=grid_cols)
+                hits = _cmp_vals(plan, buf) >= abs_obs[None]
+                return jnp.sum(hits.astype(jnp.int32), axis=0)
+
+            cnt_fns[(launch, rc)] = shard_map(
+                compute, mesh=mesh,
+                in_specs=(in_spec, rep_spec, P(axes, None, None), P(None)),
+                out_specs=P(axes), check_vma=False)
+        return cnt_fns[(launch, rc)]
+
+    for k in range(k0, plan.n_pass):
+        launch = plan.launch_sizes[k]
+        off = jnp.full((1,), plan.pass_offset(k), jnp.int32)
+        args = (u_in, off) if v_in is None else (u_in, v_in, off)
+        raw = obs_fn(launch)(*args)
+        ids, sel = plan.pass_selection(k)
+        padded = plan.pass_padded_ids(k) if sel is not None else None
+        if k >= k0_r:
+            r_buf = _obs_tiles(plan, raw)
+            if sel is None:
+                r_sink.consume(ids, r_buf)
+            else:
+                r_sink.consume_clamped(padded, sel, ids, r_buf)
+            r_done(k)
+        if k >= k0_p:
+            abs_obs = _cmp_vals(plan, raw)
+            counts = None
+            for ci, rc, keys_c in chunk_slices():
+                reps = jax.device_put(replica_source(ci, keys_c), rep_shard)
+                c = cnt_fn(launch, rc)(u_in, reps, abs_obs, off)
+                counts = c if counts is None else counts + c
+            if sel is None:
+                p_sink.consume(ids, counts)
+            else:
+                p_sink.consume_clamped(padded, sel, ids, counts)
+            p_done(k)
+    return r_sink.result(), p_sink.result()
+
+
+def dense_significance_reference(
+    x: Array,
+    y: Optional[Array] = None,
+    *,
+    measure: measures.MeasureLike = "pearson",
+    spec: PermutationSpec,
+    clip: bool = True,
+):
+    """Dense (jnp.dot) oracle for the engine's (r, p): same key derivation,
+    same per-replica operand semantics (gather vs re-transform), same
+    finalised-value comparison, same canonical symmetric output (upper
+    triangle mirrored elementwise).  Doubles as the benchmark baseline for
+    the legacy batched-GEMM formulation."""
+    meas = measures.get(measure)
+    x = jnp.asarray(x)
+    src = x if y is None else jnp.asarray(y)
+    l = x.shape[1]
+    u = meas.transform(x, dtype=jnp.float32)
+    v = u if y is None else meas.transform(src, dtype=jnp.float32)
+    raw = jnp.dot(u, v.T, preferred_element_type=jnp.float32)
+    r = meas.finalize(raw, l, clip=clip)
+    abs_obs = jnp.abs(r)
+    counts = jnp.zeros(raw.shape, jnp.int32)
+    for k in iteration_keys(spec):
+        if spec.method == "bootstrap":
+            idx = jax.random.randint(k, (l,), 0, l)
+        else:
+            idx = jax.random.permutation(k, l)
+        if spec.method == "permute" and meas.permute_gather:
+            vb = jnp.take(v, idx, axis=1)
+        else:
+            vb = meas.transform(jnp.take(src, idx, axis=1),
+                                dtype=jnp.float32)
+        rep = jnp.dot(u, vb.T, preferred_element_type=jnp.float32)
+        fin = jnp.abs(meas.finalize(rep, l, clip=clip))
+        counts = counts + (fin >= abs_obs).astype(jnp.int32)
+    p = (1.0 + counts.astype(jnp.float32)) / np.float32(1.0 + spec.iterations)
+    if y is None:
+        idxs = jnp.arange(p.shape[0])
+        upper = idxs[:, None] <= idxs[None, :]
+        p = jnp.where(upper, p, p.T)
+    return r, p
+
+
+__all__ = [
+    "PermutationSpec",
+    "canonical_key",
+    "key_fingerprint",
+    "iteration_keys",
+    "pvalue_measure",
+    "replica_operand",
+    "run_significance",
+    "dense_significance_reference",
+]

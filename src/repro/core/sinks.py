@@ -462,6 +462,86 @@ class RowBlockSink(TileSink):
         return outs
 
 
+class ExceedanceSink(TileSink):
+    """Turn per-pass null-exceedance *count* tiles into p-value tiles and
+    hand them to an inner TileSink — the significance workload's output leg
+    (core/significance.py, paper SSIV).
+
+    The significance executor accumulates, per pass, an int32 count tile
+    buffer ``#{b : |R_b| >= |R_obs|}`` on device, reduced over the replica
+    axis chunk by chunk — O(pass_tiles) int32 state, never a (B, n, n)
+    array.  This sink receives that finished count buffer once per pass,
+    applies the add-one estimator  p = (1 + count) / (1 + B)  (B from
+    ``plan.replicas`` unless given explicitly), and delegates the resulting
+    p-value tiles to ``inner`` (default DenseSink) — so p-values compose
+    with every output mode the engine has: dense device matrix, host/memmap
+    assembly with durable per-pass checkpoints, top-k, reductions.
+
+    Symmetric workloads: the replica kernel's diagonal tiles are *not*
+    internally symmetric (entry (i, j) compares against <U_i, pi(U_j)>,
+    entry (j, i) against <U_j, pi(U_i)>).  The canonical output keeps the
+    elementwise upper triangle — exactly what DenseSink's symmetrize does —
+    so this sink mirrors each diagonal tile's upper half into its lower
+    half *before* delegation, making every inner sink (including HostSink,
+    which writes diagonal tiles verbatim) agree bit-for-bit.
+
+    open() expects the significance plan handed down by the executor (its
+    `measure` is the p-value pseudo-measure naming base measure, method and
+    key, so HostSink checkpoint specs can never confuse a p-value memmap
+    with an r memmap, or two different null distributions with each other).
+    """
+
+    def __init__(self, inner: Optional[TileSink] = None,
+                 iterations: Optional[int] = None):
+        self._inner = inner if inner is not None else DenseSink()
+        self._iterations = iterations
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        b = (self._iterations if self._iterations is not None
+             else plan.replicas)
+        if b <= 0:
+            raise ValueError(
+                "ExceedanceSink needs the replica count: open it with a "
+                "significance plan (ExecutionPlan.create(replicas=B)) or "
+                "pass iterations= explicitly")
+        self.iterations = int(b)
+        self._inner.open(plan)
+
+    def resume_pass(self) -> int:
+        return getattr(self._inner, "resume_pass", lambda: 0)()
+
+    def pass_complete(self, k: int) -> None:
+        getattr(self._inner, "pass_complete", lambda _k: None)(k)
+
+    def _pvals(self, content_ids: np.ndarray, counts) -> np.ndarray:
+        c = np.asarray(counts).astype(np.float32)
+        p = (1.0 + c) / np.float32(1.0 + self.iterations)
+        if self.plan.workload.needs_symmetrize:
+            ys, xs = self.plan.workload.job_coord_batch(
+                np.asarray(content_ids))
+            diag = ys == xs
+            if diag.any():
+                t = self.plan.t
+                upper = np.triu(np.ones((t, t), bool))
+                d = p[diag]
+                p[diag] = np.where(upper, d, np.transpose(d, (0, 2, 1)))
+        return p
+
+    def consume(self, ids: np.ndarray, counts) -> None:
+        self._inner.consume(ids, self._pvals(ids, counts))
+
+    def consume_clamped(self, padded_ids: np.ndarray, sel: np.ndarray,
+                        ids: np.ndarray, counts) -> None:
+        # content is keyed by the clamped per-slot ids (duplicates carry
+        # identical counts, so the diagonal mirror is idempotent over them)
+        self._inner.consume_clamped(padded_ids, sel, ids,
+                                    self._pvals(padded_ids, counts))
+
+    def result(self):
+        return self._inner.result()
+
+
 class TopKSink(TileSink):
     """Streaming per-row top-k neighbours: keep the k strongest-|r| partners
     of every row without materialising the matrix — O(n_rows * k) state.
@@ -550,6 +630,7 @@ __all__ = [
     "ReductionSink",
     "EdgeCountSink",
     "RowBlockSink",
+    "ExceedanceSink",
     "TopKSink",
     "scatter_tiles",
     "scatter_tiles_at",

@@ -101,29 +101,36 @@ class EpilogueSpec:
 
 
 def _kernel(jstart_ref, urow_ref, ucol_ref, out_ref, *, l_blocks: int,
-            epilogue: Optional[EpilogueSpec]):
+            epilogue: Optional[EpilogueSpec], replica: bool = False):
     """Body: accumulate one (t, t) tile over the l (sample) axis, applying
-    the fused epilogue at the last k-step (finished tiles only hit HBM)."""
-    k = pl.program_id(1)
+    the fused epilogue at the last k-step (finished tiles only hit HBM).
+
+    replica=True is the significance workload (core/significance.py): the
+    grid gains a leading replica axis and the column operand is a stacked
+    (R, cols_pad, l_pad) array of permuted/resampled operand variants — the
+    column block then carries a leading singleton replica dim to strip, and
+    the l axis moves to grid position 2."""
+    k = pl.program_id(2 if replica else 1)
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
+    ucol = ucol_ref[0] if replica else ucol_ref[...]
     # (t, l_blk) . (t, l_blk)^T on the MXU.  Float operands accumulate in
     # f32; int8 operands (Kendall pair signs) accumulate exactly in int32
     # per block, then widen to the f32 tile accumulator.
     if jnp.issubdtype(urow_ref.dtype, jnp.integer):
         part = jax.lax.dot_general(
             urow_ref[...],
-            ucol_ref[...],
+            ucol,
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.int32,
         ).astype(jnp.float32)
     else:
         part = jax.lax.dot_general(
             urow_ref[...],
-            ucol_ref[...],
+            ucol,
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
@@ -168,6 +175,42 @@ def _out_map(i, k, jstart_ref, *, m: int, total: int):
     return i, 0, 0
 
 
+# Replica-axis index maps (significance workload): the grid is
+# (replicas, pass_tiles, l_blocks).  The row operand stays 2-D (the observed
+# transform — every replica reads the same row blocks); the column operand is
+# the 3-D (R, cols_pad, l_pad) replica stack, so its map prepends the replica
+# grid index.  The tile-id bijections are unchanged.
+
+
+def _rep_row_map(r, i, k, jstart_ref, *, m: int, total: int):
+    del r
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    y_t, _ = job_coord_f32(m, jt)
+    return y_t, k
+
+
+def _rep_col_map(r, i, k, jstart_ref, *, m: int, total: int):
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    _, x_t = job_coord_f32(m, jt)
+    return r, x_t, k
+
+
+def _rep_grid_row_map(r, i, k, jstart_ref, *, mc: int, total: int):
+    del r
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return jt // mc, k
+
+
+def _rep_grid_col_map(r, i, k, jstart_ref, *, mc: int, total: int):
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return r, jt - (jt // mc) * mc, k
+
+
+def _rep_out_map(r, i, k, jstart_ref, *, m: int, total: int):
+    del k, jstart_ref
+    return r, i, 0, 0
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("t", "l_blk", "pass_tiles", "interpret", "epilogue",
@@ -197,6 +240,12 @@ def pcc_tiles(
     v_pad: optional second operand (n_cols_pad, l_pad) for rectangular
            X-vs-Y workloads — the column BlockSpec pulls its blocks from V
            instead of U.  Requires grid_cols.  None reuses U (symmetric).
+           A 3-D (replicas, cols_pad, l_pad) stack selects the *replica*
+           grid: one launch computes every replica's tiles over a leading
+           grid axis (the significance workload, core/significance.py),
+           returning (replicas, pass_tiles, t, t).  Replica stacks compose
+           with both bijection families: grid_cols=None runs the triangle
+           against stacked permutations of U itself (cols_pad == n_pad).
     grid_cols: None runs the triangular bijection over U against itself
            (tile ids number the upper triangle, Eq. 9/14 — the paper's
            symmetric workload, bit-identical to the historical kernel).  An
@@ -211,42 +260,79 @@ def pcc_tiles(
     if pass_tiles <= 0:
         raise ValueError(f"pass_tiles must be positive, got {pass_tiles} "
                          f"(remainder launches must be sized, not empty)")
-    if v_pad is not None and grid_cols is None:
+    replicas = None
+    if v_pad is not None and v_pad.ndim == 3:
+        replicas = v_pad.shape[0]
+        if replicas <= 0:
+            raise ValueError(f"replica stack {v_pad.shape} is empty")
+    elif v_pad is not None and grid_cols is None:
         raise ValueError("a second operand (v_pad) requires grid_cols — the "
-                         "triangular bijection is single-operand")
+                         "triangular bijection is single-operand (only a 3-D "
+                         "replica stack may ride the triangle)")
     v = u_pad if v_pad is None else v_pad
     m = n_pad // t
     if grid_cols is None:
         total = m * (m + 1) // 2
-        row_map = functools.partial(_row_map, m=m, total=total)
-        col_map = functools.partial(_col_map, m=m, total=total)
+        if replicas is None:
+            row_map = functools.partial(_row_map, m=m, total=total)
+            col_map = functools.partial(_col_map, m=m, total=total)
+        else:
+            if v.shape[1:] != (n_pad, l_pad):
+                raise ValueError(
+                    f"triangular replica stack {v.shape} must stack "
+                    f"({n_pad}, {l_pad}) operand variants")
+            row_map = functools.partial(_rep_row_map, m=m, total=total)
+            col_map = functools.partial(_rep_col_map, m=m, total=total)
     else:
-        if v.shape[1] != l_pad or v.shape[0] != grid_cols * t:
+        if v.shape[-1] != l_pad or v.shape[-2] != grid_cols * t:
             raise ValueError(
                 f"column operand {v.shape} does not match grid_cols="
                 f"{grid_cols} tiles of t={t} over l_pad={l_pad}")
         total = m * grid_cols
-        row_map = functools.partial(_grid_row_map, mc=grid_cols, total=total)
-        col_map = functools.partial(_grid_col_map, mc=grid_cols, total=total)
+        if replicas is None:
+            row_map = functools.partial(_grid_row_map, mc=grid_cols,
+                                        total=total)
+            col_map = functools.partial(_grid_col_map, mc=grid_cols,
+                                        total=total)
+        else:
+            row_map = functools.partial(_rep_grid_row_map, mc=grid_cols,
+                                        total=total)
+            col_map = functools.partial(_rep_grid_col_map, mc=grid_cols,
+                                        total=total)
     l_blocks = l_pad // l_blk
 
-    grid = (pass_tiles, l_blocks)
-    kernel = functools.partial(_kernel, l_blocks=l_blocks, epilogue=epilogue)
+    kernel = functools.partial(_kernel, l_blocks=l_blocks, epilogue=epilogue,
+                               replica=replicas is not None)
+    if replicas is None:
+        grid = (pass_tiles, l_blocks)
+        in_specs = [
+            pl.BlockSpec((t, l_blk), row_map),
+            pl.BlockSpec((t, l_blk), col_map),
+        ]
+        out_specs = pl.BlockSpec(
+            (1, t, t), functools.partial(_out_map, m=m, total=total))
+        out_shape = (pass_tiles, t, t)
+    else:
+        # replica axis slowest, l fastest: each (r, i) accumulator stays
+        # resident in VMEM across its k-steps, exactly as without replicas
+        grid = (replicas, pass_tiles, l_blocks)
+        in_specs = [
+            pl.BlockSpec((t, l_blk), row_map),
+            pl.BlockSpec((1, t, l_blk), col_map),
+        ]
+        out_specs = pl.BlockSpec(
+            (1, 1, t, t), functools.partial(_rep_out_map, m=m, total=total))
+        out_shape = (replicas, pass_tiles, t, t)
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((t, l_blk), row_map),
-                pl.BlockSpec((t, l_blk), col_map),
-            ],
-            out_specs=pl.BlockSpec(
-                (1, t, t), functools.partial(_out_map, m=m, total=total)
-            ),
+            in_specs=in_specs,
+            out_specs=out_specs,
         ),
-        out_shape=jax.ShapeDtypeStruct((pass_tiles, t, t), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
         interpret=interpret,
     )(jnp.asarray(j_start, jnp.int32).reshape(1), u_pad, v)
     return out

@@ -15,7 +15,10 @@ tracing, per-launch overhead — amortised across requests:
                  one padded grid launch, scatter per-request results back
                  (dense rows via RowBlockSink, top-k via one TopKSink).
   server.py      CorrServer: sync + async submission, max-wait/max-batch
-                 dispatch policy, per-request serving stats.
+                 dispatch policy, per-request serving stats; edge-
+                 significance queries (``significance()``: probe rows vs
+                 corpus with permutation p-values, reusing the corpus's
+                 cached null state).
 
 Results are bit-identical to standalone ``corr()`` calls — batching and
 caching are pure execution policy (docs/serving.md).

@@ -55,6 +55,7 @@ class CorpusHandle:
         self.l_blk = int(l_blk)
         self._cache = TransformCache(capacity=cache_capacity)
         self._norms: Dict[str, Array] = {}
+        self._null_chunks: Dict[tuple, Array] = {}
 
     @property
     def n(self) -> int:
@@ -102,11 +103,56 @@ class CorpusHandle:
             self._norms[meas.name] = norms
         return norms
 
+    def replica_source_for(self, plan, spec):
+        """A caching replica source for significance queries against this
+        corpus — the corpus's *null state*.
+
+        ``run_significance`` (core/significance.py) rebuilds each replica
+        chunk's stacked permuted-corpus operand per pass; for a served
+        corpus that null state is as fixed as the corpus transform itself
+        (it depends only on measure, dtype, method, B, chunking and key),
+        so every edge-significance query against the same
+        :class:`~repro.core.significance.PermutationSpec` reuses the
+        stacks built by the first.  Returns a ``replica_source(ci, keys)``
+        callable; entries are keyed by chunk index plus the full null
+        identity and live for the handle's lifetime (``clear_null_state()``
+        drops them — B x corpus operand device memory when fully built).
+
+        Races are benign: two threads missing the same chunk compute
+        identical stacks (the keys determine the permutations).
+        """
+        from repro.core.significance import key_fingerprint, replica_operand
+        cd = (None if plan.compute_dtype is None
+              else plan.compute_dtype.name)
+        base = (plan.measure.name, cd, spec.method, spec.iterations,
+                plan.replica_chunk, key_fingerprint(spec.key))
+
+        def source(ci: int, keys_c) -> Array:
+            cache_key = base + (ci,)
+            stack = self._null_chunks.get(cache_key)
+            if stack is None:
+                stack = replica_operand(
+                    plan, keys_c, method=spec.method, columns=self.x,
+                    cols_prepared=self.operand(plan.measure,
+                                               plan.compute_dtype))
+                self._null_chunks[cache_key] = stack
+            return stack
+
+        return source
+
+    def clear_null_state(self) -> None:
+        """Drop every cached replica-chunk stack (memory pressure)."""
+        self._null_chunks.clear()
+
     def stats(self) -> dict:
         """Transform-cache counters: `misses` is the number of corpus
         transforms actually run (the serving invariant: one per
-        (measure, dtype), however many queries arrive)."""
-        return self._cache.stats()
+        (measure, dtype), however many queries arrive).  `null_chunks` is
+        the number of cached replica-chunk stacks (significance null
+        state)."""
+        out = self._cache.stats()
+        out["null_chunks"] = len(self._null_chunks)
+        return out
 
     def __repr__(self) -> str:
         return (f"CorpusHandle(n={self.n}, l={self.l}, t={self.t}, "

@@ -38,7 +38,12 @@ import time
 from concurrent.futures import Future
 from typing import Any, List, Optional
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core import measures
+from repro.core.plan import ExecutionPlan
+from repro.core.significance import PermutationSpec, run_significance
 from repro.serving.batcher import Query, QueryBatcher
 from repro.serving.plan_cache import PlanCache
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
@@ -144,6 +149,57 @@ class CorrServer:
         request still rides whatever batch the dispatcher forms, so a sync
         caller pays at most max_wait_s of coalescing latency)."""
         return self.submit(probes, k=k, measure=measure).result()
+
+    def significance(self, probes, *, pvalues: PermutationSpec,
+                     measure: Optional[measures.MeasureLike] = None
+                     ) -> ServedResult:
+        """"Is this edge real?" — probe rows vs the corpus with permutation
+        (or bootstrap) p-values: returns a :class:`ServedResult` whose
+        value is ``(r, p)``, both (m, n), exactly what
+        ``corr(probes, corpus_array, pvalues=...)`` returns.
+
+        Runs synchronously on the *caller* thread, bypassing the batcher:
+        a B-replica significance sweep is orders of magnitude heavier than
+        the dense queries the dispatcher coalesces, so it would only stall
+        the batch queue.  What it does share is the corpus state — the
+        cached corpus transform (one per measure/dtype) and the corpus's
+        cached *null state*
+        (:meth:`~repro.serving.corpus.CorpusHandle.replica_source_for`):
+        repeat queries against the same PermutationSpec reuse the stacked
+        permuted-corpus operands instead of re-deriving B permutations.
+        """
+        b = self.batcher
+        meas = b.measure if measure is None else measures.get(measure)
+        probes = jnp.asarray(probes)
+        if probes.ndim != 2 or probes.shape[1] != self.corpus.l:
+            raise ValueError(
+                f"probes must be (m, l={self.corpus.l}), got shape "
+                f"{probes.shape}")
+        p = (1 if b.mesh is None
+             else int(np.prod(b.mesh.devices.shape)))
+        plan = ExecutionPlan.create(
+            probes.shape[0], self.corpus.l, n_cols=self.corpus.n,
+            t=b.t, l_blk=b.l_blk, measure=meas, p=p,
+            max_tiles_per_pass=b.max_tiles_per_pass, interpret=b.interpret,
+            clip=b.clip, fuse_epilogue=b.fuse_epilogue,
+            compute_dtype=b.compute_dtype,
+            replicas=pvalues.iterations, replica_chunk=pvalues.chunk)
+        t_start = time.monotonic()
+        null_before = self.corpus.stats()["null_chunks"]
+        r, pv = run_significance(
+            plan, pvalues, plan.prepare(probes), columns=self.corpus.x,
+            v_pad=self.corpus.operand(meas, b.compute_dtype),
+            mesh=b.mesh,
+            replica_source=self.corpus.replica_source_for(plan, pvalues))
+        stats = {
+            "service_s": time.monotonic() - t_start,
+            "iterations": pvalues.iterations,
+            "replica_chunks": len(plan.replica_chunk_sizes),
+            "null_state_hit": (self.corpus.stats()["null_chunks"]
+                               == null_before),
+            "passes": plan.n_pass,
+        }
+        return ServedResult(value=(r, pv), stats=stats)
 
     # -- dispatcher ---------------------------------------------------------
 

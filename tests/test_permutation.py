@@ -1,0 +1,454 @@
+"""Significance workload: corr(pvalues=PermutationSpec(...)).
+
+Covers the three legacy bugs this workload fixes (chunk-dependent keys,
+discarded ragged-tail GEMMs, silent PRNGKey(0)), bit-equality against a
+dense oracle and against a key-fixed transcription of the legacy
+algorithm, the scipy permutation_test oracle, sink composition (top-k,
+memmap checkpoint/resume), the bounded-memory contract, the serving
+layer's edge-significance queries, and mesh parity (subprocess, 8
+simulated devices).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import measures
+from repro.core.api import corr
+from repro.core import significance
+from repro.core.significance import (PermutationSpec,
+                                     dense_significance_reference,
+                                     iteration_keys)
+from repro.core.permutation import permutation_pvalues
+from repro.core.plan import ExecutionPlan
+from repro.core.sinks import DenseSink, ExceedanceSink, HostSink, TopKSink
+
+K = jax.random.PRNGKey
+
+
+def _x(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+# l_blk >= l_pad keeps the kernel to one k-block, so the tiled GEMM's
+# summation order matches jnp.dot and engine-vs-dense checks can be exact
+KW = dict(t=8, l_blk=64)
+
+
+# ---------------------------------------------------------------------------
+# Oracles: dense reference, key-fixed legacy transcription, scipy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["pearson", "spearman", "cosine",
+                                  "covariance", "dot"])
+def test_matches_dense_reference_gather_measures(name):
+    x = _x(20, 33, seed=3)
+    spec = PermutationSpec(iterations=24, key=K(1), chunk=7)
+    r, p = corr(x, measure=name, pvalues=spec, **KW)
+    r_ref, p_ref = dense_significance_reference(x, measure=name, spec=spec)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+
+
+@pytest.mark.parametrize("name", ["kendall", "kendall_tau_b"])
+def test_matches_dense_reference_retransform_measures(name):
+    # Kendall's pair expansion does not commute with sample permutation
+    # (permute_gather=False) — replicas re-transform the permuted raw data
+    assert not measures.get(name).permute_gather
+    x = _x(6, 8, seed=4)
+    spec = PermutationSpec(iterations=6, key=K(2), chunk=4)
+    r, p = corr(x, measure=name, pvalues=spec, t=8, l_blk=64)
+    r_ref, p_ref = dense_significance_reference(x, measure=name, spec=spec)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+
+
+def test_rectangular_matches_dense_reference():
+    x, y = _x(11, 33, seed=5), _x(18, 33, seed=6)
+    spec = PermutationSpec(iterations=15, key=K(3), chunk=4)
+    r, p = corr(x, y, pvalues=spec, **KW)
+    r_ref, p_ref = dense_significance_reference(x, y, spec=spec)
+    assert p.shape == (11, 18)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+
+
+def test_bootstrap_matches_dense_reference():
+    x = _x(14, 26, seed=7)
+    spec = PermutationSpec(iterations=19, key=K(4), method="bootstrap",
+                           chunk=8)
+    r, p = corr(x, pvalues=spec, **KW)
+    r_ref, p_ref = dense_significance_reference(x, spec=spec)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    assert np.all((np.asarray(p) > 0) & (np.asarray(p) <= 1))
+
+
+def test_bit_matches_key_fixed_legacy_pearson():
+    """Transcription of the legacy dense algorithm with ONLY the key
+    derivation fixed (one key per iteration): permute U's sample columns,
+    compare |raw replica| >= |clipped observed|.  The engine path — clip
+    both sides, tiled kernel, symmetric mirror — must reproduce it
+    bit-for-bit on the computed (upper) triangle."""
+    x = _x(21, 30, seed=8)
+    B = 40
+    spec = PermutationSpec(iterations=B, key=K(9), chunk=16)
+
+    u = measures.PEARSON.transform(x, dtype=jnp.float32)
+    r_obs = jnp.clip(jnp.dot(u, u.T, preferred_element_type=jnp.float32),
+                     -1.0, 1.0)
+    counts = jnp.zeros(r_obs.shape, jnp.int32)
+    for k in iteration_keys(spec):
+        idx = jax.random.permutation(k, x.shape[1])
+        rep = jnp.dot(u, u[:, idx].T, preferred_element_type=jnp.float32)
+        counts = counts + (jnp.abs(rep) >= jnp.abs(r_obs)).astype(jnp.int32)
+    p_legacy = (1.0 + counts.astype(jnp.float32)) / np.float32(1.0 + B)
+
+    r, p = corr(x, pvalues=spec, **KW)
+    iu = np.triu_indices(x.shape[0])
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_obs))
+    np.testing.assert_array_equal(np.asarray(p)[iu],
+                                  np.asarray(p_legacy)[iu])
+
+
+def test_scipy_permutation_test_oracle():
+    stats = pytest.importorskip("scipy.stats")
+    rng = np.random.default_rng(12)
+    a = rng.standard_normal(36).astype(np.float32)
+    b = (0.35 * a + rng.standard_normal(36)).astype(np.float32)
+    x = jnp.asarray(np.stack([a, b]))
+    B = 400
+    r, p = corr(x, pvalues=PermutationSpec(iterations=B, key=K(13)), **KW)
+
+    def stat(aa, bb):
+        return abs(stats.pearsonr(aa, bb).statistic)
+
+    ref = stats.permutation_test(
+        (a, b), stat, permutation_type="pairings", n_resamples=B,
+        alternative="greater", vectorized=False,
+        random_state=np.random.default_rng(99))
+    # independent permutation draws: agree to sampling error (sd ~ 0.025
+    # per side at B=400 for p in the 0.1-0.5 range)
+    assert abs(float(p[0, 1]) - float(ref.pvalue)) < 0.1, \
+        (float(p[0, 1]), float(ref.pvalue))
+
+
+def test_planted_pair_detected():
+    rng = np.random.default_rng(7)
+    n, l = 16, 80
+    base = rng.standard_normal(l).astype(np.float32)
+    x = rng.standard_normal((n, l)).astype(np.float32)
+    x[0] = base
+    x[1] = base + 0.2 * rng.standard_normal(l)
+    r, p = corr(jnp.asarray(x),
+                pvalues=PermutationSpec(iterations=200, key=K(0)), **KW)
+    p = np.asarray(p)
+    off = p[np.triu_indices(n, k=1)]
+    assert p[0, 1] < 0.01
+    assert p[0, 1] <= off.min()          # the planted pair wins
+    assert np.all((p > 0) & (p <= 1))
+
+
+# ---------------------------------------------------------------------------
+# The three legacy bugs
+# ---------------------------------------------------------------------------
+
+
+def test_pvalues_invariant_to_chunk():
+    """Legacy bug 1: keys were split per chunk-step, so p-values depended
+    on the chunk size.  One key per iteration makes chunk a pure memory
+    knob."""
+    x = _x(12, 17, seed=21)
+    B = 64
+    ref = None
+    for chunk in (1, 7, 64, B):
+        _, p = corr(x, pvalues=PermutationSpec(iterations=B, key=K(5),
+                                               chunk=chunk), **KW)
+        p = np.asarray(p)
+        if ref is None:
+            ref = p
+        else:
+            np.testing.assert_array_equal(p, ref, err_msg=f"chunk={chunk}")
+
+
+def test_pvalues_invariant_to_pass_split():
+    x = _x(40, 18, seed=22)
+    spec = PermutationSpec(iterations=10, key=K(6), chunk=4)
+    _, p1 = corr(x, pvalues=spec, **KW)
+    _, p2 = corr(x, pvalues=spec, max_tiles_per_pass=2, **KW)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_exactly_iterations_permutation_gemms(monkeypatch):
+    """Legacy bug 2: the ragged tail launched a full chunk, discarded it,
+    and recomputed the remainder.  Replica launches are now exact-sized:
+    the kernel sees sum(R) == iterations replicas per pass, in
+    ExecutionPlan.replica_chunk_sizes chunks, never more."""
+    B, chunk = 10, 4
+    x = _x(12, 17, seed=23)
+    plan = ExecutionPlan.create(12, 17, replicas=B, replica_chunk=chunk,
+                                **KW)
+    assert plan.replica_chunk_sizes == (4, 4, 2)
+
+    calls = []
+    real = significance.pcc_tiles
+
+    def spy(u, j0, **kw):
+        v = kw.get("v_pad")
+        if v is not None and v.ndim == 3:   # a replica launch
+            calls.append(v.shape[0])
+        return real(u, j0, **kw)
+
+    monkeypatch.setattr(significance, "pcc_tiles", spy)
+    corr(x, pvalues=PermutationSpec(iterations=B, key=K(7), chunk=chunk),
+         **KW)
+    assert calls == [4, 4, 2]               # exact-sized, no discarded work
+    assert sum(calls) == B
+
+
+def test_key_is_required_and_legacy_wrapper_warns():
+    """Legacy bug 3: key=None silently fixed PRNGKey(0).  The engine API
+    refuses; the deprecated wrapper keeps the old default but warns."""
+    with pytest.raises(ValueError, match="PRNGKey\\(0\\)"):
+        PermutationSpec(iterations=10)
+    x = _x(6, 12, seed=24)
+    with pytest.warns(UserWarning, match="PRNGKey\\(0\\)"):
+        permutation_pvalues(x, iterations=4, chunk=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # explicit key: no warning
+        permutation_pvalues(x, iterations=4, chunk=2, key=K(1))
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="iterations"):
+        PermutationSpec(iterations=0, key=K(0))
+    with pytest.raises(ValueError, match="method"):
+        PermutationSpec(iterations=2, key=K(0), method="jackknife")
+    with pytest.raises(ValueError, match="chunk"):
+        PermutationSpec(iterations=2, key=K(0), chunk=0)
+
+
+def test_legacy_wrapper_matches_engine_bitwise():
+    x = _x(15, 22, seed=25)
+    r_w, p_w = permutation_pvalues(x, iterations=20, chunk=7, key=K(11))
+    r_e, p_e = corr(x, pvalues=PermutationSpec(iterations=20, key=K(11),
+                                               chunk=7))
+    np.testing.assert_array_equal(np.asarray(r_w), np.asarray(r_e))
+    np.testing.assert_array_equal(np.asarray(p_w), np.asarray(p_e))
+
+
+def test_masked_rejects_pvalues():
+    x = np.asarray(_x(8, 12, seed=26)).copy()
+    x[0, :3] = np.nan
+    with pytest.raises(ValueError, match="pvalues"):
+        corr(jnp.asarray(x), where="nan",
+             pvalues=PermutationSpec(iterations=4, key=K(0)), **KW)
+
+
+# ---------------------------------------------------------------------------
+# Sink composition + bounded memory
+# ---------------------------------------------------------------------------
+
+
+def test_topk_inner_p_sink():
+    x = _x(20, 24, seed=27)
+    spec = PermutationSpec(iterations=12, key=K(14), chunk=5,
+                           sink=TopKSink(4))
+    r, top = corr(x, pvalues=spec, **KW)
+    _, p_ref = corr(x, pvalues=PermutationSpec(iterations=12, key=K(14),
+                                               chunk=5), **KW)
+    p_ref = np.asarray(p_ref).copy()
+    assert set(top) == {"indices", "values"}
+    assert top["values"].shape == (20, 4)
+    np.fill_diagonal(p_ref, -np.inf)        # TopKSink excludes self-pairs
+    want = np.sort(p_ref, axis=1)[:, ::-1][:, :4]
+    np.testing.assert_array_equal(np.sort(top["values"], axis=1)[:, ::-1],
+                                  want)
+
+
+class _KilledExceedance(ExceedanceSink):
+    """Dies after `die_after` consumed passes — a job killed mid-sweep with
+    some p-value passes durably committed."""
+
+    def __init__(self, inner, die_after):
+        super().__init__(inner=inner)
+        self._die_after = die_after
+        self._seen = 0
+
+    def consume(self, ids, counts):
+        if self._seen >= self._die_after:
+            raise RuntimeError("killed mid-run")
+        self._seen += 1
+        super().consume(ids, counts)
+
+
+def test_memmap_p_sink_checkpoint_and_resume(tmp_path):
+    """HostSink-under-ExceedanceSink: p-values assemble out of core with
+    durable per-pass checkpoints, and the persisted plan spec carries the
+    null identity (measure:pvalues:method:B:key), so a resume against a
+    different null is refused."""
+    x = _x(40, 16, seed=28)
+    kw = dict(t=8, l_blk=8, max_tiles_per_pass=4)
+    spec = lambda sink=None: PermutationSpec(iterations=6, key=K(15),
+                                             chunk=4, sink=sink)
+    _, p_full = corr(x, pvalues=spec(), **kw)
+
+    path = str(tmp_path / "p.mm")
+    _, p_mm = corr(x, pvalues=spec(HostSink(path=path)), **kw)
+    np.testing.assert_array_equal(np.asarray(p_mm)[np.triu_indices(40)],
+                                  np.asarray(p_full)[np.triu_indices(40)])
+    prog = json.loads((tmp_path / "p.mm.progress.json").read_text())
+    assert "pvalues:permute:B6" in prog["spec"]["measure"]
+
+    # killed mid-run: completed passes stay durable, resume finishes
+    path2 = str(tmp_path / "q.mm")
+    orig = significance.ExceedanceSink
+    try:
+        significance.ExceedanceSink = (
+            lambda inner=None: _KilledExceedance(inner, die_after=2))
+        with pytest.raises(RuntimeError, match="killed"):
+            corr(x, pvalues=spec(HostSink(path=path2)), **kw)
+    finally:
+        significance.ExceedanceSink = orig
+    prog2 = json.loads((tmp_path / "q.mm.progress.json").read_text())
+    assert prog2["completed"] == 1          # dying pass not committed
+    _, p_res = corr(x, pvalues=spec(HostSink(path=path2, resume=True)), **kw)
+    np.testing.assert_array_equal(np.asarray(p_res)[np.triu_indices(40)],
+                                  np.asarray(p_full)[np.triu_indices(40)])
+
+    # a different key is a different null distribution: resume refused
+    with pytest.raises(ValueError, match="spec"):
+        corr(x, pvalues=PermutationSpec(iterations=6, key=K(16), chunk=4,
+                                        sink=HostSink(path=path2,
+                                                      resume=True)), **kw)
+
+
+def test_device_memory_bounded_by_pass_and_chunk(monkeypatch):
+    """The significance sweep never materialises O(B * n^2): per pass, the
+    counts/p buffers the sink sees hold at most one launch of tiles, and
+    every replica operand stack holds at most `chunk` replicas."""
+    n, l, B, chunk, mtp = 64, 16, 24, 5, 3
+    x = _x(n, l, seed=29)
+    plan = ExecutionPlan.create(n, l, t=8, l_blk=8, max_tiles_per_pass=mtp,
+                                replicas=B, replica_chunk=chunk)
+    assert plan.n_pass > 1
+    max_launch = max(plan.launch_sizes)
+
+    class Probe(DenseSink):
+        def consume(self, ids, tiles):
+            assert np.asarray(tiles).shape[0] <= max_launch
+            super().consume(ids, tiles)
+
+    _, p_ref = corr(x, t=8, l_blk=8,
+                    pvalues=PermutationSpec(iterations=B, key=K(17),
+                                            chunk=chunk))
+
+    rep_dims = []
+    real = significance.pcc_tiles
+
+    def spy(u, j0, **kw):
+        v = kw.get("v_pad")
+        if v is not None and v.ndim == 3:
+            rep_dims.append(v.shape[0])
+            assert kw["pass_tiles"] <= max_launch
+        return real(u, j0, **kw)
+
+    monkeypatch.setattr(significance, "pcc_tiles", spy)
+    _, p = corr(x, t=8, l_blk=8, max_tiles_per_pass=mtp,
+                pvalues=PermutationSpec(iterations=B, key=K(17), chunk=chunk,
+                                        sink=Probe()))
+    assert rep_dims and max(rep_dims) <= chunk
+    # every pass re-runs all ceil(B/chunk) chunks; none exceeds the knob
+    assert len(rep_dims) == plan.n_pass * len(plan.replica_chunk_sizes)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+
+
+# ---------------------------------------------------------------------------
+# Serving: edge-significance queries
+# ---------------------------------------------------------------------------
+
+
+def test_server_significance_parity_and_null_cache():
+    from repro.serving import CorpusHandle, CorrServer
+    corpus_x = np.asarray(_x(18, 33, seed=30))
+    probes = np.asarray(_x(5, 33, seed=31))
+    spec = PermutationSpec(iterations=21, key=K(3), chunk=6)
+    r_ref, p_ref = corr(jnp.asarray(probes), jnp.asarray(corpus_x),
+                        pvalues=spec, **KW)
+    corpus = CorpusHandle(corpus_x, **KW)
+    with CorrServer(corpus, **KW) as srv:
+        res = srv.significance(probes, pvalues=spec)
+        r1, p1 = res.value
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r_ref))
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p_ref))
+        assert res.stats["null_state_hit"] is False
+        chunks = corpus.stats()["null_chunks"]
+        assert chunks == res.stats["replica_chunks"]
+
+        res2 = srv.significance(probes, pvalues=spec)   # warm null state
+        np.testing.assert_array_equal(np.asarray(res2.value[1]),
+                                      np.asarray(p_ref))
+        assert res2.stats["null_state_hit"] is True
+        assert corpus.stats()["null_chunks"] == chunks
+
+        corpus.clear_null_state()
+        assert corpus.stats()["null_chunks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Mesh parity (subprocess, 8 simulated devices)
+# ---------------------------------------------------------------------------
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run(body: str):
+    code = textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    return res.stdout
+
+
+def test_sharded_significance_bit_matches_local():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.api import corr
+        from repro.core.significance import PermutationSpec
+        rng = np.random.default_rng(41)
+        x = jnp.asarray(rng.standard_normal((26, 19)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal((12, 19)).astype(np.float32))
+        spec = lambda: PermutationSpec(iterations=17, key=jax.random.PRNGKey(8),
+                                       chunk=5)
+        kw = dict(t=8, l_blk=32)
+        r0, p0 = corr(x, pvalues=spec(), **kw)
+        for mesh_shape, axes in [((8,), ("d",)), ((4, 2), ("a", "b"))]:
+            mesh = jax.make_mesh(mesh_shape, axes)
+            r, p = corr(x, pvalues=spec(), mesh=mesh, **kw)
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(r0))
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+        mesh = jax.make_mesh((8,), ("d",))
+        # shard_u + multi-pass
+        r, p = corr(x, pvalues=spec(), mesh=mesh, shard_u=True,
+                    max_tiles_per_pass=2, **kw)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(r0))
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+        # rectangular
+        rr0, pp0 = corr(x, y, pvalues=spec(), **kw)
+        rr, pp = corr(x, y, pvalues=spec(), mesh=mesh, **kw)
+        np.testing.assert_array_equal(np.asarray(rr), np.asarray(rr0))
+        np.testing.assert_array_equal(np.asarray(pp), np.asarray(pp0))
+        print("OK")
+    """)
