@@ -1,0 +1,80 @@
+"""Robustness-suite benchmarks: what self-healing execution costs.
+
+Recovery must be cheap when nothing fails and proportional when
+something does.  Three structural A/Bs over the fault machinery
+(runtime/faults.py + the recovering executor + HostSink checkpoints),
+small enough for the CPU-interpret CI smoke:
+
+  recovery_overhead    the same run with and without
+                       ``corr(recovery=RetryPolicy())`` and no fault
+                       armed — the price of the coverage bitmap and the
+                       per-pass schedule recomputation on the happy path.
+  checkpoint_crc       HostSink memmap checkpointing with the v2
+                       CRC-verified sidecar vs no checkpointing at all —
+                       the durability tax per pass (flush + CRC32 +
+                       fsync + atomic rename).
+  fault_recovery       a run that takes one injected transient fault and
+                       one OOM pass-shrink vs the fault-free run — what
+                       a recovered failure costs end to end (re-launched
+                       passes included), while the result stays
+                       bit-identical.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit_host
+from repro.core.api import corr
+from repro.core.sinks import HostSink
+from repro.runtime.faults import FaultPlan, FaultSpec, RetryPolicy
+
+N, L = 64, 32
+KW = dict(t=16, l_blk=32, max_tiles_per_pass=3)  # 10 tiles -> 4 passes
+
+
+def run() -> None:
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((N, L)).astype(np.float32))
+    base = np.asarray(corr(x, **KW))  # warm the kernel caches
+
+    # -- recovery machinery on the happy path (no faults armed) ------------
+    t_plain = timeit_host(lambda: corr(x, **KW), iters=3)
+    t_rec = timeit_host(
+        lambda: corr(x, recovery=RetryPolicy(), **KW), iters=3)
+    emit("robustness/plain_run", t_plain * 1e6, f"n={N};l={L};passes=4")
+    emit("robustness/recovery_armed_no_faults", t_rec * 1e6,
+         f"n={N};l={L};overhead={t_rec / t_plain:.2f}x")
+
+    # -- durable CRC-verified checkpoints vs in-memory assembly ------------
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "r.mm")
+
+        def ckpt():
+            r = corr(x, sink=HostSink(path=path), **KW)
+            os.remove(path)
+            os.remove(path + ".progress.json")
+            return r
+
+        t_ckpt = timeit_host(ckpt, iters=3)
+    emit("robustness/checkpoint_crc_sidecar", t_ckpt * 1e6,
+         f"n={N};l={L};per_pass_tax_us={(t_ckpt - t_plain) / 4 * 1e6:.0f}")
+
+    # -- recovering from an actual transient + OOM fault -------------------
+    def faulted():
+        plan = FaultPlan([FaultSpec("pass_launch", "transient", (2,)),
+                          FaultSpec("pass_launch", "oom", (5,))])
+        pol = RetryPolicy(sleep=lambda _s: None)
+        with plan.armed():
+            r = np.asarray(corr(x, recovery=pol, **KW))
+        assert len(plan.fired) == 2
+        np.testing.assert_array_equal(r, base)  # recovery is exact
+        return r
+
+    t_fault = timeit_host(faulted, iters=3)
+    emit("robustness/transient_plus_oom_recovered", t_fault * 1e6,
+         f"n={N};l={L};faults=2;vs_clean={t_fault / t_rec:.2f}x")

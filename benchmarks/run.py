@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary).
   kernels — tile/kernel microbenchmarks + grid-savings       (paper SSIII-C)
   serving — plan-cache hit/miss + batched vs serial queries  (serving layer)
   significance — replica-axis vs legacy batched p-values     (paper SSIV)
+  robustness — recovery + CRC-checkpoint overhead            (fault harness)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only table1,...]
 """
@@ -21,8 +22,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: "
-                         "table1,table2,fig2,kernels,serving,significance")
+                    help="comma-separated subset: table1,table2,fig2,"
+                         "kernels,serving,significance,robustness")
     ap.add_argument("--json", default="",
                     help="append this run as one trajectory point to the "
                          "given BENCH_*.json file (see common.save_trajectory)")
@@ -55,6 +56,9 @@ def main() -> None:
     if want("significance"):
         from benchmarks import significance
         significance.run()
+    if want("robustness"):
+        from benchmarks import robustness
+        robustness.run()
 
     if args.json:
         path = common.save_trajectory(args.json, args.label or None)

@@ -37,6 +37,7 @@ should call allpairs() directly.
 
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import Iterator, Optional, Tuple
 
@@ -53,6 +54,7 @@ from repro.core.plan import (ExecutionPlan, pad_operands, resolve_interpret,
 from repro.core.sinks import (DenseSink, TileSink, place_tiles_host,
                               scatter_tiles, symmetrize)
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
+from repro.runtime import faults
 
 Array = jax.Array
 
@@ -98,15 +100,20 @@ def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
 
 
 def _local_launches(plan: ExecutionPlan, u_pad: Array,
-                    v_pad: Optional[Array] = None, start_pass: int = 0):
+                    v_pad: Optional[Array] = None, start_pass: int = 0,
+                    skip=frozenset()):
     """Single-device pass launches: consecutive spans of the workload's
     tile-id range, each kernel sized to its actual tile count.  start_pass
     skips already-completed passes without computing them (checkpoint
-    resume)."""
+    resume); `skip` drops individual later passes (coverage resume after
+    an elastic repartition, where completed work is no longer a prefix)."""
     grid_cols = plan.workload.grid_cols
     sizes = plan.launch_sizes
-    lo = sum(sizes[:start_pass])
-    for launch in sizes[start_pass:]:
+    for k, launch in list(enumerate(sizes))[start_pass:]:
+        if k in skip:
+            continue
+        faults.check("pass_launch")
+        lo = plan.pass_offset(k)
         buf = pcc_tiles(u_pad, lo, t=plan.t, l_blk=plan.l_blk,
                         pass_tiles=launch, interpret=plan.interpret,
                         epilogue=plan.epilogue_spec,
@@ -114,13 +121,12 @@ def _local_launches(plan: ExecutionPlan, u_pad: Array,
         if not plan.fused and plan.measure.epilogue is not None:
             buf = plan.measure.epilogue(buf, plan.l)
         # local launches are exact-sized: every slot is valid
-        yield np.arange(lo, lo + launch, dtype=np.int64), buf, None, None
-        lo += launch
+        yield k, np.arange(lo, lo + launch, dtype=np.int64), buf, None, None
 
 
 def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
                    shard_u: bool, v_pad: Optional[Array] = None,
-                   start_pass: int = 0):
+                   start_pass: int = 0, skip=frozenset()):
     """shard_map pass launches (paper SSIII-D): all mesh axes flatten into
     one logical PE-rank axis; device `rank` owns the contiguous tile range
     [rank*per_dev, (rank+1)*per_dev) and each pass covers at most
@@ -197,6 +203,9 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
         return fns[launch]
 
     for k, launch in list(enumerate(plan.launch_sizes))[start_pass:]:
+        if k in skip:
+            continue
+        faults.check("pass_launch")
         off = jnp.full((1,), plan.pass_offset(k), jnp.int32)
         args = (u_in, off) if v_in is None else (u_in, v_in, off)
         buf = pass_fn(launch)(*args)
@@ -208,23 +217,24 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
         # (which would undo the per-device pass-memory bound).
         ids, sel = plan.pass_selection(k)
         padded = plan.pass_padded_ids(k) if sel is not None else None
-        yield ids, buf, sel, padded
+        yield k, ids, buf, sel, padded
 
 
 def _stream(plan: ExecutionPlan, u_pad: Array, *, mesh: Optional[Mesh] = None,
             shard_u: bool = False, v_pad: Optional[Array] = None,
-            start_pass: int = 0):
-    """Double-buffered pass stream of (ids, raw_buffer, sel, padded_ids):
+            start_pass: int = 0, skip=frozenset()):
+    """Double-buffered pass stream of (k, ids, raw_buffer, sel, padded_ids):
     pulls (and thus async-dispatches) pass k+1 before yielding pass k, so a
     sink that blocks on host transfer overlaps the device's next pass
     (paper Alg. 2 signal/wait).  sel/padded_ids are None except on mesh
     passes with clamped tail-device slots (see TileSink.consume_clamped).
     v_pad supplies the second operand of rectangular workloads; start_pass
-    resumes mid-run (already-completed passes are never dispatched)."""
-    launches = (_local_launches(plan, u_pad, v_pad, start_pass)
+    resumes mid-run and `skip` drops individual later passes (coverage
+    resume) — neither is ever dispatched."""
+    launches = (_local_launches(plan, u_pad, v_pad, start_pass, skip)
                 if mesh is None
                 else _mesh_launches(plan, u_pad, mesh, shard_u, v_pad,
-                                    start_pass))
+                                    start_pass, skip))
     pending = None
     for item in launches:
         if pending is not None:
@@ -236,26 +246,27 @@ def _stream(plan: ExecutionPlan, u_pad: Array, *, mesh: Optional[Mesh] = None,
 
 def run_sink(plan: ExecutionPlan, sink: Optional[TileSink], make_stream):
     """The one sink-driving loop behind every entry point: open the sink,
-    recover its resume point, drain the (ids, buf, sel, padded) stream
-    that `make_stream(start_pass)` builds, committing each pass.
+    recover its resume schedule, drain the (k, ids, buf, sel, padded)
+    stream that `make_stream(start_pass, skip)` builds, committing each
+    pass.
 
     Sinks that persist progress (HostSink with a memmap path) report a
-    resume point via ``resume_pass()`` — completed passes are never
-    dispatched — and ``pass_complete(k)`` commits each pass as it lands.
-    getattr-with-default keeps duck-typed sinks written against the PR-3
-    contract (open/consume/result only) working unchanged."""
+    resume point via ``resume_pass()`` plus a ``skip_passes()`` set —
+    completed passes are never dispatched — and ``pass_complete(k)``
+    commits each pass as it lands.  getattr-with-default keeps duck-typed
+    sinks written against the PR-3 contract (open/consume/result only)
+    working unchanged."""
     snk = sink if sink is not None else DenseSink()
     snk.open(plan)
     k0 = getattr(snk, "resume_pass", lambda: 0)()
+    skip = getattr(snk, "skip_passes", set)()
     pass_complete = getattr(snk, "pass_complete", lambda k: None)
-    k = k0
-    for ids, buf, sel, padded in make_stream(k0):
+    for k, ids, buf, sel, padded in make_stream(k0, frozenset(skip)):
         if sel is None:
             snk.consume(ids, buf)
         else:
             snk.consume_clamped(padded, sel, ids, buf)
         pass_complete(k)
-        k += 1
     return snk.result()
 
 
@@ -263,13 +274,138 @@ def execute_plan(plan: ExecutionPlan, u_pad: Array,
                  v_pad: Optional[Array] = None, *,
                  sink: Optional[TileSink] = None,
                  mesh: Optional[Mesh] = None,
-                 shard_u: bool = False):
+                 shard_u: bool = False,
+                 recovery: Optional[faults.RetryPolicy] = None):
     """Run a prepared plan end to end: stream every remaining pass into
-    the sink and finalise (see run_sink for the resume/commit protocol)."""
+    the sink and finalise (see run_sink for the resume/commit protocol).
+
+    recovery=RetryPolicy() arms the self-healing loop: transient failures
+    retry in place with exponential backoff, OOM halves the per-pass
+    footprint, and device loss shrinks onto the surviving mesh and
+    continues — resuming from the tiles already consumed/checkpointed,
+    bit-identical to an uninterrupted run (see _execute_recovering)."""
+    if recovery is not None:
+        return _execute_recovering(plan, u_pad, v_pad, sink=sink, mesh=mesh,
+                                   shard_u=shard_u, policy=recovery)
     return run_sink(
         plan, sink,
-        lambda k0: _stream(plan, u_pad, v_pad=v_pad, mesh=mesh,
-                           shard_u=shard_u, start_pass=k0))
+        lambda k0, skip: _stream(plan, u_pad, v_pad=v_pad, mesh=mesh,
+                                 shard_u=shard_u, start_pass=k0, skip=skip))
+
+
+def _default_shrink(mesh: Optional[Mesh], plan: ExecutionPlan,
+                    exc: BaseException):
+    """Default device-loss resolution: drop one device, flatten the
+    survivors into a 1-D mesh, repartition the plan (runtime/elastic)."""
+    from repro.runtime import elastic  # lazy: elastic imports core.plan
+
+    if mesh is None:
+        raise exc  # local run: no mesh to shrink
+    new_mesh = elastic.shrink_mesh(mesh)
+    new_p = 1 if new_mesh is None else int(np.prod(new_mesh.devices.shape))
+    return new_mesh, elastic.replan_execution(plan, new_p)
+
+
+def _execute_recovering(plan: ExecutionPlan, u_pad: Array,
+                        v_pad: Optional[Array], *, sink: Optional[TileSink],
+                        mesh: Optional[Mesh], shard_u: bool,
+                        policy: faults.RetryPolicy):
+    """The self-healing executor loop.
+
+    Progress is tracked as a host-side coverage bitmap over *global tile
+    ids* — not pass indices — seeded from the sink's recovered coverage.
+    Each attempt re-derives the pass schedule from coverage
+    (plan.coverage_schedule), streams the remaining passes, and filters
+    already-covered ids out of consume() host-side: sinks whose merge is
+    not idempotent under duplicates (TopKSink candidates, EdgeCountSink
+    tallies) stay correct even when a retried or repartitioned pass
+    overlaps tiles that already landed.
+
+    Failure handling per classify_failure:
+      transient    retry in place; exponential backoff; the retry budget
+                   refills whenever a pass lands (forward progress)
+      oom          halve max_tiles_per_pass (>= 1) and retry
+      device_loss  policy.on_device_loss (default: drop one device via
+                   runtime/elastic, repartition) then continue on the
+                   surviving mesh; the sink rebinds so durable sidecars
+                   immediately carry the new spec
+      crash/fatal  propagate — simulated process death is recovered by
+                   restart + resume_from, never in-process
+    """
+    snk = sink if sink is not None else DenseSink()
+    snk.open(plan)
+    covered = getattr(snk, "covered", lambda: None)()
+    if covered is None or np.shape(covered) != (plan.total_tiles,):
+        covered = np.zeros(plan.total_tiles, bool)
+    else:
+        covered = np.asarray(covered, bool).copy()
+    pass_complete = getattr(snk, "pass_complete", lambda k: None)
+    failures = 0
+    while not covered.all():
+        k0, skip = plan.coverage_schedule(covered)
+        if k0 >= plan.n_pass:
+            break
+        try:
+            stream = _stream(plan, u_pad, v_pad=v_pad, mesh=mesh,
+                             shard_u=shard_u, start_pass=k0,
+                             skip=frozenset(skip))
+            for k, ids, buf, sel, padded in stream:
+                ids = np.asarray(ids)
+                fresh = ~covered[ids]
+                if sel is None:
+                    if fresh.all():
+                        snk.consume(ids, buf)
+                    elif fresh.any():
+                        snk.consume(ids[fresh], np.asarray(buf)[fresh])
+                else:
+                    if fresh.all():
+                        snk.consume_clamped(padded, sel, ids, buf)
+                    elif fresh.any():
+                        # host-side filter down to the missing tiles — the
+                        # same memory-bound resolution consume_clamped uses
+                        snk.consume(ids[fresh],
+                                    np.asarray(buf)[np.asarray(sel)[fresh]])
+                covered[ids] = True
+                pass_complete(k)
+                failures = 0  # forward progress refills the retry budget
+        except BaseException as exc:
+            kind = faults.classify_failure(exc)
+            if kind == "transient":
+                failures += 1
+                if failures > policy.max_retries:
+                    policy.log.append({"kind": kind, "action": "give_up",
+                                       "attempt": failures})
+                    raise
+                policy.log.append({"kind": kind, "action": "retry",
+                                   "attempt": failures, "error": str(exc)})
+                policy.sleep(policy.backoff(failures - 1))
+                continue
+            if kind == "oom" and policy.shrink_pass_on_oom:
+                if plan.max_tiles_per_pass <= 1:
+                    policy.log.append({"kind": kind, "action": "give_up",
+                                       "max_tiles_per_pass": 1})
+                    raise
+                plan = dataclasses.replace(
+                    plan,
+                    max_tiles_per_pass=max(1, plan.max_tiles_per_pass // 2))
+                policy.log.append(
+                    {"kind": kind, "action": "shrink_pass",
+                     "max_tiles_per_pass": plan.max_tiles_per_pass})
+                getattr(snk, "rebind", lambda _p: None)(plan)
+                continue
+            if kind == "device_loss" and policy.shrink_on_device_loss:
+                resolver = policy.on_device_loss or _default_shrink
+                mesh, plan = resolver(mesh, plan, exc)
+                new_p = (1 if mesh is None
+                         else int(np.prod(mesh.devices.shape)))
+                policy.log.append({"kind": kind, "action": "shrink_mesh",
+                                   "p": new_p, "error": str(exc)})
+                getattr(snk, "rebind", lambda _p: None)(plan)
+                continue
+            policy.log.append({"kind": kind, "action": "raise",
+                               "error": str(exc)})
+            raise
+    return snk.result()
 
 
 def stream_tiles(
@@ -318,8 +454,8 @@ def stream_tiles(
             raise ValueError(
                 f"measure={measures.get(measure).name!r} conflicts with "
                 f"plan.measure={plan.measure.name!r}")
-    for ids, buf, sel, _padded in _stream(plan, plan.prepare(x), mesh=mesh,
-                                          shard_u=shard_u):
+    for _k, ids, buf, sel, _padded in _stream(plan, plan.prepare(x),
+                                              mesh=mesh, shard_u=shard_u):
         yield ids, (buf if sel is None else np.asarray(buf)[sel])
 
 

@@ -282,6 +282,7 @@ def corr(
     compute_dtype=None,
     resume_from: Optional[str] = None,
     pvalues: Optional[PermutationSpec] = None,
+    recovery=None,
 ):
     """Pairwise similarity for any workload shape: plan -> executor -> sink.
 
@@ -324,6 +325,13 @@ def corr(
              add-one estimator.  ``pvalues.sink`` routes the p-value tiles
              (dense by default); not supported with ``where=`` (the masked
              component GEMMs have no single observed statistic to permute).
+    recovery: a :class:`~repro.runtime.faults.RetryPolicy` arms the
+             self-healing executor (docs/robustness.md): transient
+             failures retry in place with exponential backoff, OOM halves
+             the per-pass footprint, device loss shrinks onto the
+             surviving mesh and continues — results stay bit-identical to
+             an uninterrupted run.  Supported for plain (non-masked,
+             non-pvalues) runs.
     t / l_blk / max_tiles_per_pass / interpret / clip / fuse_epilogue /
     compute_dtype keep their ExecutionPlan semantics.
     """
@@ -342,6 +350,12 @@ def corr(
     p = 1 if mesh is None else int(np.prod(mesh.devices.shape))
     replicas = 0 if pvalues is None else pvalues.iterations
     replica_chunk = None if pvalues is None else pvalues.chunk
+    if recovery is not None and (problem.masked or pvalues is not None):
+        raise ValueError(
+            "recovery= is supported for plain runs only (masked and "
+            "pvalues workloads drive their own multi-stream pass loops); "
+            "run those under a FaultPlan with resume_from= restart "
+            "recovery instead")
     if problem.masked:
         if pvalues is not None:
             raise ValueError(
@@ -378,7 +392,7 @@ def corr(
             return run_significance(plan, pvalues, u_pad, columns=problem.x,
                                     sink=sink, mesh=mesh, shard_u=shard_u)
         return execute_plan(plan, u_pad, sink=sink, mesh=mesh,
-                            shard_u=shard_u)
+                            shard_u=shard_u, recovery=recovery)
 
     plan = ExecutionPlan.create(
         problem.n_rows, problem.l, n_cols=problem.n_cols, t=t, l_blk=l_blk,
@@ -394,7 +408,7 @@ def corr(
                                 v_pad=v_pad, sink=sink, mesh=mesh,
                                 shard_u=shard_u)
     return execute_plan(plan, u_pad, v_pad, sink=sink, mesh=mesh,
-                        shard_u=shard_u)
+                        shard_u=shard_u, recovery=recovery)
 
 
 def _run_masked(problem: PairwiseProblem, *, sink, mesh, p, t, l_blk,
@@ -436,17 +450,17 @@ def _run_masked(problem: PairwiseProblem, *, sink, mesh, p, t, l_blk,
                                     clip=clip,
                                     symmetric_grid=problem.symmetric)
 
-    def make_stream(k0):
+    def make_stream(k0, skip):
         streams = [
             _stream(plan, pad_x[MASKED_ROW[c]], v_pad=pad_y[MASKED_COL[c]],
-                    mesh=mesh, start_pass=k0)
+                    mesh=mesh, start_pass=k0, skip=skip)
             for c in mm.components
         ]
         for items in zip(*streams):
-            ids, _, sel, padded = items[0]
+            k, ids, _, sel, padded = items[0]
             parts = {c: buf
-                     for c, (_, buf, _, _) in zip(mm.components, items)}
-            yield ids, mm.combine(parts), sel, padded
+                     for c, (_, _, buf, _, _) in zip(mm.components, items)}
+            yield k, ids, mm.combine(parts), sel, padded
 
     return run_sink(sink_plan, sink, make_stream)
 

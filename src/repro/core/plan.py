@@ -370,6 +370,38 @@ class ExecutionPlan:
             return ids, None
         return ids, np.concatenate(sel_parts)
 
+    def coverage_schedule(self, covered: np.ndarray):
+        """Resume schedule from a tile-coverage bitmap: ``(k0, skip)``.
+
+        `covered` is a bool bitmap over the global tile ids (True = this
+        tile's output is already durably held — consumed/checkpointed).
+        Returns the first pass index whose valid tiles are not all covered
+        and the set of *later* pass indices that are fully covered and must
+        be skipped.  For an uninterrupted prefix (classic kill-and-resume)
+        skip is empty and k0 is the old watermark + 1; after an elastic
+        ``repartition`` the same completed work is generally *not* a pass
+        prefix of the new partition — this is what maps it back onto the
+        new pass structure without recomputing covered tiles.
+        """
+        covered = np.asarray(covered, bool)
+        if covered.shape != (self.total_tiles,):
+            raise ValueError(
+                f"coverage bitmap shape {covered.shape} != "
+                f"(total_tiles={self.total_tiles},)")
+        k0: Optional[int] = None
+        skip = set()
+        for k in range(self.n_pass):
+            ids, _ = self.pass_selection(k)
+            full = ids.size == 0 or bool(covered[ids].all())
+            if k0 is None:
+                if not full:
+                    k0 = k
+            elif full:
+                skip.add(k)
+        if k0 is None:
+            k0 = self.n_pass
+        return k0, skip
+
     # -- checkpoint identity -------------------------------------------------
 
     def spec_dict(self) -> dict:

@@ -63,6 +63,7 @@ from repro.core import measures
 from repro.core.plan import ExecutionPlan
 from repro.core.sinks import DenseSink, ExceedanceSink, TileSink
 from repro.kernels.pcc_tile import pcc_tiles
+from repro.runtime import faults
 
 Array = jax.Array
 KeyLike = Union[int, Array]
@@ -283,22 +284,33 @@ def run_significance(
     p_sink.open(p_plan)
     k0_r = getattr(r_sink, "resume_pass", lambda: 0)()
     k0_p = getattr(p_sink, "resume_pass", lambda: 0)()
+    skip_r = getattr(r_sink, "skip_passes", set)()
+    skip_p = getattr(p_sink, "skip_passes", set)()
     k0 = min(k0_r, k0_p)
     r_done = getattr(r_sink, "pass_complete", lambda k: None)
     p_done = getattr(p_sink, "pass_complete", lambda k: None)
 
+    def need_r(k: int) -> bool:
+        return k >= k0_r and k not in skip_r
+
+    def need_p(k: int) -> bool:
+        return k >= k0_p and k not in skip_p
+
     if mesh is None:
         for k in range(k0, plan.n_pass):
+            if not (need_r(k) or need_p(k)):
+                continue
+            faults.check("pass_launch")
             launch = plan.launch_sizes[k]
             j0 = plan.pass_offset(k)
             raw = pcc_tiles(u_pad, j0, t=plan.t, l_blk=plan.l_blk,
                             pass_tiles=launch, interpret=plan.interpret,
                             epilogue=None, v_pad=v_pad, grid_cols=grid_cols)
             ids = np.arange(j0, j0 + launch, dtype=np.int64)
-            if k >= k0_r:
+            if need_r(k):
                 r_sink.consume(ids, _obs_tiles(plan, raw))
                 r_done(k)
-            if k >= k0_p:
+            if need_p(k):
                 abs_obs = _cmp_vals(plan, raw)
                 counts = jnp.zeros(raw.shape, jnp.int32)
                 for ci, rc, keys_c in chunk_slices():
@@ -390,20 +402,23 @@ def run_significance(
         return cnt_fns[(launch, rc)]
 
     for k in range(k0, plan.n_pass):
+        if not (need_r(k) or need_p(k)):
+            continue
+        faults.check("pass_launch")
         launch = plan.launch_sizes[k]
         off = jnp.full((1,), plan.pass_offset(k), jnp.int32)
         args = (u_in, off) if v_in is None else (u_in, v_in, off)
         raw = obs_fn(launch)(*args)
         ids, sel = plan.pass_selection(k)
         padded = plan.pass_padded_ids(k) if sel is not None else None
-        if k >= k0_r:
+        if need_r(k):
             r_buf = _obs_tiles(plan, raw)
             if sel is None:
                 r_sink.consume(ids, r_buf)
             else:
                 r_sink.consume_clamped(padded, sel, ids, r_buf)
             r_done(k)
-        if k >= k0_p:
+        if need_p(k):
             abs_obs = _cmp_vals(plan, raw)
             counts = None
             for ci, rc, keys_c in chunk_slices():

@@ -31,7 +31,8 @@ import abc
 import copy
 import json
 import os
-from typing import Callable, Optional
+import zlib
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,7 @@ import numpy as np
 
 from repro.core import mapping
 from repro.core.plan import ExecutionPlan
+from repro.runtime import faults
 
 Array = jax.Array
 
@@ -57,6 +59,31 @@ class TileSink(abc.ABC):
         recovered persisted progress in open() (HostSink checkpointing) —
         the executor never dispatches passes below this index."""
         return 0
+
+    def skip_passes(self) -> set:
+        """Pass indices >= resume_pass() the executor must NOT dispatch.
+
+        Empty unless the sink recovered coverage that is not a pass-index
+        prefix — which happens exactly when a run was elastically
+        repartitioned (device loss) between checkpoints: the old partition's
+        completed tiles land scattered across the new partition's passes.
+        """
+        return set()
+
+    def covered(self) -> Optional[np.ndarray]:
+        """Bool bitmap over global tile ids whose output this sink already
+        holds durably, or None for sinks without recoverable coverage.
+        The recovering executor seeds its own coverage from this and
+        filters re-run passes down to the genuinely missing tiles."""
+        return None
+
+    def rebind(self, new_plan: ExecutionPlan) -> None:
+        """Adopt an elastically repartitioned plan mid-run (same geometry,
+        measure and workload — only the device partition changed).  Durable
+        sinks re-commit their sidecar under the new spec immediately, so a
+        crash after the shrink resumes against the plan that will actually
+        be re-run."""
+        self.plan = new_plan
 
     def pass_complete(self, k: int) -> None:
         """Pass k's tiles have been consumed; durable sinks commit here."""
@@ -196,6 +223,23 @@ class DenseSink(TileSink):
         return r
 
 
+def _id_intervals(ids: np.ndarray) -> List[List[int]]:
+    """Compress a sorted unique id array into half-open ``[lo, hi)`` runs —
+    the sidecar's tile-region encoding (plan-independent: global ids
+    survive elastic repartitioning, pass indices do not)."""
+    if ids.size == 0:
+        return []
+    breaks = np.nonzero(np.diff(ids) != 1)[0]
+    starts = np.concatenate([[0], breaks + 1])
+    ends = np.concatenate([breaks, [ids.size - 1]])
+    return [[int(ids[s]), int(ids[e]) + 1] for s, e in zip(starts, ends)]
+
+
+def _ids_from_intervals(ivs) -> np.ndarray:
+    parts = [np.arange(int(lo), int(hi), dtype=np.int64) for lo, hi in ivs]
+    return np.concatenate(parts) if parts else np.empty(0, np.int64)
+
+
 class HostSink(TileSink):
     """Assemble tiles (and, for symmetric workloads, their mirrors) into a
     host matrix — a caller array, an np.memmap at `path`, or a freshly
@@ -207,14 +251,28 @@ class HostSink(TileSink):
     compute/offload overlap.
 
     Checkpoint/resume: with a memmap `path`, every completed pass is
-    committed durably — the memmap is flushed and a sidecar
-    ``<path>.progress.json`` records the plan spec plus the last completed
-    pass index.  ``HostSink(path=..., resume=True)`` (or
+    committed durably and *crash-atomically* — the memmap is flushed, then
+    a sidecar ``<path>.progress.json`` is written to a temp file, fsynced,
+    and renamed into place (a crash at any instant leaves either the old
+    or the new sidecar, never a truncated one).  The sidecar (version 2)
+    records the plan spec, the last completed pass index, and per-commit
+    coverage entries: the committed tile-id intervals plus a CRC32 of the
+    written tile regions.  ``HostSink(path=..., resume=True)`` (or
     ``corr(..., resume_from=path)``) validates the persisted spec against
-    the current plan, reopens the memmap in place, and reports the resume
-    point to the executor — completed passes are never recomputed, and a
-    run killed mid-pass re-runs only that pass.
+    the current plan, re-verifies every entry's CRC against the memmap —
+    corrupt regions are dropped and recomputed, never trusted — and
+    reports the resume schedule to the executor: completed passes are
+    never recomputed, and a run killed mid-pass re-runs only that pass.
+    Entries are keyed by global tile ids, not pass indices, so a
+    checkpoint taken before an elastic shrink (``rebind``) resumes
+    correctly under the repartitioned plan.
+
+    Fault-injection sites (runtime/faults.py): ``sink_write`` (tile
+    placement; honours partial writes), ``sink_flush`` (durable flush),
+    ``sink_commit`` (crash before the atomic rename).
     """
+
+    SIDECAR_VERSION = 2
 
     def __init__(self, out: Optional[np.ndarray] = None,
                  path: Optional[str] = None, resume: bool = False):
@@ -232,22 +290,99 @@ class HostSink(TileSink):
     def progress_path(self) -> Optional[str]:
         return None if self._path is None else self._path + ".progress.json"
 
+    # -- sidecar integrity ---------------------------------------------------
+
+    def _crc_of_ids(self, ids: np.ndarray) -> int:
+        """CRC32 over the tile regions of `ids` in canonical (ascending id)
+        order — the same fancy-index gather shape place_tiles_host writes,
+        so the checksum covers exactly the committed bytes.  Mirrors are
+        derived writes and deliberately excluded: recomputing a dropped
+        region rewrites both halves."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return 0
+        ys, xs = self.plan.workload.job_coord_batch(ids)
+        t = self.plan.t
+        span = np.arange(t)
+        rows = (ys[:, None] * t + span)[:, :, None]
+        cols = (xs[:, None] * t + span)[:, None, :]
+        block = np.ascontiguousarray(np.asarray(self.r[rows, cols],
+                                                dtype=np.float32))
+        return zlib.crc32(block.tobytes()) & 0xFFFFFFFF
+
     def _write_progress(self, completed: int) -> None:
         # flush data before advancing the watermark: a crash between the
         # two leaves a pass marked incomplete (re-run), never a pass marked
         # complete with unflushed tiles (silent corruption)
+        faults.check("sink_flush")
         if hasattr(self.r, "flush"):
             self.r.flush()
         tmp = self.progress_path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"spec": self.plan.spec_dict(), "completed": completed},
-                      f)
+            json.dump({"version": self.SIDECAR_VERSION,
+                       "spec": self.plan.spec_dict(),
+                       "completed": completed,
+                       "entries": self._entries}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # an injected fault here is a crash after the temp write but
+        # *before* commit: the previous sidecar must stay intact/resumable
+        faults.check("sink_commit")
         os.replace(tmp, self.progress_path)
+        self._fsync_dir()
+
+    def _fsync_dir(self) -> None:
+        # persist the rename itself (directory entry), best-effort on
+        # filesystems that refuse O_RDONLY directory fsync
+        d = os.path.dirname(os.path.abspath(self.progress_path))
+        try:
+            fd = os.open(d, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
+
+    def _load_sidecar(self) -> dict:
+        try:
+            with open(self.progress_path) as f:
+                state = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise ValueError(
+                f"cannot resume from {self._path!r}: progress sidecar "
+                f"unreadable ({e}).  The sidecar commit is atomic "
+                f"(temp file + fsync + rename), so a crash cannot truncate "
+                f"it — it is missing or was modified outside the engine.  "
+                f"Delete {self.progress_path!r} and the memmap to restart "
+                f"from scratch.") from None
+        bad = None
+        if not isinstance(state, dict):
+            bad = f"expected a JSON object, got {type(state).__name__}"
+        elif not isinstance(state.get("spec"), dict):
+            bad = "missing plan spec"
+        elif not isinstance(state.get("completed"), int):
+            bad = "missing completed-pass watermark"
+        elif not isinstance(state.get("entries", []), list) or any(
+                not isinstance(e, dict) for e in state.get("entries", [])):
+            bad = "malformed coverage entries"
+        if bad is not None:
+            raise ValueError(
+                f"cannot resume from {self._path!r}: progress sidecar "
+                f"garbled ({bad}).  Delete {self.progress_path!r} and the "
+                f"memmap to restart from scratch.")
+        return state
 
     def open(self, plan: ExecutionPlan) -> None:
         super().open(plan)
         shape = (plan.n_pad, plan.col_pad)
         self._completed = -1
+        self._skip: set = set()
+        self._entries: List[dict] = []
+        self._pending: List[np.ndarray] = []
+        self._covered = np.zeros(plan.total_tiles, bool)
         if self._out is not None:
             if self._out.shape != shape:
                 raise ValueError(
@@ -255,22 +390,7 @@ class HostSink(TileSink):
             self.r = self._out
         elif self._path is not None:
             if self._resume:
-                try:
-                    with open(self.progress_path) as f:
-                        state = json.load(f)
-                except (OSError, json.JSONDecodeError) as e:
-                    raise ValueError(
-                        f"cannot resume from {self._path!r}: progress "
-                        f"sidecar unreadable ({e})") from None
-                spec = plan.spec_dict()
-                if state.get("spec") != spec:
-                    raise ValueError(
-                        f"cannot resume from {self._path!r}: persisted plan "
-                        f"spec {state.get('spec')} does not match the "
-                        f"requested run {spec}")
-                self.r = np.memmap(self._path, dtype=np.float32, mode="r+",
-                                   shape=shape)
-                self._completed = int(state["completed"])
+                self._open_resume(shape)
             else:
                 self.r = np.memmap(self._path, dtype=np.float32, mode="w+",
                                    shape=shape)
@@ -279,18 +399,110 @@ class HostSink(TileSink):
         else:
             self.r = np.zeros(shape, np.float32)
 
+    def _open_resume(self, shape) -> None:
+        state = self._load_sidecar()
+        spec = self.plan.spec_dict()
+        if state["spec"] != spec:
+            raise ValueError(
+                f"cannot resume from {self._path!r}: persisted plan "
+                f"spec {state['spec']} does not match the requested run "
+                f"{spec}")
+        self.r = np.memmap(self._path, dtype=np.float32, mode="r+",
+                           shape=shape)
+        completed = int(state["completed"])
+        if state.get("version", 1) >= 2:
+            entries = state.get("entries", [])
+        else:
+            # v1 sidecar (pre-CRC format): trust its completed-pass prefix
+            # — exactly its own semantics — and synthesise one verified
+            # entry so every commit from here on is self-checking
+            parts = [self.plan.pass_selection(k)[0]
+                     for k in range(completed + 1)]
+            ids = (np.unique(np.concatenate(parts)) if parts
+                   else np.empty(0, np.int64))
+            entries = [{"iv": _id_intervals(ids),
+                        "crc": self._crc_of_ids(ids)}]
+        dropped = 0
+        for e in entries:
+            ids = _ids_from_intervals(e.get("iv", []))
+            if ids.size and (ids[0] < 0
+                             or ids[-1] >= self.plan.total_tiles):
+                dropped += 1
+                continue
+            if int(e.get("crc", -1)) != self._crc_of_ids(ids):
+                dropped += 1  # corrupt region: recompute it, never trust it
+                continue
+            self._covered[ids] = True
+            self._entries.append(e)
+        k0, self._skip = self.plan.coverage_schedule(self._covered)
+        self._completed = k0 - 1
+        if dropped or state.get("version", 1) < 2:
+            # durably prune corrupt entries (and upgrade v1) so a crash
+            # right now never re-trusts a known-bad region
+            self._write_progress(self._completed)
+
+    # -- executor contract ---------------------------------------------------
+
     def resume_pass(self) -> int:
         return self._completed + 1
 
+    def skip_passes(self) -> set:
+        return set(self._skip)
+
+    def covered(self) -> np.ndarray:
+        return self._covered.copy()
+
+    def rebind(self, new_plan: ExecutionPlan) -> None:
+        """Adopt an elastically repartitioned plan mid-run.  Consumed-but-
+        uncommitted tiles are committed first (their bytes are in self.r;
+        the flush in _write_progress makes them durable before the sidecar
+        advances), then the sidecar is rewritten under the new spec — a
+        crash after the shrink resumes against the plan that will re-run.
+        """
+        self.plan = new_plan
+        self._commit_pending()
+        k0, self._skip = new_plan.coverage_schedule(self._covered)
+        self._completed = k0 - 1
+        if self._path is not None:
+            self._write_progress(self._completed)
+
+    def _commit_pending(self) -> None:
+        if not self._pending:
+            return
+        ids = np.unique(np.concatenate(self._pending))
+        self._pending = []
+        self._covered[ids] = True
+        if self._path is not None:
+            self._entries.append({"iv": _id_intervals(ids),
+                                  "crc": self._crc_of_ids(ids)})
+
     def pass_complete(self, k: int) -> None:
         self._completed = k
+        self._commit_pending()
         if self._path is not None:
             self._write_progress(k)
 
-    def consume(self, ids: np.ndarray, tiles: Array) -> None:
-        ys, xs = self.plan.workload.job_coord_batch(np.asarray(ids))
-        place_tiles_host(self.r, np.asarray(tiles), ys, xs, self.plan.t,
+    def _place(self, ids: np.ndarray, vals: np.ndarray) -> None:
+        if ids.size == 0:
+            return
+        ys, xs = self.plan.workload.job_coord_batch(ids)
+        place_tiles_host(self.r, vals, ys, xs, self.plan.t,
                          mirror=self.plan.workload.needs_symmetrize)
+
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        ids = np.asarray(ids, dtype=np.int64)
+        vals = np.asarray(tiles)
+        fault = faults.poll("sink_write")
+        if isinstance(fault, faults.PartialWriteFault):
+            # land a prefix of the batch, then fail — the pass never
+            # completes, so the partial region stays uncovered (recomputed)
+            self._place(ids[: int(len(ids) * fault.fraction)],
+                        vals[: int(len(ids) * fault.fraction)])
+            raise fault
+        if fault is not None:
+            raise fault
+        self._place(ids, vals)
+        self._pending.append(ids)
 
     def result(self) -> np.ndarray:
         r = self.r[: self.plan.n_rows, : self.plan.n_cols]
@@ -510,6 +722,16 @@ class ExceedanceSink(TileSink):
 
     def resume_pass(self) -> int:
         return getattr(self._inner, "resume_pass", lambda: 0)()
+
+    def skip_passes(self) -> set:
+        return getattr(self._inner, "skip_passes", set)()
+
+    def covered(self):
+        return getattr(self._inner, "covered", lambda: None)()
+
+    def rebind(self, new_plan: ExecutionPlan) -> None:
+        self.plan = new_plan
+        getattr(self._inner, "rebind", lambda _p: None)(new_plan)
 
     def pass_complete(self, k: int) -> None:
         getattr(self._inner, "pass_complete", lambda _k: None)(k)

@@ -77,6 +77,26 @@ def replan_pcc(total_tiles: int, new_p: int) -> Tuple[Tuple[int, int], ...]:
     return tuple(tiling.balanced_counts(total_tiles, new_p))
 
 
+def shrink_mesh(mesh: Mesh, n_failed: int = 1) -> Optional[Mesh]:
+    """Survivor mesh after losing `n_failed` devices of `mesh`: the
+    remaining devices flattened onto one 1-D axis (the all-pairs executor
+    flattens every mesh to a single logical rank axis anyway, so a shrink
+    never needs to preserve the original axis topology).  Returns None
+    when exactly one device survives — the executor then continues with
+    local (mesh-free) launches.  The drop-last policy matches build_mesh's
+    first-N survivor policy; a real deployment filters the actual failed
+    devices instead."""
+    devs = mesh.devices.reshape(-1)
+    alive = devs.size - int(n_failed)
+    if alive < 1:
+        raise RuntimeError(
+            f"cannot re-mesh: {n_failed} failures leave no survivors of "
+            f"the {devs.size}-device mesh")
+    if alive == 1:
+        return None
+    return Mesh(devs[:alive], ("rank",))
+
+
 def replan_execution(plan: ExecutionPlan, new_p: int) -> ExecutionPlan:
     """Re-slice a full ExecutionPlan for the surviving device count.
 
@@ -110,5 +130,5 @@ def elastic_pcc_plan(mesh: Mesh, n_failed: int, total_tiles: int,
         new_exec_plan=new_exec)
 
 
-__all__ = ["ElasticPlan", "shrink_data_axis", "build_mesh", "replan_pcc",
-           "replan_execution", "elastic_pcc_plan"]
+__all__ = ["ElasticPlan", "shrink_data_axis", "shrink_mesh", "build_mesh",
+           "replan_pcc", "replan_execution", "elastic_pcc_plan"]

@@ -1,0 +1,387 @@
+"""Deterministic fault injection + the failure taxonomy recovery acts on.
+
+The paper's 16-Phi runs assume a static, failure-free device pool: the
+tile-to-rank bijection is computed once and any lost accelerator kills the
+whole job.  CoMet's exascale runs of the same all-pairs shape
+(arXiv:1705.08213) treat device loss, OOM, and I/O errors as routine
+events — and so must we, because the ROADMAP's traffic level guarantees
+them.  The recovery machinery already exists in pieces (frozen
+``ExecutionPlan.repartition()``, per-pass ``HostSink`` checkpoints,
+``runtime/elastic.py`` replanning); this module supplies the two things
+that make it *drivable and testable*:
+
+1. A **deterministic fault-injection harness**.  A :class:`FaultPlan`
+   arms named failure points ("sites") threaded through the stack —
+
+     ``pass_launch``      kernel dispatch of one executor pass
+                          (core/allpairs.py, core/significance.py)
+     ``sink_write``       tile write into a sink's storage (core/sinks.py;
+                          supports *partial* writes — some tiles land,
+                          then the fault raises)
+     ``sink_flush``       durable flush of written tiles (memmap msync)
+     ``sink_commit``      checkpoint sidecar commit (the atomic rename) —
+                          a fault here is a crash *before* commit
+     ``server_dispatch``  one coalesced batch dispatch
+                          (serving/server.py)
+
+   — each raising a typed :class:`InjectedFault` at exact per-site
+   *arrival counts*, so tests replay precise sequences ("the second pass
+   launch raises a transient error, the third loses a device") and a
+   seeded :meth:`FaultPlan.scenario` draws reproducible random chaos.
+
+2. The **failure taxonomy** (:func:`classify_failure`) and the
+   :class:`RetryPolicy` that the recovering executor
+   (core/allpairs.execute_plan(recovery=...)) and the degrading
+   CorrServer act on:
+
+     transient    retry in place with exponential backoff
+     oom          shrink the per-device pass (halve max_tiles_per_pass)
+                  and retry — less live output memory per launch
+     device_loss  shrink-and-continue: re-mesh onto the survivors
+                  (runtime/elastic.py), ``plan.repartition(p_new)``, and
+                  resume from the work already consumed/checkpointed
+     crash        a simulated process death (CrashFault) — never handled
+                  in-process; recovery is restart + ``resume_from=``
+     fatal        everything else — real bugs propagate
+
+Injected faults are *control-flow only*: they never corrupt state
+themselves, they make the instrumented site fail exactly as its real
+counterpart would (the classifier maps real XLA runtime errors onto the
+same taxonomy).  Arming is process-global (``with plan.armed(): ...``) so
+worker threads — the CorrServer dispatcher — see the same plan; counters
+are lock-protected.  With no plan armed every site check is a single
+None test.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+SITES = ("pass_launch", "sink_write", "sink_flush", "sink_commit",
+         "server_dispatch")
+
+
+# ---------------------------------------------------------------------------
+# Typed faults
+# ---------------------------------------------------------------------------
+
+
+class InjectedFault(Exception):
+    """Base of every injected failure.  Carries where and when it fired:
+    ``site`` and the 1-based ``arrival`` count at that site."""
+
+    kind = "fatal"
+
+    def __init__(self, site: str, arrival: int, detail: str = ""):
+        self.site = site
+        self.arrival = arrival
+        super().__init__(
+            f"injected {self.kind} fault at {site!r} (arrival {arrival})"
+            + (f": {detail}" if detail else ""))
+
+
+class TransientFault(InjectedFault):
+    """A transient runtime error (the XLA UNAVAILABLE/ABORTED family):
+    the operation succeeds if simply retried."""
+
+    kind = "transient"
+
+
+class DeviceLostFault(InjectedFault):
+    """Simulated accelerator loss: the device never comes back; recovery
+    is re-meshing onto the survivors."""
+
+    kind = "device_loss"
+
+
+class OomFault(InjectedFault):
+    """Simulated device OOM at launch (RESOURCE_EXHAUSTED): the same
+    launch at a smaller per-pass footprint can succeed."""
+
+    kind = "oom"
+
+
+class SinkIOFault(InjectedFault, OSError):
+    """Simulated I/O error in a sink's write/flush path (disk full,
+    stale NFS handle).  Transient from the executor's point of view."""
+
+    kind = "transient"
+
+
+class PartialWriteFault(SinkIOFault):
+    """An I/O error midway through a tile batch: the instrumented sink
+    writes ``fraction`` of the batch, then raises this.  Exercises the
+    flush-before-commit invariant — partially written passes must never
+    be marked complete."""
+
+    def __init__(self, site: str, arrival: int, fraction: float = 0.5):
+        self.fraction = float(fraction)
+        super().__init__(site, arrival, f"partial write ({fraction:.0%})")
+
+
+class CrashFault(InjectedFault):
+    """Simulated process death (SIGKILL mid-operation).  Deliberately
+    classified fatal: in-process recovery must NOT handle it — the test
+    harness catches it at the top, then exercises restart + resume."""
+
+    kind = "crash"
+
+
+FAULT_KINDS = {
+    "transient": TransientFault,
+    "device_loss": DeviceLostFault,
+    "oom": OomFault,
+    "io": SinkIOFault,
+    "partial_write": PartialWriteFault,
+    "crash": CrashFault,
+}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: armed sites, exact arrival triggers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Fire one fault kind at exact arrival counts of one site.
+
+    at: 1-based arrival numbers that raise (e.g. ``(2, 3)`` — the second
+        and third time execution reaches the site).  An armed site counts
+        *every* arrival, so a retried operation advances the count and a
+        spec like ``(1, 2)`` means "fail twice, then succeed".
+    fraction: for ``partial_write`` — the fraction of the batch written
+        before the fault raises.
+    """
+
+    site: str
+    kind: str
+    at: Tuple[int, ...]
+    fraction: float = 0.5
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"sites: {SITES}")
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"kinds: {tuple(FAULT_KINDS)}")
+        object.__setattr__(self, "at", tuple(int(a) for a in self.at))
+        if any(a <= 0 for a in self.at):
+            raise ValueError(f"arrival numbers are 1-based, got {self.at}")
+
+
+class FaultPlan:
+    """A deterministic schedule of injected faults over named sites.
+
+    Build explicitly from :class:`FaultSpec`s for exact replay, or via
+    :meth:`scenario` for seeded random chaos.  Thread-safe: arrival
+    counters and the fired log are lock-protected (the CorrServer
+    dispatcher polls sites from its own thread).
+
+    ``fired`` records every fault actually raised as
+    ``(site, arrival, kind)`` — chaos tests assert the schedule executed.
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec] = ()):
+        self.specs = tuple(specs)
+        self._lock = threading.Lock()
+        self._arrivals = {s: 0 for s in SITES}
+        self.fired: List[Tuple[str, int, str]] = []
+
+    @classmethod
+    def single(cls, site: str, kind: str, at: int = 1,
+               times: int = 1, fraction: float = 0.5) -> "FaultPlan":
+        """One fault kind at one site, firing `times` consecutive
+        arrivals starting at the `at`-th."""
+        return cls([FaultSpec(site, kind, tuple(range(at, at + times)),
+                              fraction=fraction)])
+
+    @classmethod
+    def scenario(cls, seed: int, *, sites: Sequence[str] = SITES,
+                 kinds: Sequence[str] = ("transient", "io"),
+                 rate: float = 0.15, horizon: int = 40) -> "FaultPlan":
+        """Seeded random chaos: each of the first `horizon` arrivals at
+        each site independently fires (probability `rate`) a kind drawn
+        from `kinds`.  Same seed, same schedule — scenarios replay
+        exactly.  Default kinds are the retry-in-place family so a
+        scenario composes with any workload; add "device_loss"/"crash"
+        deliberately where the test drives the matching recovery."""
+        rng = np.random.default_rng(seed)
+        specs = []
+        for site in sites:
+            hits = rng.random(horizon) < rate
+            draws = rng.integers(0, len(kinds), horizon)
+            for i in np.nonzero(hits)[0]:
+                specs.append(FaultSpec(site, kinds[int(draws[i])],
+                                       (int(i) + 1,)))
+        return cls(specs)
+
+    def arrivals(self, site: str) -> int:
+        with self._lock:
+            return self._arrivals[site]
+
+    def poll(self, site: str) -> Optional[InjectedFault]:
+        """Count one arrival at `site`; return the armed fault instance
+        for this arrival (logged), or None.  Sites that cannot honour a
+        partial write just raise whatever they are handed (check())."""
+        with self._lock:
+            self._arrivals[site] += 1
+            n = self._arrivals[site]
+            for spec in self.specs:
+                if spec.site == site and n in spec.at:
+                    self.fired.append((site, n, spec.kind))
+                    klass = FAULT_KINDS[spec.kind]
+                    if klass is PartialWriteFault:
+                        return klass(site, n, spec.fraction)
+                    return klass(site, n)
+        return None
+
+    @contextlib.contextmanager
+    def armed(self):
+        """Install this plan as the process-wide active plan."""
+        global _ACTIVE
+        prev = _ACTIVE
+        _ACTIVE = self
+        try:
+            yield self
+        finally:
+            _ACTIVE = prev
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+def poll(site: str) -> Optional[InjectedFault]:
+    """The instrumented-site entry point for sites that can act on the
+    fault before raising (partial writes).  No plan armed -> None."""
+    plan = _ACTIVE
+    return None if plan is None else plan.poll(site)
+
+
+def check(site: str) -> None:
+    """The instrumented-site entry point: raise the armed fault for this
+    arrival, if any.  One None test when nothing is armed."""
+    fault = poll(site)
+    if fault is not None:
+        raise fault
+
+
+# ---------------------------------------------------------------------------
+# Failure taxonomy
+# ---------------------------------------------------------------------------
+
+# Real-runtime message fragments mapped onto the taxonomy.  XLA surfaces
+# failures as XlaRuntimeError with a status-code prefix; jax device loss
+# on TPU typically reads "device ... (was) removed/lost".
+_OOM_TOKENS = ("RESOURCE_EXHAUSTED", "Out of memory", "out of memory",
+               "OOM", "Resource exhausted")
+_DEVICE_LOSS_TOKENS = ("DATA_LOSS", "device lost", "Device lost",
+                       "device removed", "device failure",
+                       "device is in an invalid state")
+_TRANSIENT_TOKENS = ("UNAVAILABLE", "DEADLINE_EXCEEDED", "ABORTED",
+                     "INTERNAL", "Socket closed", "Connection reset")
+
+
+def classify_failure(exc: BaseException) -> str:
+    """Map a failure onto the recovery taxonomy:
+    "transient" | "oom" | "device_loss" | "crash" | "fatal".
+
+    Injected faults classify by type; real runtime errors by message
+    heuristics over the XLA status families.  Anything unrecognised is
+    fatal — recovery must never paper over an actual bug.
+    """
+    if isinstance(exc, CrashFault):
+        return "crash"
+    if isinstance(exc, DeviceLostFault):
+        return "device_loss"
+    if isinstance(exc, OomFault):
+        return "oom"
+    if isinstance(exc, (TransientFault, SinkIOFault)):
+        return "transient"
+    if type(exc).__name__ in ("XlaRuntimeError", "JaxRuntimeError"):
+        msg = str(exc)
+        if any(tok in msg for tok in _OOM_TOKENS):
+            return "oom"
+        if any(tok in msg for tok in _DEVICE_LOSS_TOKENS):
+            return "device_loss"
+        if any(tok in msg for tok in _TRANSIENT_TOKENS):
+            return "transient"
+    return "fatal"
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy: what the recovering executor does per taxonomy class
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Recovery behaviour of ``execute_plan(recovery=...)``.
+
+    max_retries:     transient failures tolerated without forward
+                     progress before giving up (the budget refills every
+                     time a pass lands — a long run survives many spread
+                     out transients, a hard-failing pass does not loop
+                     forever).
+    backoff_s / backoff_factor / max_backoff_s: exponential backoff
+                     between transient retries; `sleep` is injectable so
+                     chaos tests run at full speed.
+    shrink_on_device_loss: re-mesh onto the survivors and continue
+                     (False: device loss is fatal).
+    shrink_pass_on_oom: halve max_tiles_per_pass and retry (False: OOM
+                     is fatal).  Never shrinks below 1 tile per pass.
+    on_device_loss:  override for the survivor-mesh resolution — called
+                     as ``(mesh, plan, exc) -> (new_mesh, new_plan)``;
+                     default drops one device via runtime/elastic.
+                     (Also the test seam: a 1-device mesh can "lose" its
+                     device to a mesh=None local continuation.)
+    log:             recovery events appended as dicts
+                     ({"kind", "action", "pass"...}) — observability for
+                     tests and benchmarks.
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 0.02
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 1.0
+    shrink_on_device_loss: bool = True
+    shrink_pass_on_oom: bool = True
+    sleep: Callable[[float], None] = time.sleep
+    on_device_loss: Optional[Callable] = None
+    log: List[dict] = dataclasses.field(default_factory=list)
+
+    def backoff(self, attempt: int) -> float:
+        """Backoff before the `attempt`-th consecutive retry (0-based)."""
+        return min(self.backoff_s * self.backoff_factor ** attempt,
+                   self.max_backoff_s)
+
+
+__all__ = [
+    "SITES",
+    "FAULT_KINDS",
+    "InjectedFault",
+    "TransientFault",
+    "DeviceLostFault",
+    "OomFault",
+    "SinkIOFault",
+    "PartialWriteFault",
+    "CrashFault",
+    "FaultSpec",
+    "FaultPlan",
+    "active_plan",
+    "poll",
+    "check",
+    "classify_failure",
+    "RetryPolicy",
+]

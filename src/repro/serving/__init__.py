@@ -28,17 +28,20 @@ from repro.serving.batcher import BatchInfo, Query, QueryBatcher
 from repro.serving.corpus import CorpusHandle, as_corpus
 from repro.serving.plan_cache import (PlanCache, ProblemSpec, bucket_rows,
                                       mesh_key)
-from repro.serving.server import CorrServer, ServedResult
+from repro.serving.server import (CorrServer, DeadlineExceeded, ServedResult,
+                                  ServerOverloaded)
 
 __all__ = [
     "BatchInfo",
     "CorpusHandle",
     "CorrServer",
+    "DeadlineExceeded",
     "PlanCache",
     "ProblemSpec",
     "Query",
     "QueryBatcher",
     "ServedResult",
+    "ServerOverloaded",
     "as_corpus",
     "bucket_rows",
     "mesh_key",

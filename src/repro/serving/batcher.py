@@ -65,10 +65,26 @@ class Query:
     measure: Optional[measures.MeasureLike] = None
 
     def __post_init__(self):
+        # Validation is deliberately eager and complete: a Query is usually
+        # constructed inside CorrServer.submit(), and anything malformed
+        # must be rejected AT THE DOOR with ValueError — once a request is
+        # co-batched, its rows are stacked into one coalesced launch, and a
+        # poisoned probe (NaN/Inf, object dtype) would otherwise fail or
+        # corrupt every batch-mate's result.
         self.probes = jnp.asarray(self.probes)
         if self.probes.ndim != 2 or self.probes.shape[0] < 1:
             raise ValueError(
                 f"probes must be (m >= 1, l), got shape {self.probes.shape}")
+        if not (jnp.issubdtype(self.probes.dtype, jnp.floating)
+                or jnp.issubdtype(self.probes.dtype, jnp.integer)):
+            raise ValueError(
+                f"probes must be real-valued (floating or integer), got "
+                f"dtype {self.probes.dtype}")
+        if not bool(jnp.all(jnp.isfinite(self.probes))):
+            raise ValueError(
+                "probes contain non-finite values (NaN/Inf); masked "
+                "missing-data queries are not served through the batcher — "
+                "use corr(probes, corpus, where='nan') directly")
         if self.k is not None and self.k <= 0:
             raise ValueError(f"k must be positive, got {self.k}")
 

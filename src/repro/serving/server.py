@@ -28,6 +28,20 @@ dispatch, and the enqueue itself is lock-protected.
 Every result carries per-request stats: queue wait, service time, batch
 occupancy, and whether the launch hit the plan cache — the observability
 the serving benchmark (benchmarks/serving.py) and capacity planning need.
+
+Degradation (docs/robustness.md): the server degrades instead of dying.
+Malformed probes are rejected at submit() (Query validates shape, dtype,
+and finiteness eagerly — a poisoned probe can never ride a coalesced
+batch).  A failed batch dispatch is retried once when the failure is
+transient (runtime/faults.classify_failure), then *split*: each request
+re-runs in its own launch, so only the request that actually fails
+resolves to its error and every batch-mate still gets its answer.
+Per-request deadlines (``submit(deadline_s=...)`` or the server default)
+fail expired requests with :class:`DeadlineExceeded` before wasting a
+launch on them.  A circuit breaker counts consecutive dispatch failures;
+past ``breaker_threshold`` it opens for ``breaker_cooldown_s`` and
+submit() sheds load fast with :class:`ServerOverloaded` instead of
+queueing onto a sick backend.  All of it is visible in ``stats()["faults"]``.
 """
 
 from __future__ import annotations
@@ -44,9 +58,25 @@ import numpy as np
 from repro.core import measures
 from repro.core.plan import ExecutionPlan
 from repro.core.significance import PermutationSpec, run_significance
+from repro.runtime import faults
 from repro.serving.batcher import Query, QueryBatcher
 from repro.serving.plan_cache import PlanCache
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's deadline passed before (or while) it was served.
+
+    Raised *through the Future*: an expired request is shed at dispatch —
+    its launch is never run — so a backlog drains at queue speed instead
+    of compute speed once deadlines start lapsing."""
+
+
+class ServerOverloaded(RuntimeError):
+    """Fast-fail shed: the circuit breaker is open after consecutive
+    dispatch failures.  Raised synchronously by ``submit()`` so callers
+    can back off without queueing onto a backend that is currently
+    failing every launch."""
 
 
 @dataclasses.dataclass
@@ -69,6 +99,7 @@ class _Pending:
     query: Query
     future: Future
     t_enqueue: float
+    deadline: Optional[float] = None    # absolute time.monotonic() cutoff
 
 
 class CorrServer:
@@ -80,6 +111,14 @@ class CorrServer:
     max_batch_rows: flush as soon as this many probe rows are queued — a
                     batch never exceeds it unless a single request does
                     (single requests are never split).
+    deadline_s:     default per-request deadline (None = no deadline);
+                    expired requests fail with DeadlineExceeded instead
+                    of occupying a launch.  submit(deadline_s=) overrides
+                    per request.
+    breaker_threshold / breaker_cooldown_s: after `threshold` consecutive
+                    failed dispatches the breaker opens and submit() sheds
+                    load with ServerOverloaded for `cooldown` seconds; one
+                    successful dispatch closes it again.
     Remaining kwargs keep their ``corr()`` semantics and fix the serving
     configuration (tile geometry, default measure, precision, mesh).
     """
@@ -88,6 +127,9 @@ class CorrServer:
                  measure: measures.MeasureLike = "pearson",
                  t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
                  max_wait_s: float = 0.002, max_batch_rows: int = 4096,
+                 deadline_s: Optional[float] = None,
+                 breaker_threshold: int = 5,
+                 breaker_cooldown_s: float = 1.0,
                  plan_cache: Optional[PlanCache] = None,
                  compute_dtype=None, clip: bool = True,
                  fuse_epilogue: bool = True,
@@ -98,6 +140,11 @@ class CorrServer:
         if max_batch_rows <= 0:
             raise ValueError(
                 f"max_batch_rows must be positive, got {max_batch_rows}")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
+        if breaker_threshold <= 0:
+            raise ValueError(
+                f"breaker_threshold must be positive, got {breaker_threshold}")
         self.batcher = QueryBatcher(
             corpus, measure=measure, plan_cache=plan_cache, t=t, l_blk=l_blk,
             compute_dtype=compute_dtype, clip=clip,
@@ -106,6 +153,9 @@ class CorrServer:
             mesh=mesh)
         self.max_wait_s = float(max_wait_s)
         self.max_batch_rows = int(max_batch_rows)
+        self.deadline_s = None if deadline_s is None else float(deadline_s)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
         self._cv = threading.Condition()
         self._queue: List[_Pending] = []
         self._closed = False
@@ -113,6 +163,19 @@ class CorrServer:
         self._requests = 0
         self._rows = 0
         self._occupancy_sum = 0.0
+        # degradation state (all under _cv): consecutive failed dispatches
+        # drive the breaker; the counters feed stats()["faults"].
+        self._consecutive_failures = 0
+        self._breaker_open_until = 0.0
+        self._fault_counts = {
+            "batch_failures": 0,    # dispatches whose first attempt failed
+            "retries": 0,           # transient-classified in-place retries
+            "splits": 0,            # batches re-run request-by-request
+            "failed_requests": 0,   # futures resolved with an error
+            "deadline_exceeded": 0,  # requests shed past their deadline
+            "shed": 0,              # submits refused while breaker open
+            "breaker_trips": 0,     # closed -> open transitions
+        }
         self._thread = threading.Thread(target=self._dispatch_loop,
                                         name="corr-server-dispatch",
                                         daemon=True)
@@ -129,26 +192,48 @@ class CorrServer:
         return self.batcher.plan_cache
 
     def submit(self, probes, *, k: Optional[int] = None,
-               measure: Optional[measures.MeasureLike] = None
+               measure: Optional[measures.MeasureLike] = None,
+               deadline_s: Optional[float] = None
                ) -> "Future[ServedResult]":
         """Enqueue one query; returns immediately with a Future that
-        resolves to a :class:`ServedResult` once a batch serves it."""
-        q = Query(probes, k=k, measure=measure)  # validates shapes eagerly
+        resolves to a :class:`ServedResult` once a batch serves it.
+
+        Raises ValueError synchronously for malformed probes (wrong rank,
+        non-real dtype, NaN/Inf) and :class:`ServerOverloaded` while the
+        circuit breaker is open.  ``deadline_s`` (default: the server's
+        ``deadline_s``) bounds how stale the request may get: past it, the
+        Future fails with :class:`DeadlineExceeded` instead of running."""
+        q = Query(probes, k=k, measure=measure)  # validates probes eagerly
+        if deadline_s is None:
+            deadline_s = self.deadline_s
+        elif deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
         fut: Future = Future()
+        now = time.monotonic()
         with self._cv:
             if self._closed:
                 raise RuntimeError("CorrServer is closed")
-            self._queue.append(_Pending(q, fut, time.monotonic()))
+            if now < self._breaker_open_until:
+                self._fault_counts["shed"] += 1
+                raise ServerOverloaded(
+                    f"circuit breaker open after "
+                    f"{self._consecutive_failures} consecutive dispatch "
+                    f"failures; retry after "
+                    f"{self._breaker_open_until - now:.3f}s")
+            deadline = None if deadline_s is None else now + deadline_s
+            self._queue.append(_Pending(q, fut, now, deadline))
             self._cv.notify_all()
         return fut
 
     def query(self, probes, *, k: Optional[int] = None,
-              measure: Optional[measures.MeasureLike] = None
+              measure: Optional[measures.MeasureLike] = None,
+              deadline_s: Optional[float] = None
               ) -> ServedResult:
         """Synchronous spelling of submit(): blocks for the result (the
         request still rides whatever batch the dispatcher forms, so a sync
         caller pays at most max_wait_s of coalescing latency)."""
-        return self.submit(probes, k=k, measure=measure).result()
+        return self.submit(probes, k=k, measure=measure,
+                           deadline_s=deadline_s).result()
 
     def significance(self, probes, *, pvalues: PermutationSpec,
                      measure: Optional[measures.MeasureLike] = None
@@ -234,6 +319,35 @@ class CorrServer:
             if batch:
                 self._serve(batch)
 
+    def _execute_batch(self, queries: List[Query]):
+        """One dispatch attempt, retried in place exactly once when the
+        failure is transient-classified (runtime/faults taxonomy) — a
+        blip should not cost a whole split."""
+        try:
+            faults.check("server_dispatch")
+            return self.batcher.execute(queries)
+        except BaseException as e:  # noqa: BLE001 — classified below
+            if faults.classify_failure(e) != "transient":
+                raise
+            with self._cv:
+                self._fault_counts["retries"] += 1
+        faults.check("server_dispatch")
+        return self.batcher.execute(queries)
+
+    def _record_dispatch(self, ok: bool) -> None:
+        """Breaker bookkeeping: success closes, `breaker_threshold`
+        consecutive failures open it for `breaker_cooldown_s`."""
+        with self._cv:
+            if ok:
+                self._consecutive_failures = 0
+                return
+            self._fault_counts["batch_failures"] += 1
+            self._consecutive_failures += 1
+            if self._consecutive_failures >= self.breaker_threshold:
+                self._fault_counts["breaker_trips"] += 1
+                self._breaker_open_until = (time.monotonic()
+                                            + self.breaker_cooldown_s)
+
     def _serve(self, batch: List[_Pending]) -> None:
         # Transition every future to RUNNING first: from here on a client
         # cancel() returns False instead of racing our set_result (a cancel
@@ -241,15 +355,44 @@ class CorrServer:
         # InvalidStateError and kill the dispatcher thread).  Requests
         # cancelled before dispatch drop out of the batch uncomputed.
         batch = [p for p in batch if p.future.set_running_or_notify_cancel()]
+        t_start = time.monotonic()
+        # Deadline shed BEFORE the launch: an expired request must not
+        # occupy batch rows — failing it here lets a backlog drain at
+        # queue speed once deadlines lapse.
+        live = []
+        for p in batch:
+            if p.deadline is not None and t_start > p.deadline:
+                with self._cv:
+                    self._fault_counts["deadline_exceeded"] += 1
+                    self._fault_counts["failed_requests"] += 1
+                p.future.set_exception(DeadlineExceeded(
+                    f"request waited {t_start - p.t_enqueue:.3f}s, past its "
+                    f"{p.deadline - p.t_enqueue:.3f}s deadline"))
+            else:
+                live.append(p)
+        batch = live
         if not batch:
             return
-        t_start = time.monotonic()
         try:
-            results, infos = self.batcher.execute([p.query for p in batch])
-        except BaseException as e:  # noqa: BLE001 — fail the whole batch
+            results, infos = self._execute_batch([p.query for p in batch])
+        except BaseException as e:  # noqa: BLE001 — degrade, don't die
+            self._record_dispatch(ok=False)
+            if len(batch) == 1:
+                # nothing left to isolate — the transient retry already
+                # happened inside _execute_batch; the request is at fault
+                with self._cv:
+                    self._fault_counts["failed_requests"] += 1
+                batch[0].future.set_exception(e)
+                return
+            # SPLIT: re-run each request in its own launch so only the
+            # requests that actually fail resolve to their error — one
+            # poisoned probe must not take down its batch-mates.
+            with self._cv:
+                self._fault_counts["splits"] += 1
             for p in batch:
-                p.future.set_exception(e)
+                self._serve_one(p, t_start)
             return
+        self._record_dispatch(ok=True)
         t_done = time.monotonic()
         with self._cv:
             self._batches += 1
@@ -269,6 +412,34 @@ class CorrServer:
             }
             p.future.set_result(ServedResult(value=value, stats=stats))
 
+    def _serve_one(self, p: _Pending, t_start: float) -> None:
+        """Serve one request of a split batch in its own launch."""
+        try:
+            results, infos = self._execute_batch([p.query])
+        except BaseException as e:  # noqa: BLE001 — this request's error
+            self._record_dispatch(ok=False)
+            with self._cv:
+                self._fault_counts["failed_requests"] += 1
+            p.future.set_exception(e)
+            return
+        self._record_dispatch(ok=True)
+        t_done = time.monotonic()
+        info = infos[0]
+        with self._cv:
+            self._batches += 1
+            self._requests += 1
+            self._rows += p.query.m
+            self._occupancy_sum += info.occupancy
+        p.future.set_result(ServedResult(value=results[0], stats={
+            "queue_s": t_start - p.t_enqueue,
+            "service_s": t_done - t_start,
+            "batch_requests": info.requests,
+            "batch_rows": info.rows,
+            "batch_occupancy": info.occupancy,
+            "plan_cache_hit": info.plan_cache_hit,
+            "passes": info.passes,
+        }))
+
     # -- lifecycle / observability ------------------------------------------
 
     def stats(self) -> dict:
@@ -283,6 +454,12 @@ class CorrServer:
                 "mean_batch_occupancy": (self._occupancy_sum / batches
                                          if batches else 0.0),
                 "queued": len(self._queue),
+                "faults": {
+                    **self._fault_counts,
+                    "consecutive_failures": self._consecutive_failures,
+                    "breaker_open": (time.monotonic()
+                                     < self._breaker_open_until),
+                },
             }
         served["plan_cache"] = self.plan_cache.stats()
         served["corpus"] = self.corpus.stats()
@@ -303,4 +480,5 @@ class CorrServer:
         self.close()
 
 
-__all__ = ["CorrServer", "ServedResult"]
+__all__ = ["CorrServer", "DeadlineExceeded", "ServedResult",
+           "ServerOverloaded"]

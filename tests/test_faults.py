@@ -1,0 +1,453 @@
+"""Fault injection and self-healing execution (ISSUE 7).
+
+Covers the deterministic harness (runtime/faults.py: exact arrival
+triggers, seeded scenarios, the failure taxonomy), the recovering
+executor (corr(recovery=RetryPolicy()): transient retry with backoff,
+OOM pass-shrink, device-loss shrink-and-continue), the crash-atomic
+self-verifying HostSink checkpoints (partial writes never committed,
+CRC-corrupt regions recomputed, garbled sidecars refused), and the
+acceptance scenario: a run that loses a device mid-flight AND crashes
+mid-checkpoint still completes bit-identically via shrink-and-continue
+plus restart-and-resume.
+
+Everything here is deterministic — same FaultPlan, same failure
+sequence — and runs at full speed (RetryPolicy(sleep=no-op)).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import corr
+from repro.core.sinks import HostSink
+from repro.runtime import faults
+from repro.runtime.faults import (CrashFault, DeviceLostFault, FaultPlan,
+                                  FaultSpec, OomFault, PartialWriteFault,
+                                  RetryPolicy, SinkIOFault, TransientFault,
+                                  classify_failure)
+
+pytestmark = pytest.mark.chaos
+
+
+def _x(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+def _policy(**kw):
+    kw.setdefault("sleep", lambda _s: None)  # full-speed chaos
+    return RetryPolicy(**kw)
+
+
+KW = dict(t=8, l_blk=8, max_tiles_per_pass=4)  # 40x16 -> 15 tiles, 4 passes
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec("warp_core", "transient", (1,))
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("pass_launch", "gremlins", (1,))
+    with pytest.raises(ValueError, match="1-based"):
+        FaultSpec("pass_launch", "transient", (0,))
+
+
+def test_check_fires_at_exact_arrivals():
+    plan = FaultPlan([FaultSpec("pass_launch", "transient", (2, 3))])
+    with plan.armed():
+        faults.check("pass_launch")                      # arrival 1: clean
+        with pytest.raises(TransientFault) as e2:
+            faults.check("pass_launch")                  # arrival 2: fires
+        with pytest.raises(TransientFault):
+            faults.check("pass_launch")                  # arrival 3: fires
+        faults.check("pass_launch")                      # arrival 4: clean
+        faults.check("sink_write")                       # other site: clean
+    assert e2.value.site == "pass_launch" and e2.value.arrival == 2
+    assert plan.fired == [("pass_launch", 2, "transient"),
+                          ("pass_launch", 3, "transient")]
+    assert plan.arrivals("pass_launch") == 4
+    # disarmed again: the site is a no-op
+    faults.check("pass_launch")
+    assert plan.arrivals("pass_launch") == 4
+
+
+def test_armed_restores_previous_plan():
+    outer, inner = FaultPlan(), FaultPlan()
+    assert faults.active_plan() is None
+    with outer.armed():
+        with inner.armed():
+            assert faults.active_plan() is inner
+        assert faults.active_plan() is outer
+    assert faults.active_plan() is None
+
+
+def test_partial_write_poll_carries_fraction():
+    plan = FaultPlan.single("sink_write", "partial_write", fraction=0.25)
+    with plan.armed():
+        fault = faults.poll("sink_write")
+    assert isinstance(fault, PartialWriteFault)
+    assert fault.fraction == 0.25
+    assert isinstance(fault, OSError)  # sinks may catch it as real I/O
+
+
+def test_scenario_is_seed_deterministic():
+    a = FaultPlan.scenario(7, rate=0.4, horizon=25)
+    b = FaultPlan.scenario(7, rate=0.4, horizon=25)
+    assert a.specs == b.specs and len(a.specs) > 0
+    assert FaultPlan.scenario(8, rate=0.4, horizon=25).specs != a.specs
+
+
+def test_classify_failure_taxonomy():
+    assert classify_failure(TransientFault("pass_launch", 1)) == "transient"
+    assert classify_failure(SinkIOFault("sink_write", 1)) == "transient"
+    assert classify_failure(OomFault("pass_launch", 1)) == "oom"
+    assert classify_failure(DeviceLostFault("pass_launch", 1)) == "device_loss"
+    assert classify_failure(CrashFault("sink_commit", 1)) == "crash"
+    assert classify_failure(ValueError("boom")) == "fatal"
+
+    class XlaRuntimeError(RuntimeError):  # mimic jaxlib's by name
+        pass
+
+    assert classify_failure(
+        XlaRuntimeError("RESOURCE_EXHAUSTED: Out of memory")) == "oom"
+    assert classify_failure(
+        XlaRuntimeError("DATA_LOSS: device lost")) == "device_loss"
+    assert classify_failure(
+        XlaRuntimeError("UNAVAILABLE: Socket closed")) == "transient"
+    assert classify_failure(XlaRuntimeError("INVALID_ARGUMENT")) == "fatal"
+
+
+def test_retry_policy_backoff_is_exponential_and_capped():
+    p = RetryPolicy(backoff_s=0.1, backoff_factor=2.0, max_backoff_s=0.5)
+    assert [p.backoff(i) for i in range(4)] == [0.1, 0.2, 0.4, 0.5]
+
+
+# ---------------------------------------------------------------------------
+# Recovering executor: retry / shrink-pass / shrink-mesh
+# ---------------------------------------------------------------------------
+
+
+def test_transient_pass_launch_retried_bit_identical():
+    x = _x(40, 16, seed=1)
+    baseline = np.asarray(corr(x, **KW))
+    plan = FaultPlan.single("pass_launch", "transient", at=2, times=2)
+    pol = _policy()
+    with plan.armed():
+        r = np.asarray(corr(x, recovery=pol, **KW))
+    np.testing.assert_array_equal(r, baseline)
+    assert len(plan.fired) == 2
+    assert [e["action"] for e in pol.log] == ["retry", "retry"]
+
+
+def test_transient_budget_exhausted_raises():
+    x = _x(40, 16, seed=2)
+    pol = _policy(max_retries=3)
+    plan = FaultPlan.single("pass_launch", "transient", at=1, times=10)
+    with plan.armed(), pytest.raises(TransientFault):
+        corr(x, recovery=pol, **KW)
+    assert pol.log[-1]["action"] == "give_up"
+    assert sum(e["action"] == "retry" for e in pol.log) == 3
+
+
+def test_transient_budget_refills_on_forward_progress():
+    """2 faults spread far enough apart that passes land in between stay
+    within a budget of 1, because every landed pass resets the
+    consecutive-failure count — more total faults than max_retries."""
+    x = _x(40, 16, seed=3)
+    baseline = np.asarray(corr(x, **KW))
+    plan = FaultPlan([FaultSpec("pass_launch", "transient", (1, 5))])
+    pol = _policy(max_retries=1)
+    with plan.armed():
+        r = np.asarray(corr(x, recovery=pol, **KW))
+    np.testing.assert_array_equal(r, baseline)
+    assert sum(e["action"] == "retry" for e in pol.log) == 2
+    assert not any(e["action"] == "give_up" for e in pol.log)
+
+
+def test_oom_halves_pass_and_completes():
+    x = _x(40, 16, seed=4)
+    baseline = np.asarray(corr(x, **KW))
+    plan = FaultPlan.single("pass_launch", "oom", at=2)
+    pol = _policy()
+    with plan.armed():
+        r = np.asarray(corr(x, recovery=pol, **KW))
+    np.testing.assert_array_equal(r, baseline)
+    shrink = [e for e in pol.log if e["action"] == "shrink_pass"]
+    assert shrink == [{"kind": "oom", "action": "shrink_pass",
+                       "max_tiles_per_pass": 2}]
+
+
+def test_oom_at_floor_raises():
+    x = _x(16, 8, seed=5)
+    pol = _policy()
+    plan = FaultPlan.single("pass_launch", "oom", at=1, times=20)
+    with plan.armed(), pytest.raises(OomFault):
+        corr(x, t=8, l_blk=8, max_tiles_per_pass=2, recovery=pol, **{})
+    assert pol.log[-1] == {"kind": "oom", "action": "give_up",
+                           "max_tiles_per_pass": 1}
+
+
+def test_device_loss_shrinks_and_continues():
+    """Local (mesh-free) stand-in for the 8-device test below: the
+    on_device_loss seam hands back the same-p plan, and the executor
+    resumes from coverage without recomputing landed passes."""
+    x = _x(40, 16, seed=6)
+    baseline = np.asarray(corr(x, **KW))
+    plan = FaultPlan.single("pass_launch", "device_loss", at=3)
+    pol = _policy(
+        on_device_loss=lambda mesh, pl, exc: (mesh, pl.repartition(1)))
+    with plan.armed():
+        r = np.asarray(corr(x, recovery=pol, **KW))
+    np.testing.assert_array_equal(r, baseline)
+    assert [e["action"] for e in pol.log] == ["shrink_mesh"]
+
+
+def test_device_loss_without_mesh_is_fatal_by_default():
+    x = _x(40, 16, seed=7)
+    plan = FaultPlan.single("pass_launch", "device_loss", at=1)
+    with plan.armed(), pytest.raises(DeviceLostFault):
+        corr(x, recovery=_policy(), **KW)
+
+
+def test_recovery_rejects_masked_and_pvalue_runs():
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((12, 10)).astype(np.float32)
+    x[0, 0] = np.nan
+    with pytest.raises(ValueError, match="recovery="):
+        corr(jnp.asarray(x), where="nan", recovery=_policy(), t=8, l_blk=8)
+
+
+# ---------------------------------------------------------------------------
+# Crash-atomic, self-verifying checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_partial_write_never_committed_and_result_exact(tmp_path):
+    """An I/O fault midway through a tile batch leaves the pass
+    uncommitted; the in-place retry rewrites the full batch and the final
+    matrix is bit-identical."""
+    x = _x(40, 16, seed=9)
+    baseline = np.asarray(corr(x, **KW))
+    path = str(tmp_path / "r.mm")
+    plan = FaultPlan.single("sink_write", "partial_write", at=2, fraction=0.5)
+    pol = _policy()
+    with plan.armed():
+        r = np.asarray(corr(x, sink=HostSink(path=path),
+                            recovery=pol, **KW))
+    np.testing.assert_array_equal(r, baseline)
+    assert plan.fired == [("sink_write", 2, "partial_write")]
+    assert [e["action"] for e in pol.log] == ["retry"]
+    prog = json.loads((tmp_path / "r.mm.progress.json").read_text())
+    assert prog["completed"] == 3  # all 4 passes committed in the end
+
+
+def test_crash_before_commit_propagates_then_resumes(tmp_path):
+    """A crash at the sidecar commit point (before the atomic rename) is
+    NOT handled in-process even with recovery armed; restart +
+    resume_from recomputes exactly the uncommitted pass."""
+    x = _x(40, 16, seed=10)
+    baseline = np.asarray(corr(x, **KW))
+    path = str(tmp_path / "r.mm")
+    # sink_commit arrivals: 1 = open's initial sidecar, 2/3/4 = passes 0-2
+    plan = FaultPlan.single("sink_commit", "crash", at=4)
+    with plan.armed(), pytest.raises(CrashFault):
+        corr(x, sink=HostSink(path=path), recovery=_policy(), **KW)
+    prog = json.loads((tmp_path / "r.mm.progress.json").read_text())
+    assert prog["completed"] == 1  # pass 2's commit is the one that died
+    r = np.asarray(corr(x, resume_from=path, **KW))
+    np.testing.assert_array_equal(r, baseline)
+
+
+def test_resume_recomputes_crc_corrupt_region(tmp_path):
+    """Flipped bytes inside a committed tile region fail its CRC on
+    resume: the entry is dropped and the region recomputed, never
+    trusted."""
+    x = _x(40, 16, seed=11)
+    baseline = np.asarray(corr(x, **KW))
+    path = str(tmp_path / "r.mm")
+    plan = FaultPlan.single("sink_commit", "crash", at=3)
+    with plan.armed(), pytest.raises(CrashFault):
+        corr(x, sink=HostSink(path=path), recovery=_policy(), **KW)
+    # corrupt committed pass-0 bytes: tile (0, 0) lives at rows/cols [0:8)
+    mm = np.memmap(path, dtype=np.float32, mode="r+", shape=baseline.shape)
+    mm[2, 3] += 1000.0
+    mm.flush()
+    del mm
+    r = np.asarray(corr(x, resume_from=path, **KW))
+    np.testing.assert_array_equal(r, baseline)
+
+
+def test_resume_trusts_intact_regions(tmp_path, monkeypatch):
+    """The flip side of CRC verification: intact committed passes are
+    never re-dispatched (kernel spy), so verification does not silently
+    degrade resume into recompute-everything."""
+    from repro.core import allpairs as ap
+    from repro.kernels.pcc_tile import pcc_tiles
+
+    x = _x(33, 17, seed=12)
+    path = str(tmp_path / "r.mm")
+    kw = dict(t=8, l_blk=8, max_tiles_per_pass=4)  # 15 tiles -> 4 passes
+    plan = FaultPlan.single("sink_commit", "crash", at=4)  # pass 2's commit
+    with plan.armed(), pytest.raises(CrashFault):
+        corr(x, sink=HostSink(path=path), recovery=_policy(), **kw)
+
+    seen = []
+
+    def spy(u, j0, **k):
+        seen.append(int(np.asarray(j0)))
+        return pcc_tiles(u, j0, **k)
+
+    monkeypatch.setattr(ap, "pcc_tiles", spy)
+    r = np.asarray(corr(x, resume_from=path, **kw))
+    assert seen == [8, 12]  # passes 0-1 committed; only 2-3 re-dispatch
+    np.testing.assert_array_equal(r, np.asarray(corr(x, **kw)))
+
+
+def test_resume_refuses_garbled_sidecar(tmp_path):
+    x = _x(40, 16, seed=13)
+    path = str(tmp_path / "r.mm")
+    plan = FaultPlan.single("sink_commit", "crash", at=3)
+    with plan.armed(), pytest.raises(CrashFault):
+        corr(x, sink=HostSink(path=path), recovery=_policy(), **KW)
+    (tmp_path / "r.mm.progress.json").write_text('{"version": 2, "entries"')
+    with pytest.raises(ValueError, match="unreadable|garbled"):
+        corr(x, resume_from=path, **KW)
+
+
+def test_pvalue_checkpoint_crash_and_resume(tmp_path):
+    """Kill-and-resume for the significance workload's checkpointed
+    p-value leg (ExceedanceSink over HostSink): an injected crash at the
+    sidecar commit leaves only durable passes; resuming reproduces the
+    uninterrupted p-values exactly."""
+    from repro.core.significance import PermutationSpec
+
+    x = _x(40, 16, seed=16)
+    kw = dict(t=8, l_blk=8, max_tiles_per_pass=4)
+    spec = lambda sink=None: PermutationSpec(iterations=6, key=15, chunk=4,
+                                             sink=sink)
+    _, p_full = corr(x, pvalues=spec(), **kw)
+    path = str(tmp_path / "p.mm")
+    plan = FaultPlan.single("sink_commit", "crash", at=3)
+    with plan.armed(), pytest.raises(CrashFault):
+        corr(x, pvalues=spec(HostSink(path=path)), **kw)
+    prog = json.loads((tmp_path / "p.mm.progress.json").read_text())
+    assert prog["completed"] == 0  # the crash killed pass 1's commit
+    _, p_res = corr(x, pvalues=spec(HostSink(path=path, resume=True)), **kw)
+    iu = np.triu_indices(40)
+    np.testing.assert_array_equal(np.asarray(p_res)[iu],
+                                  np.asarray(p_full)[iu])
+
+
+def test_topk_rerun_under_faults_stays_exact():
+    """TopKSink's merge is not idempotent under duplicates — re-launched
+    passes after transient and OOM faults must not double-merge
+    candidates.  The recovered top-k equals the fault-free one bitwise."""
+    from repro.core.sinks import TopKSink
+
+    x = _x(40, 16, seed=17)
+    base = corr(x, sink=TopKSink(5), **KW)
+    plan = FaultPlan([FaultSpec("pass_launch", "transient", (2,)),
+                      FaultSpec("pass_launch", "oom", (5,))])
+    pol = _policy()
+    with plan.armed():
+        top = corr(x, sink=TopKSink(5), recovery=pol, **KW)
+    np.testing.assert_array_equal(np.asarray(top["indices"]),
+                                  np.asarray(base["indices"]))
+    np.testing.assert_array_equal(np.asarray(top["values"]),
+                                  np.asarray(base["values"]))
+    assert len(plan.fired) == 2
+
+
+# ---------------------------------------------------------------------------
+# Acceptance scenario + seeded chaos
+# ---------------------------------------------------------------------------
+
+
+def test_device_loss_then_crash_mid_checkpoint_then_resume(tmp_path):
+    """The ISSUE acceptance scenario: one seeded FaultPlan kills a device
+    mid-run (recovered by shrink-and-continue) AND crashes the process
+    mid-checkpoint (recovered by restart + resume); the final matrix is
+    bit-identical to the fault-free run."""
+    x = _x(40, 16, seed=14)
+    baseline = np.asarray(corr(x, **KW))
+    path = str(tmp_path / "r.mm")
+    plan = FaultPlan([
+        FaultSpec("pass_launch", "device_loss", (2,)),
+        FaultSpec("sink_commit", "crash", (4,)),
+    ])
+    pol = _policy(
+        on_device_loss=lambda mesh, pl, exc: (mesh, pl.repartition(1)))
+    with plan.armed(), pytest.raises(CrashFault):
+        corr(x, sink=HostSink(path=path), recovery=pol, **KW)
+    # the device loss is recovered in-process (and the sidecar rewritten
+    # under the rebound plan); the later crash is logged and propagated
+    assert [e["action"] for e in pol.log] == ["shrink_mesh", "raise"]
+    assert [f[2] for f in plan.fired] == ["device_loss", "crash"]
+    # restart: both the sidecar spec (rewritten on rebind) and the
+    # committed coverage survive the in-run repartition
+    r = np.asarray(corr(x, resume_from=path, recovery=_policy(), **KW))
+    np.testing.assert_array_equal(r, baseline)
+
+
+def test_seeded_scenario_completes_and_replays(tmp_path):
+    """Random chaos under a seed: the run completes bit-identically, and
+    re-running the same seed fires the identical fault sequence."""
+    x = _x(40, 16, seed=15)
+    baseline = np.asarray(corr(x, **KW))
+    fired = []
+    for _ in range(2):
+        plan = FaultPlan.scenario(21, sites=("pass_launch", "sink_write"),
+                                  rate=0.3, horizon=12)
+        pol = _policy(max_retries=6)
+        with plan.armed():
+            r = np.asarray(corr(x, recovery=pol, **KW))
+        np.testing.assert_array_equal(r, baseline)
+        fired.append(tuple(plan.fired))
+    assert fired[0] == fired[1] and len(fired[0]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Real mesh shrink: 8 simulated devices in a subprocess
+# ---------------------------------------------------------------------------
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.mark.slow
+def test_mesh_shrink_and_continue_8_devices():
+    """Device loss on a real (simulated) 8-device mesh: the default
+    resolver drops a device, repartitions 8 -> 7, and the run completes
+    bit-identically — twice, so a second loss lands on the 7-wide mesh."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.api import corr
+        from repro.runtime.faults import FaultPlan, FaultSpec, RetryPolicy
+        rng = np.random.default_rng(30)
+        x = jnp.asarray(rng.standard_normal((64, 24)).astype(np.float32))
+        mesh = jax.make_mesh((8,), ("d",))
+        kw = dict(t=8, l_blk=8, max_tiles_per_pass=2)  # 36 tiles, multi-pass
+        base = np.asarray(corr(x, **kw))
+        plan = FaultPlan([FaultSpec("pass_launch", "device_loss", (2, 4))])
+        pol = RetryPolicy(sleep=lambda s: None)
+        with plan.armed():
+            r = np.asarray(corr(x, mesh=mesh, recovery=pol, **kw))
+        np.testing.assert_array_equal(r, base)
+        ps = [e["p"] for e in pol.log if e["action"] == "shrink_mesh"]
+        assert ps == [7, 6], ps
+        print("OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"

@@ -1,0 +1,217 @@
+"""CorrServer degradation (ISSUE 7): the server degrades instead of dying.
+
+Poisoned probes are rejected at the door (Query validation in submit()),
+one failing request in a coalesced batch no longer takes down its
+batch-mates (retry-once-then-split), expired requests fail with
+DeadlineExceeded instead of occupying a launch, and consecutive dispatch
+failures trip a circuit breaker that sheds load with ServerOverloaded —
+all of it deterministic via the runtime/faults harness and visible in
+stats()["faults"].
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.api import corr
+from repro.runtime.faults import CrashFault, FaultPlan, FaultSpec
+from repro.serving import (CorrServer, DeadlineExceeded, Query,
+                           ServerOverloaded)
+
+pytestmark = pytest.mark.chaos
+
+T, LBLK = 8, 8
+
+
+def _x(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+@pytest.fixture
+def corpus_x():
+    return _x(40, 12, seed=100)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_prepared_cache():
+    api.clear_prepared_cache()
+    yield
+    api.clear_prepared_cache()
+
+
+def _srv(corpus_x, **kw):
+    kw.setdefault("t", T)
+    kw.setdefault("l_blk", LBLK)
+    return CorrServer(corpus_x, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Validation at the door
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_probe_rejected_at_submit(corpus_x):
+    bad = np.ones((2, 12), np.float32)
+    bad[1, 3] = np.nan
+    with _srv(corpus_x) as srv:
+        with pytest.raises(ValueError, match="non-finite"):
+            srv.submit(bad)
+        with pytest.raises(ValueError, match="real-valued"):
+            srv.submit(np.ones((2, 12), np.complex64))
+        # the server is unaffected: a good query still resolves
+        good = _x(3, 12, seed=1)
+        res = srv.query(good)
+        np.testing.assert_array_equal(
+            np.asarray(res.value), np.asarray(corr(good, corpus_x, t=T,
+                                                   l_blk=LBLK)))
+    assert srv.stats()["faults"]["failed_requests"] == 0
+
+
+def test_query_validates_independently_of_server():
+    with pytest.raises(ValueError, match="non-finite"):
+        Query(np.array([[1.0, np.inf]], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Retry-once-then-split
+# ---------------------------------------------------------------------------
+
+
+def test_transient_dispatch_fault_is_invisible(corpus_x):
+    """One transient dispatch failure is retried in place — the caller
+    sees a normal result, stats see the retry."""
+    probes = _x(3, 12, seed=2)
+    plan = FaultPlan.single("server_dispatch", "transient", at=1)
+    with _srv(corpus_x) as srv, plan.armed():
+        res = srv.query(probes)
+    np.testing.assert_array_equal(
+        np.asarray(res.value),
+        np.asarray(corr(probes, corpus_x, t=T, l_blk=LBLK)))
+    f = srv.stats()["faults"]
+    assert f["retries"] == 1
+    assert f["batch_failures"] == 0 and f["failed_requests"] == 0
+
+
+def test_batch_split_isolates_the_failing_request(corpus_x):
+    """A non-transient failure of a coalesced batch is re-run request by
+    request: only the request whose own launch fails gets the error;
+    every batch-mate still resolves.  Arrivals: 1 = the coalesced batch,
+    2 = the first split request (fails), 3 = the second (succeeds)."""
+    a, b = _x(3, 12, seed=3), _x(5, 12, seed=4)
+    plan = FaultPlan([FaultSpec("server_dispatch", "crash", (1, 2))])
+    with _srv(corpus_x, max_wait_s=0.2) as srv, plan.armed():
+        fa = srv.submit(a)
+        fb = srv.submit(b)
+        with pytest.raises(CrashFault):
+            fa.result(timeout=30)
+        res_b = fb.result(timeout=30)
+    np.testing.assert_array_equal(
+        np.asarray(res_b.value),
+        np.asarray(corr(b, corpus_x, t=T, l_blk=LBLK)))
+    assert res_b.stats["batch_requests"] == 1  # served by its own launch
+    f = srv.stats()["faults"]
+    assert f["splits"] == 1
+    assert f["failed_requests"] == 1
+    assert f["batch_failures"] == 2  # the coalesced batch + request a
+
+
+def test_split_batch_results_stay_bit_identical(corpus_x):
+    """Degraded (split) serving is an execution-policy change only: the
+    surviving requests' results are bit-identical to standalone corr()."""
+    qs = [_x(m, 12, seed=10 + m) for m in (2, 3, 4)]
+    plan = FaultPlan.single("server_dispatch", "crash", at=1)
+    with _srv(corpus_x, max_wait_s=0.2) as srv, plan.armed():
+        futs = [srv.submit(q) for q in qs]
+        vals = [f.result(timeout=30).value for f in futs]
+    for q, v in zip(qs, vals):
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray(corr(q, corpus_x, t=T, l_blk=LBLK)))
+    assert srv.stats()["faults"]["failed_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_expired_deadline_fails_without_a_launch(corpus_x):
+    """A request whose deadline lapses while queued fails with
+    DeadlineExceeded at dispatch; a deadline-free batch-mate is served."""
+    with _srv(corpus_x, max_wait_s=0.15) as srv:
+        doomed = srv.submit(_x(2, 12, seed=5), deadline_s=0.001)
+        ok = srv.submit(_x(2, 12, seed=6))
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=30)
+        ok.result(timeout=30)
+    f = srv.stats()["faults"]
+    assert f["deadline_exceeded"] == 1 and f["failed_requests"] == 1
+
+
+def test_server_default_deadline_applies(corpus_x):
+    with _srv(corpus_x, max_wait_s=0.15, deadline_s=0.001) as srv:
+        with pytest.raises(DeadlineExceeded):
+            srv.query(_x(2, 12, seed=7))
+        # an explicit per-request deadline overrides the tight default
+        srv.query(_x(2, 12, seed=8), deadline_s=30.0)
+    assert srv.stats()["faults"]["deadline_exceeded"] == 1
+
+
+def test_deadline_must_be_positive(corpus_x):
+    with _srv(corpus_x) as srv:
+        with pytest.raises(ValueError, match="deadline_s"):
+            srv.submit(_x(2, 12, seed=9), deadline_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_opens_after_consecutive_failures_and_recloses(corpus_x):
+    probes = _x(2, 12, seed=11)
+    # every dispatch dies until the plan runs out of armed arrivals
+    plan = FaultPlan.single("server_dispatch", "crash", at=1, times=2)
+    with _srv(corpus_x, breaker_threshold=2,
+              breaker_cooldown_s=0.15) as srv, plan.armed():
+        for _ in range(2):
+            with pytest.raises(CrashFault):
+                srv.query(probes)
+        # threshold hit: the breaker is open and submit() sheds
+        with pytest.raises(ServerOverloaded, match="circuit breaker"):
+            srv.submit(probes)
+        f = srv.stats()["faults"]
+        assert f["breaker_open"] and f["breaker_trips"] == 1
+        assert f["shed"] == 1 and f["consecutive_failures"] == 2
+        # after the cooldown the next dispatch goes through (the fault
+        # plan is exhausted) and closes the breaker
+        time.sleep(0.2)
+        res = srv.query(probes)
+    np.testing.assert_array_equal(
+        np.asarray(res.value),
+        np.asarray(corr(probes, corpus_x, t=T, l_blk=LBLK)))
+    f = srv.stats()["faults"]
+    assert not f["breaker_open"] and f["consecutive_failures"] == 0
+
+
+def test_breaker_threshold_validation(corpus_x):
+    with pytest.raises(ValueError, match="breaker_threshold"):
+        CorrServer(corpus_x, t=T, l_blk=LBLK, breaker_threshold=0)
+
+
+# ---------------------------------------------------------------------------
+# Observability
+# ---------------------------------------------------------------------------
+
+
+def test_stats_faults_shape_when_healthy(corpus_x):
+    with _srv(corpus_x) as srv:
+        srv.query(_x(2, 12, seed=12))
+        f = srv.stats()["faults"]
+    assert f == {"batch_failures": 0, "retries": 0, "splits": 0,
+                 "failed_requests": 0, "deadline_exceeded": 0, "shed": 0,
+                 "breaker_trips": 0, "consecutive_failures": 0,
+                 "breaker_open": False}
