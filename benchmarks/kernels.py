@@ -13,13 +13,17 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+import jax
+
 from benchmarks.common import emit, timeit
 from repro.core import measures
 from repro.core.allpairs import allpairs, prepare
 from repro.core.api import corr
 from repro.core.plan import ExecutionPlan
+from repro.core.quantize import fp8_dtype, quantize_rows
 from repro.core.sinks import EdgeCountSink, HostSink, TopKSink
 from repro.kernels.flash_attention import grid_savings
+from repro.kernels.kendall_merge import KENDALL_MERGE_CROSSOVER_L
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
 from repro.kernels.ref import pcc_tiles_ref
 from repro.core.mapping import tri_count
@@ -196,6 +200,97 @@ def run() -> None:
         emit(f"kernels/grid_savings_s{s}_w{w}", 0.0,
              f"savings={grid_savings(s, blk, w):.4f};"
              f"steps={tri_count(-(-s // blk)) if w is None else '-'}")
+
+    # Kendall sign-GEMM vs merge-sort crossover (ISSUE 8 tentpole): end-to-
+    # end corr() on both forced paths, the user-observable the dispatch
+    # bound (KENDALL_MERGE_CROSSOVER_L) was measured from.  The sign path's
+    # pair operand grows as l^2, the merge path's stays O(l); above the
+    # bound merge must win, and the gap must grow with l.
+    ck_prev = None
+    for l in (64, 96, 160, 256):
+        xk = jnp.asarray(rng.standard_normal((32, l)).astype(np.float32))
+        t_sign = timeit(lambda xk=xk: corr(xk, measure="kendall_sign_gemm",
+                                           t=16, l_blk=32),
+                        warmup=1, iters=1)
+        t_merge = timeit(lambda xk=xk: corr(xk, measure="kendall_merge",
+                                            t=16, l_blk=32),
+                         warmup=1, iters=1)
+        ratio = t_sign / t_merge
+        emit(f"kernels/kendall_crossover_l{l}_sign", t_sign * 1e6,
+             f"n=32;pairs={l * (l - 1) // 2}")
+        emit(f"kernels/kendall_crossover_l{l}_merge", t_merge * 1e6,
+             f"n=32;operand_l={l};speedup_vs_sign={ratio:.2f}")
+        if l >= KENDALL_MERGE_CROSSOVER_L:
+            assert ratio > 1.0, \
+                f"merge must beat sign above the crossover (l={l})"
+            if ck_prev is not None:
+                assert ratio > ck_prev, "the merge gap must grow with l"
+            ck_prev = ratio
+    emit("kernels/kendall_crossover_dispatch", 0.0,
+         f"crossover_l={KENDALL_MERGE_CROSSOVER_L};"
+         f"auto_dispatch=resolve_tile_kernel")
+
+    # Quantized operand sweep (ISSUE 8 tentpole b): f32/bf16/int8 (+fp8
+    # when the backend's matmul supports it — probed, never assumed; a
+    # skip row records absence in the bench JSON).  Two observables per
+    # dtype x {small,large} l: the compiled XLA GEMM proxy (honest CPU
+    # timing; XLA CPU has no int8 GEMM fast path, so int8 *compute* loses
+    # here — on MXU hardware it wins) and a pure operand-streaming pass,
+    # which is what an HBM-bound shape is bound by: time tracks operand
+    # bytes, so int8/fp8 beat bf16 ~2x and f32 ~4x.
+    f8 = fp8_dtype()
+    dts = [("f32", jnp.float32), ("bf16", jnp.bfloat16),
+           ("int8", jnp.int8)]
+    if f8 is not None:
+        dts.append(("fp8", f8))
+    else:
+        emit("kernels/quantized_fp8_skipped", 0.0,
+             "fp8_matmul_unsupported_on_backend;probe=quantize.fp8_supported")
+
+    def quant_gemm(dname, dt, u):
+        if dname == "f32":
+            return jax.jit(lambda q: jnp.dot(
+                q, q.T, preferred_element_type=jnp.float32)), u, None
+        if dname == "bf16":
+            ub = u.astype(jnp.bfloat16)
+            return jax.jit(lambda q: jnp.dot(
+                q, q.T, preferred_element_type=jnp.float32)), ub, None
+        q, s = quantize_rows(u, dt)
+        if dname == "int8":
+            fn = jax.jit(lambda q, s: jnp.dot(
+                q, q.T, preferred_element_type=jnp.int32
+            ).astype(jnp.float32) * (s[:, None] * s[None, :]))
+        else:
+            fn = jax.jit(lambda q, s: jnp.dot(
+                q.astype(jnp.float32), q.astype(jnp.float32).T)
+                * (s[:, None] * s[None, :]))
+        return fn, q, s
+
+    stream = jax.jit(lambda q: q + q.dtype.type(0))
+    for lname, lq in (("small", 256), ("large", 16384)):
+        xq = jnp.asarray(
+            rng.standard_normal((256, lq)).astype(np.float32))
+        uq = measures.PEARSON.transform(xq, dtype=jnp.float32)
+        ref = jnp.dot(uq, uq.T, preferred_element_type=jnp.float32)
+        base_stream = None
+        for dname, dt in dts:
+            fn, op, s = quant_gemm(dname, dt, uq)
+            args = (op,) if s is None else (op, s)
+            t_g = timeit(lambda: fn(*args), warmup=1, iters=3)
+            err = float(jnp.max(jnp.abs(
+                jnp.clip(fn(*args), -1, 1) - jnp.clip(ref, -1, 1))))
+            emit(f"kernels/quantized_gemm_{dname}_l_{lname}", t_g * 1e6,
+                 f"n=256;l={lq};operand_bytes={op.nbytes};"
+                 f"err_pearson={err:.1e}")
+            t_s = timeit(lambda: stream(op), warmup=1, iters=3)
+            emit(f"kernels/quantized_stream_{dname}_l_{lname}", t_s * 1e6,
+                 f"operand_bytes={op.nbytes}")
+            if dname == "bf16":
+                base_stream = t_s
+            if dname == "int8" and lname == "large":
+                # the HBM-bound acceptance: int8 moves half bf16's bytes
+                assert t_s < base_stream, \
+                    "int8 streaming must beat bf16 on the HBM-bound shape"
 
 
 if __name__ == "__main__":

@@ -51,6 +51,7 @@ from repro.compat import shard_map
 from repro.core import mapping, measures, tiling
 from repro.core.plan import (ExecutionPlan, pad_operands, resolve_interpret,
                              tiles_per_device)
+from repro.core.quantize import Operand, operand_parts
 from repro.core.sinks import (DenseSink, TileSink, place_tiles_host,
                               scatter_tiles, symmetrize)
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
@@ -78,10 +79,14 @@ def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
     at full (>= f32) precision — the kernel still accumulates in f32:
       - jnp.bfloat16 halves operand HBM traffic/VMEM at ~3 decimal digits
         of operand precision (tolerance-tested against the f32 oracle);
-      - jnp.int8 is allowed only for measures whose transform output is
-        exactly integer-valued (measure.exact_int8, e.g. Kendall's +/-1
-        pair signs) and is *lossless* there: int8 operands accumulate
-        exactly on the MXU (int32 per block), quartering operand traffic.
+      - jnp.int8 on measures whose transform output is exactly
+        integer-valued (measure.exact_int8, e.g. Kendall's +/-1 pair
+        signs) is *lossless*: int8 operands accumulate exactly on the MXU
+        (int32 per block), quartering operand traffic;
+      - jnp.int8 / fp8 on the other measures takes the quantized path
+        (core/quantize.py): per-row absmax scales travel with the operand
+        as an Operand container and the kernel dequantizes finished tiles
+        in VMEM (error budgets in tests/test_quantized.py).
     """
     n, l = x.shape
     eplan = ExecutionPlan.create(n, l, t=t, l_blk=l_blk, measure=measure,
@@ -99,6 +104,39 @@ def prepare(x: Array, *, t: int = DEFAULT_TILE, l_blk: int = DEFAULT_LBLK,
 # ---------------------------------------------------------------------------
 
 
+def launch_tiles(plan: ExecutionPlan, u, j0, launch: int, v=None,
+                 grid_cols: Optional[int] = None) -> Array:
+    """THE kernel-launch seam: route one pass launch to the plan's tile
+    kernel.
+
+    Unwraps quantized :class:`Operand` containers (core/quantize.py) and
+    threads their per-row scales to the Pallas GEMM kernel; measures with a
+    custom ``tile_kernel`` (merge-sort Kendall) dispatch to it instead,
+    with the true sample count ``plan.l`` appended to the shared launch
+    signature.  Every launch site — local passes, in-shard_map mesh passes
+    — calls this, so kernel choice lives in exactly one place."""
+    u_data, u_scale = operand_parts(u)
+    v_data, v_scale = operand_parts(v) if v is not None else (None, None)
+    if plan.measure.tile_kernel is not None:
+        return plan.measure.tile_kernel(
+            u_data, j0, t=plan.t, l_blk=plan.l_blk, pass_tiles=launch,
+            interpret=plan.interpret, epilogue=plan.epilogue_spec,
+            v_pad=v_data, grid_cols=grid_cols, l=plan.l)
+    row_scale = col_scale = None
+    if u_scale is not None:
+        row_scale = u_scale
+        col_scale = u_scale if v is None else v_scale
+        if col_scale is None:
+            raise ValueError("quantized row operand paired with an "
+                             "unquantized column operand — both sides must "
+                             "be prepared by the same plan")
+    return pcc_tiles(u_data, j0, t=plan.t, l_blk=plan.l_blk,
+                     pass_tiles=launch, interpret=plan.interpret,
+                     epilogue=plan.epilogue_spec,
+                     v_pad=v_data, grid_cols=grid_cols,
+                     row_scale=row_scale, col_scale=col_scale)
+
+
 def _local_launches(plan: ExecutionPlan, u_pad: Array,
                     v_pad: Optional[Array] = None, start_pass: int = 0,
                     skip=frozenset()):
@@ -114,10 +152,8 @@ def _local_launches(plan: ExecutionPlan, u_pad: Array,
             continue
         faults.check("pass_launch")
         lo = plan.pass_offset(k)
-        buf = pcc_tiles(u_pad, lo, t=plan.t, l_blk=plan.l_blk,
-                        pass_tiles=launch, interpret=plan.interpret,
-                        epilogue=plan.epilogue_spec,
-                        v_pad=v_pad, grid_cols=grid_cols)
+        buf = launch_tiles(plan, u_pad, lo, launch, v=v_pad,
+                           grid_cols=grid_cols)
         if not plan.fused and plan.measure.epilogue is not None:
             buf = plan.measure.epilogue(buf, plan.l)
         # local launches are exact-sized: every slot is valid
@@ -146,22 +182,40 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
     """
     axes = tuple(mesh.axis_names)
     grid_cols = plan.workload.grid_cols
+    u_data, u_scale = operand_parts(u_pad)
+    v_data, v_scale = (operand_parts(v_pad) if v_pad is not None
+                       else (None, None))
     if shard_u:
         if v_pad is not None:
             raise ValueError("shard_u supports the symmetric workload only "
                              "(one operand to shard); rectangular runs "
                              "replicate both operands")
-        rows = u_pad.shape[0]
+        rows = u_data.shape[0]
         rows_pad = -(-rows // plan.p) * plan.p
         if rows_pad != rows:
-            u_pad = jnp.pad(u_pad, ((0, rows_pad - rows), (0, 0)))
+            u_data = jnp.pad(u_data, ((0, rows_pad - rows), (0, 0)))
         in_spec = P(axes, None)
     else:
-        in_spec = P(*([None] * u_pad.ndim))
-    u_in = jax.device_put(u_pad, NamedSharding(mesh, in_spec))
+        in_spec = P(*([None] * u_data.ndim))
+    u_in = jax.device_put(u_data, NamedSharding(mesh, in_spec))
     rep_spec = P(None, None)
-    v_in = (None if v_pad is None
-            else jax.device_put(v_pad, NamedSharding(mesh, rep_spec)))
+    v_in = (None if v_data is None
+            else jax.device_put(v_data, NamedSharding(mesh, rep_spec)))
+    # Quantized operands: the per-row dequantization scales are tiny
+    # ((n_pad,) f32), so they replicate across the mesh even under shard_u
+    # — no gather needed in-shard.  Symmetric runs reuse the row scales for
+    # the columns, exactly like the operand itself.
+    has_s = u_scale is not None
+    s_row_in = s_col_in = None
+    if has_s:
+        srep = NamedSharding(mesh, P(None))
+        s_row_in = jax.device_put(jnp.asarray(u_scale, jnp.float32), srep)
+        cs = u_scale if v_pad is None else v_scale
+        if cs is None:
+            raise ValueError("quantized row operand paired with an "
+                             "unquantized column operand — both sides must "
+                             "be prepared by the same plan")
+        s_col_in = jax.device_put(jnp.asarray(cs, jnp.float32), srep)
 
     fns = {}
 
@@ -169,7 +223,7 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
         if launch in fns:
             return fns[launch]
 
-        def compute(u: Array, v: Optional[Array], off: Array) -> Array:
+        def compute(u, v, su, sv, off: Array) -> Array:
             u_rep = u
             if shard_u:
                 # Gather minor axis first so the row order reassembles
@@ -183,23 +237,29 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
                 rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
             j0 = jnp.minimum(rank * plan.per_dev + off[0],
                              plan.total_tiles - 1)
-            return pcc_tiles(u_rep, j0, t=plan.t, l_blk=plan.l_blk,
-                             pass_tiles=launch, interpret=plan.interpret,
-                             epilogue=plan.epilogue_spec,
-                             v_pad=v, grid_cols=grid_cols)
+            uu = u_rep if su is None else Operand(u_rep, su)
+            vv = (None if v is None
+                  else (v if sv is None else Operand(v, sv)))
+            # symmetric quantized runs: launch_tiles reuses su for the
+            # columns when v is None, so sv only matters for grids
+            return launch_tiles(plan, uu, j0, launch, v=vv,
+                                grid_cols=grid_cols)
 
-        if v_pad is None:
-            def device_fn(u: Array, off: Array) -> Array:
-                return compute(u, None, off)
-            fns[launch] = shard_map(device_fn, mesh=mesh,
-                                    in_specs=(in_spec, P(None)),
-                                    out_specs=P(axes), check_vma=False)
-        else:
-            def device_fn2(u: Array, v: Array, off: Array) -> Array:
-                return compute(u, v, off)
-            fns[launch] = shard_map(device_fn2, mesh=mesh,
-                                    in_specs=(in_spec, rep_spec, P(None)),
-                                    out_specs=P(axes), check_vma=False)
+        def device_fn(*args) -> Array:
+            it = iter(args)
+            u = next(it)
+            v = next(it) if v_in is not None else None
+            su = next(it) if has_s else None
+            sv = next(it) if has_s else None
+            off = next(it)
+            return compute(u, v, su, sv, off)
+
+        specs = ((in_spec,)
+                 + ((rep_spec,) if v_in is not None else ())
+                 + ((P(None), P(None)) if has_s else ())
+                 + (P(None),))
+        fns[launch] = shard_map(device_fn, mesh=mesh, in_specs=specs,
+                                out_specs=P(axes), check_vma=False)
         return fns[launch]
 
     for k, launch in list(enumerate(plan.launch_sizes))[start_pass:]:
@@ -207,7 +267,10 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
             continue
         faults.check("pass_launch")
         off = jnp.full((1,), plan.pass_offset(k), jnp.int32)
-        args = (u_in, off) if v_in is None else (u_in, v_in, off)
+        args = ((u_in,)
+                + ((v_in,) if v_in is not None else ())
+                + ((s_row_in, s_col_in) if has_s else ())
+                + (off,))
         buf = pass_fn(launch)(*args)
         if not plan.fused and plan.measure.epilogue is not None:
             buf = plan.measure.epilogue(buf, plan.l)
@@ -450,9 +513,14 @@ def stream_tiles(
         if l_blk != DEFAULT_LBLK and l_blk != plan.l_blk:
             raise ValueError(
                 f"l_blk={l_blk} conflicts with plan.l_blk={plan.l_blk}")
-        if measure != "pearson" and measures.get(measure) is not plan.measure:
+        req = measures.get(measure)
+        resolved = measures.resolve_tile_kernel(
+            req, l=plan.l, compute_dtype=plan.compute_dtype,
+            replicas=plan.replicas)
+        if (measure != "pearson" and req is not plan.measure
+                and resolved is not plan.measure):
             raise ValueError(
-                f"measure={measures.get(measure).name!r} conflicts with "
+                f"measure={req.name!r} conflicts with "
                 f"plan.measure={plan.measure.name!r}")
     for _k, ids, buf, sel, _padded in _stream(plan, plan.prepare(x),
                                               mesh=mesh, shard_u=shard_u):
@@ -614,6 +682,7 @@ allpairs_similarity_streamed = allpairs_pcc_streamed
 __all__ = [
     "allpairs",
     "execute_plan",
+    "launch_tiles",
     "run_sink",
     "stream_tiles",
     "prepare",

@@ -416,13 +416,23 @@ def _run_masked(problem: PairwiseProblem, *, sink, mesh, p, t, l_blk,
     """Masked execution: one engine run per component GEMM, combined
     elementwise pass-by-pass.
 
-    Every component — including the symmetric case — runs the full
-    rectangular grid, because the cross terms (values x mask) are
-    non-symmetric even for y == x.  The component streams share one plan
-    (same geometry, raw-dot measure), so their pass boundaries, tile ids,
-    and clamped-slot selections line up exactly; zip-ing them keeps device
-    memory at #components pass buffers and lets the combined tiles flow
-    into any TileSink (run_sink: checkpointing included).
+    Rectangular problems run every component over the full grid.
+    Symmetric problems ride the *triangular* bijection for all six
+    components: the cross terms are non-symmetric as matrices
+    (sx = A·Mᵀ ≠ its transpose), but they come in transpose *pairs*
+    (sy(i,j) = sx(j,i), qy(i,j) = qx(j,i); n and sxy are symmetric), and
+    every combine formula touches them only through commutative products
+    (sx·sy, qx·qy) — so the combined tile at (x_t, y_t) is exactly the
+    transpose of the tile at (y_t, x_t), bit for bit, and the sink's
+    standard mirror reconstructs the lower half.  That halves the GEMM
+    work of every symmetric masked run (the ROADMAP's residual promised
+    2x on two of six components; the triangle delivers it on all six).
+
+    The component streams share one plan (same geometry, raw-dot measure),
+    so their pass boundaries, tile ids, and clamped-slot selections line
+    up exactly; zip-ing them keeps device memory at #components pass
+    buffers and lets the combined tiles flow into any TileSink (run_sink:
+    checkpointing included).
     """
     mm = measures.get_masked(problem.measure)
     ops_x = measures.masked_operands(problem.x, problem.mask_x)
@@ -430,29 +440,38 @@ def _run_masked(problem: PairwiseProblem, *, sink, mesh, p, t, l_blk,
              else measures.masked_operands(problem.y, problem.mask_y))
 
     plan = ExecutionPlan.create(
-        problem.n_rows, problem.l, n_cols=problem.n_cols, t=t, l_blk=l_blk,
+        problem.n_rows, problem.l,
+        n_cols=None if problem.symmetric else problem.n_cols,
+        t=t, l_blk=l_blk,
         measure="dot", p=p, max_tiles_per_pass=max_tiles_per_pass,
         interpret=interpret, clip=False)
     pad_x = {k: pad_operands(v, t, l_blk) for k, v in ops_x.items()}
     pad_y = (pad_x if ops_y is ops_x
              else {k: pad_operands(v, t, l_blk) for k, v in ops_y.items()})
 
-    # The sink sees the *masked* measure's identity (name + clip) and the
-    # problem's symmetry (symmetric_grid: the workload is a full square,
-    # but diagonal cells are still self-pairs — TopKSink/EdgeCountSink key
-    # on it), so checkpoint specs distinguish masked runs, bounded results
-    # clip iff requested (fused=False: combine leaves values unclipped,
-    # the sink applies the clip like any unfused run), and pair-semantic
-    # sinks behave as on the triangle.
+    # The sink sees the *masked* measure's identity (name + clip), so
+    # checkpoint specs distinguish masked runs, bounded results clip iff
+    # requested (fused=False: combine leaves values unclipped, the sink
+    # applies the clip like any unfused run), and pair-semantic sinks
+    # (TopKSink/EdgeCountSink) see self-pair semantics — natively on the
+    # triangular workload for symmetric problems, via symmetric_grid on
+    # rectangular-shaped ones (unreachable today, kept for custom plans).
     sink_measure = measures.Measure(mm.name, measures.identity_transform,
                                     None, mm.clip)
-    sink_plan = dataclasses.replace(plan, measure=sink_measure, fused=False,
-                                    clip=clip,
-                                    symmetric_grid=problem.symmetric)
+    sink_plan = dataclasses.replace(
+        plan, measure=sink_measure, fused=False, clip=clip,
+        symmetric_grid=problem.symmetric and not plan.symmetric)
 
     def make_stream(k0, skip):
         streams = [
-            _stream(plan, pad_x[MASKED_ROW[c]], v_pad=pad_y[MASKED_COL[c]],
+            _stream(plan, pad_x[MASKED_ROW[c]],
+                    # identical row/col operands (sxy, n) take the
+                    # single-operand path — bit-identical to the plain
+                    # symmetric kernel; transpose-pair components ride the
+                    # triangle as a same-shape second operand
+                    v_pad=(None if pad_y is pad_x
+                           and MASKED_ROW[c] == MASKED_COL[c]
+                           else pad_y[MASKED_COL[c]]),
                     mesh=mesh, start_pass=k0, skip=skip)
             for c in mm.components
         ]

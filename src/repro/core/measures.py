@@ -41,6 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pcc
+from repro.kernels.kendall_merge import (
+    KENDALL_MERGE_CROSSOVER_L, kendall_merge_tile_kernel,
+    kendall_tau_b_merge_tile_kernel)
 from repro.kernels.pcc_tile import EpilogueSpec
 
 Array = jax.Array
@@ -120,6 +123,18 @@ def pair_sign_transform(x: Array, *, dtype=None) -> Array:
     xa = x.astype(acc)
     d = xa[:, ia] - xa[:, ib]
     return jnp.sign(d).astype(dtype or x.dtype)
+
+
+def kendall_rank_transform(x: Array, *, dtype=None) -> Array:
+    """Kendall merge-sort row transform: just the fractional ranks, (n, l).
+
+    The O(l log l) tile kernel (kernels/kendall_merge.py) computes C - D
+    from ranks directly — the pair axis never materialises, so prepare()
+    stays O(n l) in host and device memory where pair_sign_transform is
+    O(n l²).  Ranks preserve each profile's order and tie structure, which
+    is all Kendall depends on."""
+    return rank_rows(x).astype(dtype or jnp.promote_types(x.dtype,
+                                                          jnp.float32))
 
 
 def pair_sign_tie_scaled_transform(x: Array, *, dtype=None) -> Array:
@@ -212,6 +227,15 @@ class Measure:
                   alone cannot detect this) and for any custom transform
                   not proven to commute; False just routes replicas through
                   the always-correct re-transform path.
+    tile_kernel:  None rides the shared Pallas GEMM kernel (inner product
+                  of transformed rows).  A callable replaces the GEMM with
+                  a custom per-tile kernel of the same launch signature
+                  plus the true sample count ``l`` (see
+                  kernels/kendall_merge.kendall_merge_tiles) — the measure
+                  is then NOT an inner product of its transform output
+                  (dense_reference refuses it), and the replica axis /
+                  compute_dtype narrowing are unavailable (plan creation
+                  validates).
     """
 
     name: str
@@ -221,6 +245,7 @@ class Measure:
     epilogue_div: Optional[Callable[[int], float]] = None
     exact_int8: bool = False
     permute_gather: bool = False
+    tile_kernel: Optional[Callable[..., Array]] = None
 
     @property
     def fusable(self) -> bool:
@@ -268,6 +293,34 @@ KENDALL_B = Measure("kendall_tau_b", pair_sign_tie_scaled_transform, None,
                     (-1.0, 1.0))
 DOT = Measure("dot", identity_transform, None, None, permute_gather=True)
 
+# Merge-sort Kendall variants (kernels/kendall_merge.py): the transform is
+# just the (n, l) ranks and the tile kernel applies Knight's O(l log l)
+# formula per pair.  tau-a output is bitwise identical to KENDALL's
+# sign-GEMM (same integer C - D, same EpilogueSpec).  Plan creation
+# auto-substitutes these for KENDALL / KENDALL_B above the crossover
+# (resolve_tile_kernel); naming them explicitly forces the merge path.
+KENDALL_MERGE = Measure(
+    "kendall_merge", kendall_rank_transform, _kendall_epilogue, (-1.0, 1.0),
+    epilogue_div=_kendall_div, tile_kernel=kendall_merge_tile_kernel)
+KENDALL_B_MERGE = Measure(
+    "kendall_tau_b_merge", kendall_rank_transform, None, (-1.0, 1.0),
+    tile_kernel=kendall_tau_b_merge_tile_kernel)
+# Distinct objects that pin the sign-GEMM path: resolve_tile_kernel's
+# substitution is by object identity (`meas is KENDALL`), so these clones
+# never auto-dispatch — benchmarks and tests use them to measure the
+# quadratic path above the crossover.
+KENDALL_SIGN = dataclasses.replace(KENDALL, name="kendall_sign_gemm")
+KENDALL_B_SIGN = dataclasses.replace(KENDALL_B, name="kendall_tau_b_sign_gemm")
+
+# The merge variants compute exactly the statistic of their sign-GEMM
+# twins (C - D is integer-valued on both paths), so the twin's dense
+# inner-product oracle IS their oracle — dense_reference delegates via
+# this identity-keyed map instead of raising.
+_DENSE_TWIN = {
+    id(KENDALL_MERGE): KENDALL,
+    id(KENDALL_B_MERGE): KENDALL_B,
+}
+
 _REGISTRY: Dict[str, Measure] = {
     "pearson": PEARSON,
     "pcc": PEARSON,
@@ -279,6 +332,10 @@ _REGISTRY: Dict[str, Measure] = {
     "kendall_tau_a": KENDALL,
     "kendall_tau_b": KENDALL_B,
     "kendall_b": KENDALL_B,
+    "kendall_merge": KENDALL_MERGE,
+    "kendall_tau_b_merge": KENDALL_B_MERGE,
+    "kendall_sign_gemm": KENDALL_SIGN,
+    "kendall_tau_b_sign_gemm": KENDALL_B_SIGN,
     "dot": DOT,
 }
 
@@ -323,6 +380,33 @@ def resolve_fusion(meas: "Measure", fuse_epilogue: bool, l: int, *,
     return spec, fused
 
 
+def resolve_tile_kernel(meas: "Measure", *, l: int, compute_dtype=None,
+                        replicas: int = 0) -> "Measure":
+    """Kendall kernel auto-dispatch (plan-creation seam).
+
+    At or above the benchmarked crossover sample count
+    (kernels/kendall_merge.KENDALL_MERGE_CROSSOVER_L) the canonical KENDALL
+    / KENDALL_B measures are substituted by their O(l log l) merge-sort
+    variants — the pair-sign operand would grow as l².  The substitution is
+    by object *identity*, so explicitly chosen variants (KENDALL_MERGE,
+    KENDALL_SIGN, user clones) pass through untouched, and it only applies
+    when the run is compatible with the merge kernel: no compute_dtype
+    narrowing (ranks must keep their tie structure — bf16 would merge
+    distinct ranks; int8 means the caller explicitly chose the exact
+    sign-GEMM operand) and no replica axis (significance runs ride the
+    sign-GEMM's replica grid).
+    """
+    if compute_dtype is not None or replicas:
+        return meas
+    if l < KENDALL_MERGE_CROSSOVER_L:
+        return meas
+    if meas is KENDALL:
+        return KENDALL_MERGE
+    if meas is KENDALL_B:
+        return KENDALL_B_MERGE
+    return meas
+
+
 # ---------------------------------------------------------------------------
 # Dense references (oracles; also the fastest small-n XLA path)
 # ---------------------------------------------------------------------------
@@ -333,6 +417,12 @@ def dense_reference(x: Array, measure: MeasureLike = "pearson", *,
     """Full (n, n) similarity via dense U @ U^T — the Eq. 5 analogue for any
     measure.  Oracle for the tiled/streamed/sharded paths."""
     meas = get(measure)
+    meas = _DENSE_TWIN.get(id(meas), meas)
+    if meas.tile_kernel is not None:
+        raise ValueError(
+            f"measure {meas.name!r} is not an inner product of its "
+            f"transform output (custom tile kernel) — use corr() or, for "
+            f"kendall, the kendall_tau_a_literal oracle")
     l = x.shape[1]
     u = meas.transform(x, dtype=jnp.promote_types(x.dtype, jnp.float32))
     s = jnp.dot(u, u.T, preferred_element_type=jnp.float32)
@@ -346,6 +436,11 @@ def dense_reference_pair(x: Array, y: Array,
     oracle for the grid-workload tiled path.  Row transforms are per-row
     maps, so X and Y transform independently."""
     meas = get(measure)
+    meas = _DENSE_TWIN.get(id(meas), meas)
+    if meas.tile_kernel is not None:
+        raise ValueError(
+            f"measure {meas.name!r} is not an inner product of its "
+            f"transform output (custom tile kernel) — use corr()")
     l = x.shape[1]
     if y.shape[1] != l:
         raise ValueError(f"sample counts differ: x has l={l}, y has "
@@ -532,6 +627,11 @@ __all__ = [
     "COVARIANCE",
     "KENDALL",
     "KENDALL_B",
+    "KENDALL_MERGE",
+    "KENDALL_B_MERGE",
+    "KENDALL_SIGN",
+    "KENDALL_B_SIGN",
+    "KENDALL_MERGE_CROSSOVER_L",
     "DOT",
     "MASKED_PEARSON",
     "MASKED_COSINE",
@@ -542,7 +642,9 @@ __all__ = [
     "register",
     "available",
     "resolve_fusion",
+    "resolve_tile_kernel",
     "identity_transform",
+    "kendall_rank_transform",
     "rank_rows",
     "spearman_transform",
     "l2_normalize_rows",

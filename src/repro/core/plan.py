@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mapping, measures, tiling
+from repro.core import mapping, measures, quantize, tiling
+from repro.core.quantize import Operand
 from repro.kernels.pcc_tile import (DEFAULT_LBLK, DEFAULT_TILE, EpilogueSpec)
 
 Array = jax.Array
@@ -193,12 +194,27 @@ class ExecutionPlan:
         cd = None
         if compute_dtype is not None:
             cd = jnp.dtype(compute_dtype)
-            if jnp.issubdtype(cd, jnp.integer) and not meas.exact_int8:
+            if quantize.is_fp8(cd) and not quantize.fp8_supported(cd.name):
                 raise ValueError(
-                    f"compute_dtype={cd.name} requires an exactly "
-                    f"integer-valued transform, but measure {meas.name!r} is "
-                    f"not marked exact_int8 (its transform output would be "
-                    f"truncated)")
+                    f"compute_dtype={cd.name} is not supported by this "
+                    f"backend/jax version (probed, not assumed — see "
+                    f"core/quantize.fp8_supported); use int8 or bf16")
+        # Kendall auto-dispatch: above the benchmarked crossover the
+        # canonical kendall measures swap to their O(l log l) merge-sort
+        # variants (identity-based, so explicit choices pass through)
+        meas = measures.resolve_tile_kernel(meas, l=l, compute_dtype=cd,
+                                            replicas=replicas)
+        if meas.tile_kernel is not None:
+            if cd is not None:
+                raise ValueError(
+                    f"measure {meas.name!r} computes on exact fractional "
+                    f"ranks; compute_dtype narrowing would corrupt their "
+                    f"tie structure (use measure='kendall_sign_gemm' for "
+                    f"the int8 sign-GEMM path)")
+            if replicas:
+                raise ValueError(
+                    f"measure {meas.name!r} has no replica mode; "
+                    f"significance runs use the sign-GEMM kendall path")
         spec, fused = measures.resolve_fusion(meas, fuse_epilogue, tile.l,
                                               clip=clip)
         per_dev = tiles_per_device(workload.job_count, p)
@@ -282,7 +298,12 @@ class ExecutionPlan:
                 f"row count {self.n_rows}")
         u = self._prepare_one(x)
         if u.shape[0] < self.n_pad:
-            u = jnp.pad(u, ((0, self.n_pad - u.shape[0]), (0, 0)))
+            rows = self.n_pad - u.shape[0]
+            if isinstance(u, Operand):
+                u = Operand(jnp.pad(u.data, ((0, rows), (0, 0))),
+                            jnp.pad(u.scale, (0, rows)))
+            else:
+                u = jnp.pad(u, ((0, rows), (0, 0)))
         return u
 
     # -- distribution (paper SSIII-D, C5) ------------------------------------
@@ -413,6 +434,8 @@ class ExecutionPlan:
             "n_rows": self.n_rows, "n_cols": self.n_cols, "l": self.l,
             "t": self.t, "l_blk": self.l_blk,
             "measure": self.measure.name,
+            "tile_kernel": (None if self.measure.tile_kernel is None
+                            else self.measure.tile_kernel.__name__),
             "workload": type(self.workload).__name__,
             "symmetric_grid": self.symmetric_grid,
             "compute_dtype": (None if self.compute_dtype is None
@@ -446,15 +469,50 @@ class ExecutionPlan:
         return np.minimum(base.reshape(-1), self.total_tiles - 1)
 
 
+def needs_row_scales(measure: measures.Measure, compute_dtype) -> bool:
+    """Whether the (measure, compute_dtype) pair takes the quantized path
+    (core/quantize.py: per-row absmax scales + in-kernel dequant) rather
+    than a plain astype.  True for integer dtypes on non-exact_int8
+    measures (the transform output is real-valued — rounding without a
+    scale would destroy it) and for every fp8 dtype (absmax pre-scaling
+    maps each row into the fp8 dynamic range).  exact_int8 measures keep
+    PR 2's plain int8 storage, bit-identical to before."""
+    if compute_dtype is None:
+        return False
+    cd = jnp.dtype(compute_dtype)
+    if quantize.is_fp8(cd):
+        return True
+    return bool(jnp.issubdtype(cd, jnp.integer)) and not measure.exact_int8
+
+
+def pad_scales(scale: Array, t: int) -> Array:
+    """Zero-pad per-row scales (n,) to the (n_pad,) row alignment —
+    padding rows dequantize to exact zeros, inert like zero operand rows."""
+    n = scale.shape[0]
+    n_pad = -(-n // t) * t
+    if n_pad == n:
+        return scale
+    return jnp.pad(scale, (0, n_pad - n))
+
+
 def prepare_operand_raw(x: Array, measure: measures.Measure, compute_dtype,
-                        t: int, l_blk: int) -> Array:
+                        t: int, l_blk: int):
     """The one operand-preparation pipeline: row transform at >= f32,
     optional narrowing to the stored compute dtype, zero-pad to kernel
     alignment.  Both ExecutionPlan.prepare*() and the serving layer's
     CorpusHandle call this — the serving bit-identity contract (batched
     answers == standalone corr()) depends on there being exactly one
-    implementation."""
+    implementation.
+
+    Quantizing dtypes (needs_row_scales) return an :class:`Operand`
+    carrying the quantized data plus its per-row dequantization scales;
+    everything downstream (executor, serving cache, replica builder)
+    threads the scales to the kernel, which dequantizes finished tiles in
+    VMEM.  All other dtypes return a plain array, exactly as before."""
     u = measure.transform(x, dtype=jnp.float32)
+    if needs_row_scales(measure, compute_dtype):
+        q, scale = quantize.quantize_rows(u, compute_dtype)
+        return Operand(pad_operands(q, t, l_blk), pad_scales(scale, t))
     if compute_dtype is not None:
         u = u.astype(compute_dtype)
     return pad_operands(u, t, l_blk)
@@ -474,7 +532,10 @@ def pad_operands(u: Array, t: int, l_blk: int) -> Array:
 __all__ = [
     "DEFAULT_REPLICA_CHUNK",
     "ExecutionPlan",
+    "Operand",
+    "needs_row_scales",
     "pad_operands",
+    "pad_scales",
     "prepare_operand_raw",
     "resolve_interpret",
     "tiles_per_device",

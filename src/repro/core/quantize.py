@@ -1,0 +1,156 @@
+"""Per-row absmax quantization for non-integer operand transforms.
+
+CoMet (arXiv:1705.08213) carries exascale all-pairs runs on aggressively
+quantized operands; this module brings the same trick to the non-integer
+measures (pearson/spearman/cosine/covariance), extending PR 2's
+``compute_dtype=`` seam below bf16:
+
+* int8: each transformed row is scaled by ``absmax_i / 127`` and rounded to
+  int8.  The tile kernel accumulates the int8 x int8 block dots exactly in
+  int32 (each block dot is bounded by ``l_blk * 127^2 < 2^31``), widens to
+  f32, and multiplies the finished tile by the outer product of the row
+  scales *in VMEM before the fused epilogue* — so dequantization never
+  costs a second HBM pass.
+* fp8 (``float8_e4m3fn``, fallback ``float8_e5m2``): same per-row absmax
+  pre-scaling, mapping each row into the fp8 dynamic range; the MXU (or
+  XLA's emulation) accumulates in f32.  Availability is *probed*, never
+  assumed — a tiny dot product decides once per process (lru_cache), and
+  callers (plan validation, benchmarks, CI) gracefully skip when the
+  backend or jax version lacks fp8 matmul support.
+
+The quantized operand travels as an :class:`Operand` — a plain host-side
+container of ``(data, scale)``, deliberately NOT a pytree: the executor
+unwraps it with ``operand_parts`` before every jit/shard_map boundary, so
+the traced functions keep plain-array signatures and the scale arrays ride
+as ordinary (replicated) inputs.
+
+Exactly-integer transforms (Kendall's +/-1 pair signs, ``exact_int8``
+measures) do NOT use this module — their int8 path stores the values
+directly with no scale, bit-identical to PR 2 (see plan.needs_row_scales).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Largest representable magnitude per quantized dtype: rows are scaled so
+# their absmax lands exactly on this value (full dynamic range, no overflow).
+QMAX = {
+    "int8": 127.0,
+    "float8_e4m3fn": 448.0,
+    "float8_e5m2": 57344.0,
+}
+
+
+@dataclasses.dataclass
+class Operand:
+    """A quantized operand: ``data`` (n_pad, l_pad) in the storage dtype and
+    ``scale`` (n_pad,) f32 per-row dequantization factors (absmax/qmax;
+    padding rows carry scale 0).  Plain container, not a pytree — unwrap
+    with :func:`operand_parts` before jit boundaries."""
+
+    data: Array
+    scale: Array
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    def __getitem__(self, idx) -> "Operand":
+        """Row-slice both data and scales together (serving's
+        ``CorpusHandle.operand()[: n]`` idiom)."""
+        return Operand(self.data[idx], self.scale[idx])
+
+
+def operand_parts(u) -> Tuple[Array, Optional[Array]]:
+    """Split an operand into (data, scale-or-None) — the executor calls this
+    at every jit/shard_map boundary so traced signatures stay plain."""
+    if isinstance(u, Operand):
+        return u.data, u.scale
+    return u, None
+
+
+def operand_data(u) -> Array:
+    return u.data if isinstance(u, Operand) else u
+
+
+def quantize_rows(u: Array, qdtype) -> Tuple[Array, Array]:
+    """Per-row absmax quantization of an f32 operand.
+
+    Returns ``(q, scale)``: ``q[i] = round_or_cast(u[i] / scale[i])`` in
+    ``qdtype`` and ``scale[i] = absmax_i / qmax`` (f32).  All-zero rows
+    (padding, constant-row transforms) get scale 0 and quantize to zero
+    rows — inert in the kernel exactly like f32 zero padding.
+    """
+    qdtype = jnp.dtype(qdtype)
+    qmax = np.float32(QMAX[qdtype.name])
+    u = u.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(u), axis=1)
+    scale = absmax / qmax
+    # zero rows: divide by 1 instead of 0 (values are all 0 anyway)
+    safe = jnp.where(scale > 0, scale, np.float32(1.0))
+    scaled = u / safe[:, None]
+    if jnp.issubdtype(qdtype, jnp.integer):
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(qdtype)
+    else:
+        q = jnp.clip(scaled, -qmax, qmax).astype(qdtype)
+    return q, scale.astype(jnp.float32)
+
+
+def is_fp8(dtype) -> bool:
+    try:
+        return jnp.dtype(dtype).name in ("float8_e4m3fn", "float8_e5m2")
+    except TypeError:
+        return False
+
+
+@functools.lru_cache(maxsize=None)
+def fp8_supported(name: str = "float8_e4m3fn") -> bool:
+    """Probe (once per process) whether the backend can actually matmul the
+    given fp8 dtype — CI's latest-jax lane asserts this is a *probe*, not an
+    assumption: older jax/CPU backends lacking fp8 record a graceful skip."""
+    try:
+        dt = jnp.dtype(name)
+        a = jnp.ones((8, 8), dt)
+        out = jax.lax.dot_general(a, a, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        jax.block_until_ready(out)
+        return bool(np.isfinite(np.asarray(out)).all())
+    except Exception:
+        return False
+
+
+def fp8_dtype() -> Optional[np.dtype]:
+    """The preferred supported fp8 dtype, or None if the backend has none."""
+    for name in ("float8_e4m3fn", "float8_e5m2"):
+        if fp8_supported(name):
+            return jnp.dtype(name)
+    return None
+
+
+__all__ = [
+    "QMAX",
+    "Operand",
+    "fp8_dtype",
+    "fp8_supported",
+    "is_fp8",
+    "operand_data",
+    "operand_parts",
+    "quantize_rows",
+]

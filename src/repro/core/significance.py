@@ -59,8 +59,9 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import measures
-from repro.core.plan import ExecutionPlan
+from repro.core import measures, quantize
+from repro.core.plan import ExecutionPlan, needs_row_scales
+from repro.core.quantize import Operand, operand_parts
 from repro.core.sinks import DenseSink, ExceedanceSink, TileSink
 from repro.kernels.pcc_tile import pcc_tiles
 from repro.runtime import faults
@@ -156,20 +157,27 @@ def pvalue_measure(plan: ExecutionPlan, spec: PermutationSpec) -> measures.Measu
 
 
 def replica_operand(plan: ExecutionPlan, keys: Array, *, method: str,
-                    columns: Array, cols_prepared: Array) -> Array:
+                    columns: Array, cols_prepared) -> Array:
     """Stacked column-operand variants for one replica chunk:
-    (len(keys), cols_pad, l_pad).
+    (len(keys), cols_pad, l_pad) — an Operand carrying (len(keys),
+    cols_pad) per-row scales when the plan quantizes its operands.
 
     Gather path (method == "permute" and measure.permute_gather): each
     replica gathers sample-columns of the already-prepared operand —
     transform(x[:, pi]) == transform(x)[:, pi] for these measures, so this
     skips the per-replica transform and bit-matches the legacy path (which
     permuted U).  Padding columns stay in place, so zero padding is
-    preserved.  Everything else re-transforms the reordered raw data
-    (`columns`), which is correct for any measure.
+    preserved.  For quantized operands the per-row absmax is permutation-
+    invariant, so the gather permutes the *quantized codes* and broadcasts
+    the one prepared scale vector across the replica axis — every replica
+    dequantizes bit-identically to the observed operand.  Everything else
+    re-transforms the reordered raw data (`columns`), which is correct for
+    any measure; quantized plans re-quantize each replica after its
+    transform (bootstrap resamples change per-row absmax).
     """
     l = plan.l
-    cols_pad, l_pad = cols_prepared.shape
+    cols_data, cols_scale = operand_parts(cols_prepared)
+    cols_pad, l_pad = cols_data.shape
     if method == "permute" and plan.measure.permute_gather:
         tail = jnp.arange(l, l_pad, dtype=jnp.int32)
 
@@ -177,9 +185,15 @@ def replica_operand(plan: ExecutionPlan, keys: Array, *, method: str,
             idx = jax.random.permutation(k, l)
             if l_pad > l:
                 idx = jnp.concatenate([idx.astype(jnp.int32), tail])
-            return jnp.take(cols_prepared, idx, axis=1)
+            return jnp.take(cols_data, idx, axis=1)
 
-        return jax.vmap(one)(keys)
+        stack = jax.vmap(one)(keys)
+        if cols_scale is None:
+            return stack
+        scales = jnp.broadcast_to(cols_scale[None], (keys.shape[0], cols_pad))
+        return Operand(stack, scales)
+
+    quantized = needs_row_scales(plan.measure, plan.compute_dtype)
 
     def one(k):
         if method == "bootstrap":
@@ -188,16 +202,22 @@ def replica_operand(plan: ExecutionPlan, keys: Array, *, method: str,
             idx = jax.random.permutation(k, l)
         ub = plan.measure.transform(jnp.take(columns, idx, axis=1),
                                     dtype=jnp.float32)
+        if quantized:
+            return quantize.quantize_rows(ub, plan.compute_dtype)
         if plan.compute_dtype is not None:
             ub = ub.astype(plan.compute_dtype)
-        return ub
+        return ub, None
 
-    stack = jax.vmap(one)(keys)
+    stack, scales = jax.vmap(one)(keys)
     pad_r = cols_pad - stack.shape[1]
     pad_l = l_pad - stack.shape[2]
     if pad_r or pad_l:
         stack = jnp.pad(stack, ((0, 0), (0, pad_r), (0, pad_l)))
-    return stack
+    if not quantized:
+        return stack
+    if pad_r:
+        scales = jnp.pad(scales, ((0, 0), (0, pad_r)))
+    return Operand(stack, scales)
 
 
 def _cmp_vals(plan: ExecutionPlan, raw):
@@ -260,6 +280,27 @@ def run_significance(
             f"ExecutionPlan.create(replicas=spec.iterations, ...)")
     keys = iteration_keys(spec)
     cols_prepared = u_pad if v_pad is None else v_pad
+    u_data, u_scale = operand_parts(u_pad)
+    v_data, v_scale = (operand_parts(v_pad) if v_pad is not None
+                       else (None, None))
+    cs_obs = u_scale if v_pad is None else v_scale
+    if (u_scale is None) != (cs_obs is None):
+        raise ValueError("quantized row operand paired with an unquantized "
+                         "column operand — both sides must be prepared by "
+                         "the same plan")
+
+    def rep_parts(reps):
+        rep_data, rep_scale = operand_parts(reps)
+        if (u_scale is None) != (rep_scale is None):
+            raise ValueError(
+                "replica stack quantization does not match the row operand "
+                "— a replica_source override must return an Operand with "
+                "(R, cols_pad) scales exactly when the plan quantizes its "
+                "operands (plan.compute_dtype="
+                f"{plan.compute_dtype}), got scales="
+                f"{'present' if rep_scale is not None else 'absent'}")
+        return rep_data, rep_scale
+
     grid_cols = plan.workload.grid_cols
     rchunks = plan.replica_chunk_sizes
 
@@ -303,9 +344,10 @@ def run_significance(
             faults.check("pass_launch")
             launch = plan.launch_sizes[k]
             j0 = plan.pass_offset(k)
-            raw = pcc_tiles(u_pad, j0, t=plan.t, l_blk=plan.l_blk,
+            raw = pcc_tiles(u_data, j0, t=plan.t, l_blk=plan.l_blk,
                             pass_tiles=launch, interpret=plan.interpret,
-                            epilogue=None, v_pad=v_pad, grid_cols=grid_cols)
+                            epilogue=None, v_pad=v_data, grid_cols=grid_cols,
+                            row_scale=u_scale, col_scale=cs_obs)
             ids = np.arange(j0, j0 + launch, dtype=np.int64)
             if need_r(k):
                 r_sink.consume(ids, _obs_tiles(plan, raw))
@@ -314,12 +356,14 @@ def run_significance(
                 abs_obs = _cmp_vals(plan, raw)
                 counts = jnp.zeros(raw.shape, jnp.int32)
                 for ci, rc, keys_c in chunk_slices():
-                    reps = replica_source(ci, keys_c)
-                    rep_raw = pcc_tiles(u_pad, j0, t=plan.t, l_blk=plan.l_blk,
+                    rep_data, rep_scale = rep_parts(replica_source(ci, keys_c))
+                    rep_raw = pcc_tiles(u_data, j0, t=plan.t, l_blk=plan.l_blk,
                                         pass_tiles=launch,
                                         interpret=plan.interpret,
-                                        epilogue=None, v_pad=reps,
-                                        grid_cols=grid_cols)
+                                        epilogue=None, v_pad=rep_data,
+                                        grid_cols=grid_cols,
+                                        row_scale=u_scale,
+                                        col_scale=rep_scale)
                     hits = _cmp_vals(plan, rep_raw) >= abs_obs[None]
                     counts = counts + jnp.sum(hits.astype(jnp.int32), axis=0)
                 p_sink.consume(ids, counts)
@@ -333,18 +377,28 @@ def run_significance(
             raise ValueError("shard_u supports the symmetric workload only "
                              "(one operand to shard); rectangular runs "
                              "replicate both operands")
-        rows = u_pad.shape[0]
+        rows = u_data.shape[0]
         rows_pad = -(-rows // plan.p) * plan.p
         if rows_pad != rows:
-            u_pad = jnp.pad(u_pad, ((0, rows_pad - rows), (0, 0)))
+            u_data = jnp.pad(u_data, ((0, rows_pad - rows), (0, 0)))
         in_spec = P(axes, None)
     else:
         in_spec = P(None, None)
-    u_in = jax.device_put(u_pad, NamedSharding(mesh, in_spec))
+    u_in = jax.device_put(u_data, NamedSharding(mesh, in_spec))
     rep_spec = P(None, None, None)
     rep_shard = NamedSharding(mesh, rep_spec)
-    v_in = (None if v_pad is None
-            else jax.device_put(v_pad, NamedSharding(mesh, P(None, None))))
+    v_in = (None if v_data is None
+            else jax.device_put(v_data, NamedSharding(mesh, P(None, None))))
+    # Quantized operands: the dequantization scales are tiny f32 vectors
+    # ((n_pad,) per side, (R, cols_pad) per replica chunk), so they
+    # replicate across the mesh even under shard_u — no gather in-shard.
+    has_s = u_scale is not None
+    s_row_in = s_col_in = None
+    if has_s:
+        srep = NamedSharding(mesh, P(None))
+        s_row_in = jax.device_put(jnp.asarray(u_scale, jnp.float32), srep)
+        s_col_in = jax.device_put(jnp.asarray(cs_obs, jnp.float32), srep)
+    rep_scale_shard = NamedSharding(mesh, P(None, None))
 
     def gathered(u: Array) -> Array:
         u_rep = u
@@ -363,42 +417,57 @@ def run_significance(
 
     def obs_fn(launch: int):
         if launch not in obs_fns:
-            def compute(u, v, off):
+            def compute(*args):
+                it = iter(args)
+                u = next(it)
+                v = next(it) if v_in is not None else None
+                su = next(it) if has_s else None
+                sv = next(it) if has_s else None
+                off = next(it)
                 u_rep = gathered(u) if shard_u else u
                 return pcc_tiles(u_rep, rank_j0(off), t=plan.t,
                                  l_blk=plan.l_blk, pass_tiles=launch,
                                  interpret=plan.interpret, epilogue=None,
-                                 v_pad=v, grid_cols=grid_cols)
+                                 v_pad=v, grid_cols=grid_cols,
+                                 row_scale=su, col_scale=sv)
 
-            if v_in is None:
-                obs_fns[launch] = shard_map(
-                    lambda u, off: compute(u, None, off), mesh=mesh,
-                    in_specs=(in_spec, P(None)), out_specs=P(axes),
-                    check_vma=False)
-            else:
-                obs_fns[launch] = shard_map(
-                    compute, mesh=mesh,
-                    in_specs=(in_spec, P(None, None), P(None)),
-                    out_specs=P(axes), check_vma=False)
+            specs = (in_spec,)
+            if v_in is not None:
+                specs += (P(None, None),)
+            if has_s:
+                specs += (P(None), P(None))
+            specs += (P(None),)
+            obs_fns[launch] = shard_map(
+                compute, mesh=mesh, in_specs=specs, out_specs=P(axes),
+                check_vma=False)
         return obs_fns[launch]
 
     def cnt_fn(launch: int, rc: int):
         # keyed by (launch, replicas): at most two launch sizes and two
         # chunk sizes occur per plan, so at most four traced variants
         if (launch, rc) not in cnt_fns:
-            def compute(u, reps, abs_obs, off):
+            def compute(*args):
+                it = iter(args)
+                u, reps = next(it), next(it)
+                su = next(it) if has_s else None
+                srep_c = next(it) if has_s else None
+                abs_obs, off = next(it), next(it)
                 u_rep = gathered(u) if shard_u else u
                 buf = pcc_tiles(u_rep, rank_j0(off), t=plan.t,
                                 l_blk=plan.l_blk, pass_tiles=launch,
                                 interpret=plan.interpret, epilogue=None,
-                                v_pad=reps, grid_cols=grid_cols)
+                                v_pad=reps, grid_cols=grid_cols,
+                                row_scale=su, col_scale=srep_c)
                 hits = _cmp_vals(plan, buf) >= abs_obs[None]
                 return jnp.sum(hits.astype(jnp.int32), axis=0)
 
+            specs = (in_spec, rep_spec)
+            if has_s:
+                specs += (P(None), P(None, None))
+            specs += (P(axes, None, None), P(None))
             cnt_fns[(launch, rc)] = shard_map(
-                compute, mesh=mesh,
-                in_specs=(in_spec, rep_spec, P(axes, None, None), P(None)),
-                out_specs=P(axes), check_vma=False)
+                compute, mesh=mesh, in_specs=specs, out_specs=P(axes),
+                check_vma=False)
         return cnt_fns[(launch, rc)]
 
     for k in range(k0, plan.n_pass):
@@ -407,8 +476,10 @@ def run_significance(
         faults.check("pass_launch")
         launch = plan.launch_sizes[k]
         off = jnp.full((1,), plan.pass_offset(k), jnp.int32)
-        args = (u_in, off) if v_in is None else (u_in, v_in, off)
-        raw = obs_fn(launch)(*args)
+        args = (u_in,) + (() if v_in is None else (v_in,))
+        if has_s:
+            args += (s_row_in, s_col_in)
+        raw = obs_fn(launch)(*args, off)
         ids, sel = plan.pass_selection(k)
         padded = plan.pass_padded_ids(k) if sel is not None else None
         if need_r(k):
@@ -422,8 +493,15 @@ def run_significance(
             abs_obs = _cmp_vals(plan, raw)
             counts = None
             for ci, rc, keys_c in chunk_slices():
-                reps = jax.device_put(replica_source(ci, keys_c), rep_shard)
-                c = cnt_fn(launch, rc)(u_in, reps, abs_obs, off)
+                rep_data, rep_scale = rep_parts(replica_source(ci, keys_c))
+                reps = jax.device_put(rep_data, rep_shard)
+                cargs = (u_in, reps)
+                if has_s:
+                    cargs += (s_row_in,
+                              jax.device_put(
+                                  jnp.asarray(rep_scale, jnp.float32),
+                                  rep_scale_shard))
+                c = cnt_fn(launch, rc)(*cargs, abs_obs, off)
                 counts = c if counts is None else counts + c
             if sel is None:
                 p_sink.consume(ids, counts)

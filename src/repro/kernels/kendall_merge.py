@@ -1,0 +1,245 @@
+"""O(l log l) merge-sort Kendall kernel (Knight's algorithm, batched).
+
+The sign-GEMM Kendall path (core/measures.pair_sign_transform) widens the
+sample axis to all C(l, 2) pairs — the operand grows as l², which caps it at
+small sample counts.  This module is the large-l replacement named by
+arXiv:1704.03767: per tile-row pair, concordant-minus-discordant is computed
+from *ranks* via Knight's O(l log l) formulation —
+
+    C - D = n0 - n1 - n2 + n3 - 2 * S
+
+with n0 = C(l, 2), n1/n2 = tied sample pairs within the row/column profile,
+n3 = jointly tied pairs, and S = the strict inversion count of the column
+ranks after lexicographically sorting by (row ranks, column ranks).  The
+operand is just the (n, l) fractional ranks — the pair axis never
+materialises.
+
+JAX-friendly fixed shapes: the lexsort/searchsorted/cummax building blocks
+are all static-shape; the inversion count runs the merge levels explicitly
+(log2(l) levels, each one jnp.sort + one vectorised searchsorted), padding
+to the next power of two with +inf tail sentinels.  Sentinel safety: padding
+is contiguous at the tail, so any merge block containing a sentinel only
+ever faces an all-sentinel right block — sentinels can never contribute
+inversions.
+
+Exactness: every count is an int32 (exact for l <= 65536, far past any
+realistic sample count), and C - D is integer-valued, so the tau-a output is
+*bitwise identical* to the sign-GEMM accumulator whenever that accumulator
+is itself exact (|C - D| < 2^24) — same EpilogueSpec, same sinks, same
+comparisons downstream.  tau-b multiplies C - D by the same per-row
+1/sqrt(n0 - n1) factors the tie-scaled sign transform uses.
+
+This is pure JAX (vmap/lax.map over the tile geometry), not a Pallas
+kernel: the inner loop is sort-bound, not MXU-bound, so Mosaic would buy
+nothing — and it runs compiled on every backend (no interpret penalty on
+CPU CI).  It presents the same launch signature as kernels/pcc_tile.pcc_tiles
+(plus the true sample count ``l``) so the executor routes either kernel
+through one seam (core/allpairs.launch_tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import job_coord_f32
+from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, EpilogueSpec
+
+# Measured sign-GEMM vs merge-sort crossover (benchmarks/kernels.py,
+# kernels/kendall_crossover rows, end-to-end corr() on this harness's
+# backend): below this sample count the sign-GEMM path wins despite its l²
+# operand; at and above it the merge path wins and keeps winning — the gap
+# grows superlinearly (measured 1.3x at l=96, 31x at l=256, 81x at l=384).
+# ExecutionPlan auto-dispatches on this bound
+# (core/measures.resolve_tile_kernel).
+KENDALL_MERGE_CROSSOVER_L = 96
+
+
+def _run_pair_count(key_new_run: jax.Array) -> jax.Array:
+    """Sum of C(c, 2) over maximal runs, given the new-run mask of a sorted
+    sequence.  cummax of the run-start index turns each element's offset
+    into its run into (idx - run_start); summing those telescopes to the
+    per-run pair counts."""
+    l = key_new_run.shape[0]
+    idx = jnp.arange(l, dtype=jnp.int32)
+    run_start = jax.lax.cummax(jnp.where(key_new_run, idx, 0))
+    return jnp.sum(idx - run_start)
+
+
+def _tie_pairs(row: jax.Array) -> jax.Array:
+    """Number of tied sample pairs within one profile: sum of C(c, 2) over
+    its equal-value runs (Knight's n1/n2 term).  int32."""
+    s = jnp.sort(row)
+    new_run = jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]])
+    return _run_pair_count(new_run)
+
+
+def row_tie_pairs(u: jax.Array) -> jax.Array:
+    """Per-row tie-pair counts of an (n, l) rank operand, int32 (n,)."""
+    return jax.vmap(_tie_pairs)(u)
+
+
+def _inversions(ys: jax.Array, l: int) -> jax.Array:
+    """Strict inversion count of ys (pairs i < j with ys[i] > ys[j]) via
+    explicit merge levels.  int32; exact for l <= 65536."""
+    lp2 = 1 if l <= 1 else 1 << (l - 1).bit_length()
+    a = ys.astype(jnp.float32)
+    if lp2 > l:
+        a = jnp.concatenate(
+            [a, jnp.full((lp2 - l,), jnp.inf, jnp.float32)])
+    inv = jnp.int32(0)
+    blk = 1
+    while blk < lp2:
+        pairs = a.reshape(-1, 2 * blk)
+        left, right = pairs[:, :blk], pairs[:, blk:]
+        # each block of size blk is sorted (loop invariant); count left
+        # elements strictly greater than each right element
+        cnt = blk - jax.vmap(
+            lambda lft, r: jnp.searchsorted(lft, r, side="right"))(left, right)
+        inv = inv + jnp.sum(cnt.astype(jnp.int32))
+        a = jnp.sort(pairs, axis=1).reshape(-1)
+        blk *= 2
+    return inv
+
+
+def _pair_terms(x: jax.Array, y: jax.Array, l: int):
+    """Knight's per-pair terms for two rank profiles: (n3, S)."""
+    order = jnp.lexsort((y, x))
+    xs, ys = x[order], y[order]
+    new_run = jnp.concatenate(
+        [jnp.ones((1,), bool), (xs[1:] != xs[:-1]) | (ys[1:] != ys[:-1])])
+    n3 = _run_pair_count(new_run)
+    s = _inversions(ys, l)
+    return n3, s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t", "l_blk", "pass_tiles", "interpret", "epilogue",
+                     "grid_cols", "l", "tau_b"),
+)
+def kendall_merge_tiles(
+    u_pad: jax.Array,
+    j_start: jax.Array,
+    *,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    pass_tiles: int,
+    interpret: bool = False,
+    epilogue: Optional[EpilogueSpec] = None,
+    v_pad: Optional[jax.Array] = None,
+    grid_cols: Optional[int] = None,
+    l: int,
+    tau_b: bool = False,
+) -> jax.Array:
+    """Compute `pass_tiles` consecutive Kendall tiles starting at tile id
+    `j_start` — the merge-sort analogue of kernels/pcc_tile.pcc_tiles.
+
+    u_pad: (n_pad, l_pad) *fractional rank* operand
+           (measures.kendall_rank_transform), zero-padded; the kernel
+           slices the true sample count ``l`` back out (zero-padding a rank
+           row would corrupt its tie structure — sliced, it cannot).
+    l:     true (unpadded) sample count — static.
+    tau_b: scale each C - D by the per-row 1/sqrt(n0 - n_ties) tie factors
+           (tau-b); False emits raw C - D (tau-a — the epilogue's div is
+           C(l, 2), exactly like the sign-GEMM path).
+    epilogue: the same EpilogueSpec the fused GEMM path uses, applied
+           through the one canonical EpilogueSpec.apply — outputs are
+           bit-identical to the fused kernel's.
+    interpret: accepted for signature parity and ignored — this is pure
+           JAX, compiled on every backend.
+
+    Replica stacks (3-D v_pad) are not supported: plan creation routes
+    significance runs to the sign-GEMM path (measures.resolve_tile_kernel).
+    Returns (pass_tiles, t, t) f32 tiles.
+    """
+    del l_blk, interpret
+    n_pad, l_pad = u_pad.shape
+    if n_pad % t or l > l_pad:
+        raise ValueError(f"u_pad {u_pad.shape} not aligned to t={t} / l={l}")
+    if l < 2:
+        raise ValueError(f"kendall needs at least 2 samples, got l={l}")
+    if pass_tiles <= 0:
+        raise ValueError(f"pass_tiles must be positive, got {pass_tiles}")
+    if v_pad is not None and v_pad.ndim != 2:
+        raise ValueError("the merge-sort kendall kernel has no replica "
+                         "mode — significance runs use the sign-GEMM path")
+    if v_pad is not None and grid_cols is None and v_pad.shape != u_pad.shape:
+        raise ValueError(
+            f"a 2-D second operand may ride the triangular bijection only "
+            f"when it matches u_pad exactly, got v_pad {v_pad.shape}")
+    v = u_pad if v_pad is None else v_pad
+    if grid_cols is not None and v.shape[-2] != grid_cols * t:
+        raise ValueError(
+            f"column operand {v.shape} does not match grid_cols={grid_cols} "
+            f"tiles of t={t}")
+    m = n_pad // t
+    total = (m * (m + 1) // 2) if grid_cols is None else m * grid_cols
+
+    u_l = u_pad[:, :l].astype(jnp.float32)
+    v_l = v[:, :l].astype(jnp.float32)
+    ties_u = row_tie_pairs(u_l)
+    ties_v = ties_u if v_pad is None else row_tie_pairs(v_l)
+    n0 = jnp.int32(l * (l - 1) // 2)
+
+    def tb_scale(n_tie):
+        # identical formula to pair_sign_tie_scaled_transform's row factor:
+        # nz = #non-tied pairs = n0 - n_tie; constant rows scale to 0
+        nz = (n0 - n_tie).astype(jnp.float32)
+        return jnp.where(nz > 0, 1.0 / jnp.sqrt(jnp.maximum(nz, 1.0)), 0.0)
+
+    def one_tile(i):
+        jt = jnp.minimum(jnp.asarray(j_start, jnp.int32) + i, total - 1)
+        if grid_cols is None:
+            y_t, x_t = job_coord_f32(m, jt)
+        else:
+            y_t, x_t = jt // grid_cols, jt % grid_cols
+        rblk = jax.lax.dynamic_slice(u_l, (y_t * t, 0), (t, l))
+        cblk = jax.lax.dynamic_slice(v_l, (x_t * t, 0), (t, l))
+        rt = jax.lax.dynamic_slice(ties_u, (y_t * t,), (t,))
+        ct = jax.lax.dynamic_slice(ties_v, (x_t * t,), (t,))
+
+        def one_row(args):
+            x, n1 = args
+
+            def one_col(y, n2):
+                n3, s = _pair_terms(x, y, l)
+                return (n0 - n1 - n2 + n3 - 2 * s).astype(jnp.float32)
+
+            return jax.vmap(one_col)(cblk, ct)
+
+        # lax.map over the t rows bounds live memory at one row x t cols of
+        # O(l) sort state; vmap over both axes would hold t^2 of it
+        cmd = jax.lax.map(one_row, (rblk, rt))
+        if tau_b:
+            cmd = cmd * (tb_scale(rt)[:, None] * tb_scale(ct)[None, :])
+        # padding/constant rows are exactly 0 by Knight's identity (S = 0,
+        # n1 = n0, n3 = n2), matching the sign path's zero rows
+        if epilogue is not None and not epilogue.is_identity():
+            cmd = epilogue.apply(cmd)
+        return cmd
+
+    return jax.lax.map(one_tile, jnp.arange(pass_tiles, dtype=jnp.int32))
+
+
+def kendall_merge_tile_kernel(u_pad, j_start, **kw):
+    """tau-a merge-sort tile kernel (Measure.tile_kernel entry point)."""
+    return kendall_merge_tiles(u_pad, j_start, tau_b=False, **kw)
+
+
+def kendall_tau_b_merge_tile_kernel(u_pad, j_start, **kw):
+    """tau-b merge-sort tile kernel (Measure.tile_kernel entry point)."""
+    return kendall_merge_tiles(u_pad, j_start, tau_b=True, **kw)
+
+
+__all__ = [
+    "KENDALL_MERGE_CROSSOVER_L",
+    "kendall_merge_tile_kernel",
+    "kendall_merge_tiles",
+    "kendall_tau_b_merge_tile_kernel",
+    "row_tie_pairs",
+]

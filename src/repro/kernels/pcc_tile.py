@@ -100,8 +100,9 @@ class EpilogueSpec:
         return vals
 
 
-def _kernel(jstart_ref, urow_ref, ucol_ref, out_ref, *, l_blocks: int,
-            epilogue: Optional[EpilogueSpec], replica: bool = False):
+def _kernel(jstart_ref, urow_ref, ucol_ref, *rest, l_blocks: int,
+            epilogue: Optional[EpilogueSpec], replica: bool = False,
+            scaled: bool = False):
     """Body: accumulate one (t, t) tile over the l (sample) axis, applying
     the fused epilogue at the last k-step (finished tiles only hit HBM).
 
@@ -109,7 +110,18 @@ def _kernel(jstart_ref, urow_ref, ucol_ref, out_ref, *, l_blocks: int,
     grid gains a leading replica axis and the column operand is a stacked
     (R, cols_pad, l_pad) array of permuted/resampled operand variants — the
     column block then carries a leading singleton replica dim to strip, and
-    the l axis moves to grid position 2."""
+    the l axis moves to grid position 2.
+
+    scaled=True is the quantized-operand path (core/quantize.py): two extra
+    per-row dequantization scale refs ride between the operands and the
+    output; the finished tile is multiplied by their outer product *before*
+    the epilogue at the final k-step, so dequantization is fused and never
+    costs a second HBM pass.  Applied whenever scales are present — also on
+    raw (epilogue=None) significance launches."""
+    if scaled:
+        srow_ref, scol_ref, out_ref = rest
+    else:
+        (out_ref,) = rest
     k = pl.program_id(2 if replica else 1)
 
     @pl.when(k == 0)
@@ -118,8 +130,9 @@ def _kernel(jstart_ref, urow_ref, ucol_ref, out_ref, *, l_blocks: int,
 
     ucol = ucol_ref[0] if replica else ucol_ref[...]
     # (t, l_blk) . (t, l_blk)^T on the MXU.  Float operands accumulate in
-    # f32; int8 operands (Kendall pair signs) accumulate exactly in int32
-    # per block, then widen to the f32 tile accumulator.
+    # f32; int8 operands (Kendall pair signs, or absmax-quantized rows)
+    # accumulate exactly in int32 per block, then widen to the f32 tile
+    # accumulator (exact: each block dot is bounded by l_blk * 127^2).
     if jnp.issubdtype(urow_ref.dtype, jnp.integer):
         part = jax.lax.dot_general(
             urow_ref[...],
@@ -129,17 +142,27 @@ def _kernel(jstart_ref, urow_ref, ucol_ref, out_ref, *, l_blocks: int,
         ).astype(jnp.float32)
     else:
         part = jax.lax.dot_general(
-            urow_ref[...],
-            ucol,
+            urow_ref[...].astype(jnp.float32) if scaled else urow_ref[...],
+            ucol.astype(jnp.float32) if scaled else ucol,
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
     out_ref[...] += part
 
-    if epilogue is not None and not epilogue.is_identity():
+    # Dequantization and epilogue share ONE final-k block so their order is
+    # structural (scales first, then div/clip) — never two racing pl.when's.
+    needs_fin = scaled or (epilogue is not None and not epilogue.is_identity())
+    if needs_fin:
         @pl.when(k == l_blocks - 1)
         def _finalize():
-            out_ref[...] = epilogue.apply(out_ref[...])
+            acc = out_ref[...]
+            if scaled:
+                srow = srow_ref[0]
+                scol = scol_ref[0, 0] if replica else scol_ref[0]
+                acc = acc * (srow[:, None] * scol[None, :])
+            if epilogue is not None and not epilogue.is_identity():
+                acc = epilogue.apply(acc)
+            out_ref[...] = acc
 
 
 def _row_map(i, k, jstart_ref, *, m: int, total: int):
@@ -173,6 +196,37 @@ def _grid_col_map(i, k, jstart_ref, *, mc: int, total: int):
 def _out_map(i, k, jstart_ref, *, m: int, total: int):
     del k, jstart_ref
     return i, 0, 0
+
+
+# Scale index maps (quantized operands): the per-row scales are reshaped to
+# (m, t) so each tile pulls one (1, t) scale block.  They follow the same
+# tile-id bijection as their operand, but ignore the k axis (block col 0).
+
+
+def _scale_row_map(i, k, jstart_ref, *, m: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    y_t, _ = job_coord_f32(m, jt)
+    return y_t, 0
+
+
+def _scale_col_map(i, k, jstart_ref, *, m: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    _, x_t = job_coord_f32(m, jt)
+    return x_t, 0
+
+
+def _scale_grid_row_map(i, k, jstart_ref, *, mc: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return jt // mc, 0
+
+
+def _scale_grid_col_map(i, k, jstart_ref, *, mc: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return jt - (jt // mc) * mc, 0
 
 
 # Replica-axis index maps (significance workload): the grid is
@@ -211,6 +265,32 @@ def _rep_out_map(r, i, k, jstart_ref, *, m: int, total: int):
     return r, i, 0, 0
 
 
+def _rep_scale_row_map(r, i, k, jstart_ref, *, m: int, total: int):
+    del r, k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    y_t, _ = job_coord_f32(m, jt)
+    return y_t, 0
+
+
+def _rep_scale_col_map(r, i, k, jstart_ref, *, m: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    _, x_t = job_coord_f32(m, jt)
+    return r, x_t, 0
+
+
+def _rep_scale_grid_row_map(r, i, k, jstart_ref, *, mc: int, total: int):
+    del r, k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return jt // mc, 0
+
+
+def _rep_scale_grid_col_map(r, i, k, jstart_ref, *, mc: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return r, jt - (jt // mc) * mc, 0
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("t", "l_blk", "pass_tiles", "interpret", "epilogue",
@@ -227,6 +307,8 @@ def pcc_tiles(
     epilogue: Optional[EpilogueSpec] = None,
     v_pad: Optional[jax.Array] = None,
     grid_cols: Optional[int] = None,
+    row_scale: Optional[jax.Array] = None,
+    col_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Compute `pass_tiles` consecutive tiles starting at tile id `j_start`
     (runtime scalar), following paper Alg. 1.
@@ -251,7 +333,17 @@ def pcc_tiles(
            symmetric workload, bit-identical to the historical kernel).  An
            int selects the rectangular grid family: tile ids number an
            (m_rows x grid_cols) grid row-major, y = jt // grid_cols indexes
-           U and x = jt % grid_cols indexes V.
+           U and x = jt % grid_cols indexes V.  A 2-D v_pad of u_pad's
+           exact shape may also ride the triangle (grid_cols=None): the
+           masked-symmetric composite's cross-component GEMMs
+           (values . mask^T etc.) are symmetric tile-by-tile under the
+           needs_symmetrize mirror, so they too need only the upper half.
+    row_scale / col_scale: optional (n_pad,)-shaped f32 per-row
+           dequantization scales (col_scale (R, cols_pad) for replica
+           stacks) — present iff the operands were absmax-quantized
+           (core/quantize.py).  The kernel multiplies each finished tile by
+           the scale outer product before the epilogue.  Must be given
+           together (pass the same array twice for symmetric runs).
     Returns (pass_tiles, t, t) f32 tile results (R' in Alg. 1).
     """
     n_pad, l_pad = u_pad.shape
@@ -266,16 +358,24 @@ def pcc_tiles(
         if replicas <= 0:
             raise ValueError(f"replica stack {v_pad.shape} is empty")
     elif v_pad is not None and grid_cols is None:
-        raise ValueError("a second operand (v_pad) requires grid_cols — the "
-                         "triangular bijection is single-operand (only a 3-D "
-                         "replica stack may ride the triangle)")
+        if v_pad.shape != u_pad.shape:
+            raise ValueError(
+                f"a 2-D second operand may ride the triangular bijection "
+                f"only when it matches u_pad exactly (symmetric composite "
+                f"GEMMs), got v_pad {v_pad.shape} vs u_pad {u_pad.shape}")
     v = u_pad if v_pad is None else v_pad
+    if (row_scale is None) != (col_scale is None):
+        raise ValueError("row_scale and col_scale must be given together "
+                         "(pass the same scales twice for symmetric runs)")
+    scaled = row_scale is not None
     m = n_pad // t
     if grid_cols is None:
         total = m * (m + 1) // 2
         if replicas is None:
             row_map = functools.partial(_row_map, m=m, total=total)
             col_map = functools.partial(_col_map, m=m, total=total)
+            smaps = (functools.partial(_scale_row_map, m=m, total=total),
+                     functools.partial(_scale_col_map, m=m, total=total))
         else:
             if v.shape[1:] != (n_pad, l_pad):
                 raise ValueError(
@@ -283,6 +383,8 @@ def pcc_tiles(
                     f"({n_pad}, {l_pad}) operand variants")
             row_map = functools.partial(_rep_row_map, m=m, total=total)
             col_map = functools.partial(_rep_col_map, m=m, total=total)
+            smaps = (functools.partial(_rep_scale_row_map, m=m, total=total),
+                     functools.partial(_rep_scale_col_map, m=m, total=total))
     else:
         if v.shape[-1] != l_pad or v.shape[-2] != grid_cols * t:
             raise ValueError(
@@ -294,21 +396,31 @@ def pcc_tiles(
                                         total=total)
             col_map = functools.partial(_grid_col_map, mc=grid_cols,
                                         total=total)
+            smaps = (functools.partial(_scale_grid_row_map, mc=grid_cols,
+                                       total=total),
+                     functools.partial(_scale_grid_col_map, mc=grid_cols,
+                                       total=total))
         else:
             row_map = functools.partial(_rep_grid_row_map, mc=grid_cols,
                                         total=total)
             col_map = functools.partial(_rep_grid_col_map, mc=grid_cols,
                                         total=total)
+            smaps = (functools.partial(_rep_scale_grid_row_map, mc=grid_cols,
+                                       total=total),
+                     functools.partial(_rep_scale_grid_col_map, mc=grid_cols,
+                                       total=total))
     l_blocks = l_pad // l_blk
 
     kernel = functools.partial(_kernel, l_blocks=l_blocks, epilogue=epilogue,
-                               replica=replicas is not None)
+                               replica=replicas is not None, scaled=scaled)
     if replicas is None:
         grid = (pass_tiles, l_blocks)
         in_specs = [
             pl.BlockSpec((t, l_blk), row_map),
             pl.BlockSpec((t, l_blk), col_map),
         ]
+        scale_specs = [pl.BlockSpec((1, t), smaps[0]),
+                       pl.BlockSpec((1, t), smaps[1])]
         out_specs = pl.BlockSpec(
             (1, t, t), functools.partial(_out_map, m=m, total=total))
         out_shape = (pass_tiles, t, t)
@@ -320,9 +432,25 @@ def pcc_tiles(
             pl.BlockSpec((t, l_blk), row_map),
             pl.BlockSpec((1, t, l_blk), col_map),
         ]
+        scale_specs = [pl.BlockSpec((1, t), smaps[0]),
+                       pl.BlockSpec((1, 1, t), smaps[1])]
         out_specs = pl.BlockSpec(
             (1, 1, t, t), functools.partial(_rep_out_map, m=m, total=total))
         out_shape = (replicas, pass_tiles, t, t)
+
+    operands = [jnp.asarray(j_start, jnp.int32).reshape(1), u_pad, v]
+    if scaled:
+        # scales arrive per padded row (n_pad,) — or (R, cols_pad) for a
+        # replica-stacked column operand — and are reshaped so each tile's
+        # scale block is one (.., 1, t) row of the (.., m, t) layout
+        in_specs = in_specs + scale_specs
+        srow2d = jnp.asarray(row_scale, jnp.float32).reshape(m, t)
+        cs = jnp.asarray(col_scale, jnp.float32)
+        if replicas is None:
+            scol2d = cs.reshape(v.shape[0] // t, t)
+        else:
+            scol2d = cs.reshape(replicas, v.shape[1] // t, t)
+        operands += [srow2d, scol2d]
 
     out = pl.pallas_call(
         kernel,
@@ -334,7 +462,7 @@ def pcc_tiles(
         ),
         out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
         interpret=interpret,
-    )(jnp.asarray(j_start, jnp.int32).reshape(1), u_pad, v)
+    )(*operands)
     return out
 
 

@@ -7,7 +7,8 @@ The contract under test (ISSUE 2 acceptance criteria):
     devices) both sharded paths;
   * bf16 operand narrowing stays within oracle tolerance;
   * the int8 Kendall pair-sign path is exact against the literal tau-a
-    oracle and rejected for non-integer-valued transforms;
+    oracle; int8 for non-integer-valued transforms routes through the
+    per-row absmax quantized Operand path (core/quantize.py);
   * assembly never falls back to a per-tile host job_coord loop.
 """
 
@@ -217,11 +218,20 @@ def test_int8_kendall_exact_vs_literal(path):
         np.testing.assert_array_equal(got, f32)
 
 
-def test_int8_rejected_for_noninteger_transforms():
+def test_int8_quantizes_noninteger_transforms():
+    """int8 on non-integer-valued transforms is no longer rejected: prepare
+    returns a quantized Operand (int8 codes + f32 per-row scales), while the
+    exact-int8 Kendall sign path keeps its legacy plain-array contract."""
+    from repro.core.quantize import Operand
+
     x = _x(8, 8, seed=8)
     for name in ["pearson", "spearman", "cosine", "covariance"]:
-        with pytest.raises(ValueError, match="exact"):
-            prepare(x, t=8, l_blk=8, measure=name, compute_dtype=jnp.int8)
+        u, plan = prepare(x, t=8, l_blk=8, measure=name,
+                          compute_dtype=jnp.int8)
+        assert isinstance(u, Operand), name
+        assert u.data.dtype == jnp.int8
+        assert u.scale.dtype == jnp.float32
+        assert u.scale.shape == (u.data.shape[0],)
 
 
 def test_prepare_int8_kendall_dtype_and_values():

@@ -1,0 +1,260 @@
+"""Merge-sort Kendall kernel + crossover auto-dispatch suite (ISSUE 8).
+
+Contracts under test:
+  * the O(l log l) merge path (Knight's algorithm) is *bitwise identical*
+    to the int8 sign-GEMM accumulator for tau-a, and matches scipy's tau-b
+    on tie-heavy inputs on BOTH paths;
+  * ExecutionPlan auto-dispatches on KENDALL_MERGE_CROSSOVER_L — verified
+    by a runtime kernel-choice spy, not just plan metadata — and the
+    forced variants (kendall_sign_gemm / kendall_merge) escape it;
+  * above the crossover the prepared operand is O(l), never the O(l²)
+    pair expansion (the interpret-mode CPU bugfix): asserted on the
+    prepared shape and on peak retained host-array bytes;
+  * unsupported combinations fail loudly at plan creation.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import measures
+from repro.core.allpairs import prepare
+from repro.core.api import corr
+from repro.core.plan import ExecutionPlan
+from repro.kernels import kendall_merge
+from repro.kernels.kendall_merge import (KENDALL_MERGE_CROSSOVER_L,
+                                         kendall_merge_tiles, row_tie_pairs)
+
+T, LBLK = 8, 8
+BIG_L = max(KENDALL_MERGE_CROSSOVER_L, 256) + 44  # above crossover, odd pad
+
+
+def _x(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, l)).astype(np.float32))
+
+
+def _ties(n, l, seed=1, levels=4):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, levels, (n, l)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Exactness: merge == sign bitwise (tau-a), scipy oracle (tau-b)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("data", ["float", "ties"])
+def test_tau_a_merge_bitwise_equals_sign_gemm(data):
+    """C - D is integer-valued and both paths compute it exactly, so the
+    finalized tau-a matrices are bit-for-bit identical."""
+    x = _x(13, 21, seed=3) if data == "float" else _ties(13, 21, seed=4)
+    sign = np.asarray(corr(x, measure="kendall_sign_gemm", t=T, l_blk=LBLK))
+    merge = np.asarray(corr(x, measure="kendall_merge", t=T, l_blk=LBLK))
+    np.testing.assert_array_equal(sign, merge)
+
+
+def test_tau_a_merge_matches_literal_oracle():
+    x = _x(9, 17, seed=5)
+    lit = measures.kendall_tau_a_literal(np.asarray(x))
+    got = np.asarray(corr(x, measure="kendall_merge", t=T, l_blk=LBLK))
+    assert np.abs(got - lit).max() < 1e-6
+
+
+@pytest.mark.parametrize("name", ["kendall_tau_b_sign_gemm",
+                                  "kendall_tau_b_merge"])
+def test_tau_b_tie_heavy_matches_scipy(name):
+    scipy_stats = pytest.importorskip("scipy.stats")
+    x = _ties(8, 30, seed=6, levels=3)  # heavy ties: ~10 samples per level
+    got = np.asarray(corr(x, measure=name, t=T, l_blk=LBLK))
+    xn = np.asarray(x)
+    for i in range(xn.shape[0]):
+        for j in range(i, xn.shape[0]):
+            ref = scipy_stats.kendalltau(xn[i], xn[j], variant="b").statistic
+            if np.isnan(ref):
+                ref = 0.0  # constant rows: engine emits 0, scipy nan
+            assert abs(got[i, j] - ref) < 1e-6, (name, i, j)
+
+
+def test_merge_constant_and_padding_rows_exactly_zero():
+    x = _x(6, 20, seed=7)
+    x = x.at[2].set(1.5)
+    for name in ("kendall_merge", "kendall_tau_b_merge"):
+        got = np.asarray(corr(x, measure=name, t=T, l_blk=LBLK))
+        np.testing.assert_array_equal(got[2], 0.0)
+        np.testing.assert_array_equal(got[:, 2], 0.0)
+
+
+def test_row_tie_pairs_counts():
+    u = jnp.asarray([[1., 1., 2., 2., 2.],   # C(2,2)+C(3,2) = 1+3
+                     [1., 2., 3., 4., 5.],   # no ties
+                     [7., 7., 7., 7., 7.]])  # C(5,2) = 10
+    np.testing.assert_array_equal(np.asarray(row_tie_pairs(u)), [4, 0, 10])
+
+
+def test_rectangular_grid_merge_matches_sign():
+    x, y = _x(10, 19, seed=8), _x(14, 19, seed=9)
+    sign = np.asarray(corr(x, y, measure="kendall_sign_gemm",
+                           t=T, l_blk=LBLK))
+    merge = np.asarray(corr(x, y, measure="kendall_merge", t=T, l_blk=LBLK))
+    np.testing.assert_array_equal(sign, merge)
+
+
+# ---------------------------------------------------------------------------
+# Crossover auto-dispatch (kernel-choice spy)
+# ---------------------------------------------------------------------------
+
+
+def _spy(monkeypatch):
+    calls = []
+    real = kendall_merge_tiles
+
+    def wrapper(u_pad, j_start, **kw):
+        calls.append(kw.get("l"))
+        return real(u_pad, j_start, **kw)
+
+    monkeypatch.setattr(kendall_merge, "kendall_merge_tiles", wrapper)
+    return calls
+
+
+def test_dispatch_above_crossover_uses_merge(monkeypatch):
+    calls = _spy(monkeypatch)
+    x = _x(10, BIG_L, seed=10)
+    plan = ExecutionPlan.create(10, BIG_L, t=T, l_blk=LBLK, measure="kendall")
+    assert plan.measure is measures.KENDALL_MERGE
+    assert plan.spec_dict()["tile_kernel"] == "kendall_merge_tile_kernel"
+    corr(x, measure="kendall", t=T, l_blk=LBLK)
+    assert calls and all(c == BIG_L for c in calls)
+
+
+def test_dispatch_below_crossover_uses_sign_gemm(monkeypatch):
+    calls = _spy(monkeypatch)
+    l = KENDALL_MERGE_CROSSOVER_L - 1
+    plan = ExecutionPlan.create(10, l, t=T, l_blk=LBLK, measure="kendall")
+    assert plan.measure is measures.KENDALL
+    assert plan.spec_dict()["tile_kernel"] is None
+    corr(_x(10, l, seed=11), measure="kendall", t=T, l_blk=LBLK)
+    assert calls == []
+
+
+def test_forced_variants_escape_dispatch(monkeypatch):
+    calls = _spy(monkeypatch)
+    # sign forced above the crossover
+    plan = ExecutionPlan.create(8, BIG_L, t=T, l_blk=LBLK,
+                                measure="kendall_sign_gemm")
+    assert plan.measure.tile_kernel is None
+    corr(_x(8, BIG_L, seed=12), measure="kendall_sign_gemm", t=T, l_blk=LBLK)
+    assert calls == []
+    # merge forced below the crossover
+    plan = ExecutionPlan.create(8, 16, t=T, l_blk=LBLK,
+                                measure="kendall_merge")
+    assert plan.measure is measures.KENDALL_MERGE
+    corr(_x(8, 16, seed=13), measure="kendall_merge", t=T, l_blk=LBLK)
+    assert calls and all(c == 16 for c in calls)
+
+
+def test_dispatch_stays_sign_for_int8_and_replicas():
+    meas = measures.resolve_tile_kernel(measures.KENDALL, l=BIG_L,
+                                        compute_dtype=jnp.dtype(jnp.int8))
+    assert meas is measures.KENDALL
+    meas = measures.resolve_tile_kernel(measures.KENDALL, l=BIG_L,
+                                        replicas=8)
+    assert meas is measures.KENDALL
+    meas = measures.resolve_tile_kernel(measures.KENDALL_B, l=BIG_L)
+    assert meas is measures.KENDALL_B_MERGE
+
+
+def test_tau_b_dispatches_too():
+    plan = ExecutionPlan.create(8, BIG_L, t=T, l_blk=LBLK,
+                                measure="kendall_tau_b")
+    assert plan.measure is measures.KENDALL_B_MERGE
+
+
+# ---------------------------------------------------------------------------
+# No O(l²) operand above the crossover (interpret-mode CPU bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_merge_path_operand_is_linear_in_l():
+    """Above the crossover the prepared Kendall operand is the (n_pad,
+    l_pad) rank matrix — the C(l, 2) pair expansion never materializes, in
+    any live host array."""
+    n, l = 10, BIG_L
+    before = {id(a) for a in jax.live_arrays()}
+    u, plan = prepare(_x(n, l, seed=14), t=T, l_blk=LBLK, measure="kendall")
+    l_pad = -(-l // LBLK) * LBLK
+    assert u.shape[1] == l_pad  # O(l), not l*(l-1)/2
+    r = corr(_x(n, l, seed=14), measure="kendall", t=T, l_blk=LBLK)
+    r.block_until_ready()
+    pair_bytes = n * (l * (l - 1) // 2)  # the int8 pair operand's size
+    peak = max((a.nbytes for a in jax.live_arrays()
+                if id(a) not in before), default=0)
+    assert peak < pair_bytes / 4, (peak, pair_bytes)
+
+
+def test_sign_path_operand_is_quadratic_in_l():
+    """Contrast pin: below the crossover the sign-GEMM really does widen
+    the sample axis to all pairs (why the merge path exists)."""
+    n, l = 6, 40
+    u, plan = prepare(_x(n, l, seed=15), t=T, l_blk=LBLK,
+                      measure="kendall_sign_gemm")
+    assert u.shape[1] >= l * (l - 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# Loud failures for unsupported combinations
+# ---------------------------------------------------------------------------
+
+
+def test_merge_with_compute_dtype_raises():
+    with pytest.raises(ValueError, match="kendall_sign_gemm"):
+        ExecutionPlan.create(8, BIG_L, t=T, l_blk=LBLK,
+                             measure="kendall_merge",
+                             compute_dtype=jnp.int8)
+
+
+def test_merge_with_replicas_raises():
+    with pytest.raises(ValueError, match="replica"):
+        ExecutionPlan.create(8, BIG_L, t=T, l_blk=LBLK,
+                             measure="kendall_merge", replicas=4)
+
+
+def test_merge_dense_reference_delegates_to_sign_twin():
+    # The merge variants have a custom tile kernel (no inner-product
+    # operand), but they compute exactly the sign-GEMM twin's statistic —
+    # dense_reference answers via the twin instead of raising.
+    x = _x(6, 14)
+    np.testing.assert_array_equal(
+        np.asarray(measures.dense_reference(x, measure="kendall_merge")),
+        np.asarray(measures.dense_reference(x, measure="kendall")))
+    np.testing.assert_array_equal(
+        np.asarray(measures.dense_reference(x, measure="kendall_tau_b_merge")),
+        np.asarray(measures.dense_reference(x, measure="kendall_tau_b")))
+    # A user-registered custom-kernel measure with no twin still raises.
+    custom = dataclasses.replace(measures.KENDALL_MERGE, name="custom_merge")
+    with pytest.raises(ValueError, match="inner product"):
+        measures.dense_reference(x, measure=custom)
+
+
+def test_merge_kernel_input_validation():
+    u = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="at least 2"):
+        kendall_merge_tiles(u, 0, t=8, l_blk=8, pass_tiles=1, l=1)
+    with pytest.raises(ValueError, match="replica"):
+        kendall_merge_tiles(u, 0, t=8, l_blk=8, pass_tiles=1, l=8,
+                            v_pad=jnp.zeros((2, 8, 8), jnp.float32))
+
+
+def test_significance_with_kendall_uses_sign_path_end_to_end():
+    """corr(pvalues=) on large-l Kendall silently routes to the sign path
+    (the merge kernel has no replica mode) and still answers."""
+    from repro.core.significance import PermutationSpec
+    x = _x(6, 24, seed=16)
+    r, p = corr(x, measure="kendall", t=T, l_blk=LBLK,
+                pvalues=PermutationSpec(iterations=6, key=1))
+    ref = np.asarray(corr(x, measure="kendall", t=T, l_blk=LBLK))
+    np.testing.assert_array_equal(np.asarray(r), ref)
+    assert np.asarray(p).min() >= 1.0 / 7.0 - 1e-7

@@ -1,0 +1,272 @@
+"""Quantized-operand regression suite (ISSUE 8 tentpole b).
+
+Error-budget tier: pinned per-measure max |Δr| tolerances for bf16 / int8 /
+fp8 operands against the f32 pipeline on adversarial inputs — constant
+rows, tiny-variance rows, ±absmax outlier rows, tiny-magnitude rows.
+Budgets carry ~2-3x headroom over measured worst cases (see docs/measures.md
+for the matrix); a regression that blows one signals a real numerics change,
+not noise.
+
+Plus the quantization unit contracts (per-row absmax codes, zero-row
+inertness, Operand plumbing), dequant-oracle exactness for the int8 GEMM,
+fp8 probe semantics (probed, never assumed), significance and serving
+integration, and sharded parity in a subprocess mesh.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import measures
+from repro.core.allpairs import prepare
+from repro.core.api import corr
+from repro.core.plan import ExecutionPlan, needs_row_scales
+from repro.core.quantize import (Operand, fp8_dtype, fp8_supported,
+                                 operand_parts, quantize_rows)
+from repro.core.significance import PermutationSpec
+
+T, LBLK = 8, 8
+
+
+def _adversarial(n=24, l=96, seed=42):
+    """Inputs chosen to stress absmax scaling: constant rows (zero
+    transform), near-constant rows (tiny variance), a row whose ±absmax
+    outliers dwarf every other sample, a tiny-magnitude row, sparse
+    spikes."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, l)).astype(np.float32)
+    x[0] = 3.25
+    x[1] = 1.0 + 1e-6 * rng.standard_normal(l)
+    x[2, 0], x[2, 1] = 1e4, -1e4
+    x[3] *= 1e-5
+    x[4, ::7] = 50.0
+    return jnp.asarray(x)
+
+
+def _fp8():
+    d = fp8_dtype()
+    if d is None:
+        pytest.skip("no fp8 matmul support on this backend")
+    return d
+
+
+# ---------------------------------------------------------------------------
+# quantize_rows unit contracts
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_rows_int8_roundtrip_and_range():
+    x = np.asarray(_adversarial())
+    q, s = quantize_rows(jnp.asarray(x), jnp.int8)
+    q, s = np.asarray(q, np.float32), np.asarray(s)
+    assert np.abs(q).max() <= 127
+    # round-to-nearest: each dequantized element within half a step
+    nz = s > 0
+    err = np.abs(q[nz] * s[nz, None] - x[nz])
+    assert (err <= 0.5 * s[nz, None] + 1e-7).all()
+    # scales really are per-row absmax / qmax
+    np.testing.assert_allclose(s[nz], np.abs(x[nz]).max(axis=1) / 127.0,
+                               rtol=1e-6)
+
+
+def test_quantize_rows_zero_rows_inert():
+    x = jnp.zeros((3, 16), jnp.float32)
+    q, s = quantize_rows(x, jnp.int8)
+    assert np.asarray(s).tolist() == [0.0, 0.0, 0.0]
+    np.testing.assert_array_equal(np.asarray(q), 0)
+
+
+def test_operand_plumbing_and_slicing():
+    u, plan = prepare(_adversarial(8, 24), t=T, l_blk=LBLK,
+                      compute_dtype=jnp.int8)
+    assert isinstance(u, Operand)
+    data, scale = operand_parts(u)
+    assert data.dtype == jnp.int8 and scale.shape == (data.shape[0],)
+    sub = u[:5]
+    assert sub.data.shape[0] == 5 and sub.scale.shape == (5,)
+    # plain arrays pass through operand_parts unchanged
+    d2, s2 = operand_parts(data)
+    assert d2 is data and s2 is None
+
+
+def test_needs_row_scales_matrix():
+    assert needs_row_scales(measures.PEARSON, jnp.int8)
+    assert not needs_row_scales(measures.PEARSON, None)
+    assert not needs_row_scales(measures.PEARSON, jnp.bfloat16)
+    # exact-int8 kendall sign path keeps its legacy plain-array contract
+    assert not needs_row_scales(measures.KENDALL, jnp.int8)
+    if fp8_dtype() is not None:
+        assert needs_row_scales(measures.PEARSON, fp8_dtype())
+        # fp8 is never exact — even integer-valued transforms get scales
+        assert needs_row_scales(measures.KENDALL, fp8_dtype())
+
+
+# ---------------------------------------------------------------------------
+# Error-budget tier: pinned |Δr| budgets vs f32 on adversarial inputs
+# ---------------------------------------------------------------------------
+
+# bounded measures: absolute budgets; covariance (unbounded): relative to
+# max |r_f32|.  Measured worst cases on _adversarial(): bf16 ~9.5e-4,
+# int8 ~3.3e-3, fp8(e4m3) ~2.2e-2 absolute; covariance rel bf16 ~3.2e-3,
+# int8 ~1.0e-5, fp8 ~1.7e-5.
+BUDGETS = {
+    ("pearson", "bf16"): 2.5e-3, ("pearson", "int8"): 8e-3,
+    ("pearson", "fp8"): 5e-2,
+    ("spearman", "bf16"): 2.5e-3, ("spearman", "int8"): 8e-3,
+    ("spearman", "fp8"): 5e-2,
+    ("cosine", "bf16"): 2.5e-3, ("cosine", "int8"): 8e-3,
+    ("cosine", "fp8"): 5e-2,
+    ("covariance", "bf16"): 1e-2, ("covariance", "int8"): 1e-4,
+    ("covariance", "fp8"): 5e-4,
+}
+
+
+def _cd(tag):
+    return {"bf16": jnp.bfloat16, "int8": jnp.int8,
+            "fp8": _fp8() if tag == "fp8" else None}[tag]
+
+
+@pytest.mark.parametrize("measure", ["pearson", "spearman", "cosine",
+                                     "covariance"])
+@pytest.mark.parametrize("tag", ["bf16", "int8", "fp8"])
+def test_error_budget(measure, tag):
+    x = _adversarial()
+    r32 = np.asarray(corr(x, measure=measure, t=T, l_blk=LBLK))
+    r = np.asarray(corr(x, measure=measure, t=T, l_blk=LBLK,
+                        compute_dtype=_cd(tag)))
+    err = np.abs(r - r32).max()
+    if measure == "covariance":
+        err /= max(np.abs(r32).max(), 1.0)
+    budget = BUDGETS[(measure, tag)]
+    assert err <= budget, f"{measure}/{tag}: {err:.3e} > budget {budget:.0e}"
+
+
+def test_int8_matches_dequant_dense_oracle():
+    """The tiled int8 path is *exactly* the dense dequantized GEMM: int8 x
+    int8 dot products accumulate exactly, and the kernel's scale outer
+    product + epilogue match the oracle's f32 arithmetic."""
+    x = _adversarial(16, 48)
+    u = measures.PEARSON.transform(x, dtype=jnp.float32)
+    q, s = quantize_rows(u, jnp.int8)
+    raw = np.asarray(q, np.float32) @ np.asarray(q, np.float32).T
+    sc = np.asarray(s)
+    oracle = np.clip(raw * sc[:, None] * sc[None, :], -1.0, 1.0)
+    got = np.asarray(corr(x, t=T, l_blk=LBLK, compute_dtype=jnp.int8))
+    np.testing.assert_allclose(got, oracle, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fp8: probed, never assumed
+# ---------------------------------------------------------------------------
+
+
+def test_fp8_probe_is_cached_and_consistent():
+    for name in ("float8_e4m3fn", "float8_e5m2"):
+        assert fp8_supported(name) is fp8_supported(name)
+    d = fp8_dtype()
+    assert d is None or fp8_supported(jnp.dtype(d).name)
+
+
+def test_fp8_plan_raises_when_unsupported(monkeypatch):
+    import repro.core.plan as plan_mod
+    monkeypatch.setattr(plan_mod.quantize, "fp8_supported",
+                        lambda name: False)
+    with pytest.raises(ValueError, match="probed"):
+        ExecutionPlan.create(16, 32, t=T, l_blk=LBLK,
+                             compute_dtype=jnp.float8_e4m3fn)
+
+
+def test_fp8_end_to_end_when_supported():
+    d = _fp8()
+    x = _adversarial(16, 48)
+    r32 = np.asarray(corr(x, t=T, l_blk=LBLK))
+    r8 = np.asarray(corr(x, t=T, l_blk=LBLK, compute_dtype=d))
+    assert np.abs(r8 - r32).max() <= BUDGETS[("pearson", "fp8")]
+
+
+# ---------------------------------------------------------------------------
+# Integration: significance replica axis, serving, sharded parity
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_significance_permute_and_bootstrap():
+    """The replica axis carries scales: gather replicas broadcast the one
+    prepared scale vector (permutation-invariant absmax); bootstrap
+    re-quantizes each resampled replica.  The r leg must equal the plain
+    quantized run bitwise — same launches, same kernel."""
+    x = _adversarial(12, 64)
+    r_plain = np.asarray(corr(x, t=T, l_blk=LBLK, compute_dtype=jnp.int8))
+    for method in ("permute", "bootstrap"):
+        spec = PermutationSpec(iterations=16, key=11, method=method)
+        r, p = corr(x, t=T, l_blk=LBLK, compute_dtype=jnp.int8, pvalues=spec)
+        np.testing.assert_array_equal(np.asarray(r), r_plain)
+        p = np.asarray(p)
+        assert (p >= 1.0 / 17.0 - 1e-7).all() and (p <= 1.0).all()
+
+
+def test_quantized_significance_chunk_invariance():
+    x = _adversarial(10, 40)
+    spec1 = PermutationSpec(iterations=12, key=5, chunk=3)
+    spec2 = PermutationSpec(iterations=12, key=5, chunk=12)
+    _, p1 = corr(x, t=T, l_blk=LBLK, compute_dtype=jnp.int8, pvalues=spec1)
+    _, p2 = corr(x, t=T, l_blk=LBLK, compute_dtype=jnp.int8, pvalues=spec2)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_serving_batched_quantized_bit_identical():
+    from repro.serving import CorpusHandle, Query, QueryBatcher
+    corpus = CorpusHandle(_adversarial(40, 12), t=T, l_blk=LBLK)
+    bat = QueryBatcher(corpus, t=T, l_blk=LBLK, compute_dtype=jnp.int8)
+    rng = np.random.default_rng(77)
+    probes = [jnp.asarray(rng.standard_normal((m, 12)).astype(np.float32))
+              for m in (5, 7)]
+    results, _ = bat.execute([Query(p) for p in probes])
+    for p, got in zip(probes, results):
+        ref = np.asarray(corr(p, corpus.x, t=T, l_blk=LBLK,
+                              compute_dtype=jnp.int8))
+        np.testing.assert_array_equal(np.asarray(got), ref)
+    # the corpus cache holds the quantized Operand — one transform total
+    assert corpus.stats()["misses"] == 1
+
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_sharded_quantized_parity():
+    """int8 (and fp8 when supported) corr + significance on an 8-device
+    mesh — including shard_u — bit-match the single-device quantized run:
+    scales replicate, data shards, the kernel sees identical blocks."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.api import corr
+        from repro.core.quantize import fp8_dtype
+        from repro.core.significance import PermutationSpec
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((20, 48)).astype(np.float32))
+        mesh = jax.make_mesh((8,), ("d",))
+        dts = [jnp.int8] + ([fp8_dtype()] if fp8_dtype() is not None else [])
+        for cd in dts:
+            ref = np.asarray(corr(x, t=8, l_blk=8, compute_dtype=cd))
+            for kw in ({}, {"shard_u": True}):
+                got = np.asarray(corr(x, t=8, l_blk=8, compute_dtype=cd,
+                                      mesh=mesh, **kw))
+                np.testing.assert_array_equal(got, ref)
+        spec = PermutationSpec(iterations=8, key=2)
+        r0, p0 = corr(x, t=8, l_blk=8, compute_dtype=jnp.int8, pvalues=spec)
+        r1, p1 = corr(x, t=8, l_blk=8, compute_dtype=jnp.int8, pvalues=spec,
+                      mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+        print("OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
