@@ -40,6 +40,7 @@ SUITE_MIN_BASELINE_US = {
     "table2": 5000.0,
     "fig2": 5000.0,
     "serving": 1000.0,
+    "streaming": 1000.0,
     "significance": 5000.0,
     "robustness": 5000.0,
 }

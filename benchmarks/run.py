@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary).
   fig2    — scalability vs device count                      (paper Fig. 2)
   kernels — tile/kernel microbenchmarks + grid-savings       (paper SSIII-C)
   serving — plan-cache hit/miss + batched vs serial queries  (serving layer)
+  streaming — incremental append vs cold rebuild, watch revalidation (live corpora)
   significance — replica-axis vs legacy batched p-values     (paper SSIV)
   robustness — recovery + CRC-checkpoint overhead            (fault harness)
 
@@ -23,7 +24,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: table1,table2,fig2,"
-                         "kernels,serving,significance,robustness")
+                         "kernels,serving,streaming,significance,robustness")
     ap.add_argument("--json", default="",
                     help="append this run as one trajectory point to the "
                          "given BENCH_*.json file (see common.save_trajectory)")
@@ -53,6 +54,9 @@ def main() -> None:
     if want("serving"):
         from benchmarks import serving
         serving.run()
+    if want("streaming"):
+        from benchmarks import streaming
+        streaming.run()
     if want("significance"):
         from benchmarks import significance
         significance.run()

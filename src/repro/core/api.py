@@ -331,7 +331,10 @@ def corr(
              the per-pass footprint, device loss shrinks onto the
              surviving mesh and continues — results stay bit-identical to
              an uninterrupted run.  Supported for plain (non-masked,
-             non-pvalues) runs.
+             non-pvalues) runs, symmetric and rectangular alike: the
+             coverage bitmap indexes global tile ids, so X-vs-Y grids —
+             including the streaming delta passes of
+             :mod:`repro.serving.live` — resume exactly like triangles.
     t / l_blk / max_tiles_per_pass / interpret / clip / fuse_epilogue /
     compute_dtype keep their ExecutionPlan semantics.
     """

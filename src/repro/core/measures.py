@@ -160,6 +160,64 @@ def pair_sign_tie_scaled_transform(x: Array, *, dtype=None) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Moment-form transforms (streaming corpora — serving/live.py)
+# ---------------------------------------------------------------------------
+# A transform whose only per-row statistics are running moments — the row
+# mean and the centered sum of squares M2 = sum((x - mean)^2) — can rebuild
+# any *single* row's transformed output from (raw row, mean, M2) alone.
+# That is the seam a live corpus needs: append/update of d rows costs
+# O(d·l) (transform just those rows from their maintained moments,
+# Welford-style) instead of re-transforming all n rows.  The rank
+# transforms (spearman, kendall*) have no moment form — ranks are order
+# statistics of the whole row, and the kendall pair expansion widens the
+# sample axis — so live corpora fall back to an exact full re-transform
+# for them (serving/corpus.py warns once per measure).
+#
+# Numerics deliberately mirror the full transforms (same centering, same
+# degenerate-row conventions), so a *freshly seeded* moment row matches the
+# cold transform; rows whose moments were maintained through delta merges
+# carry the accumulated float drift that the corpus's drift budget bounds.
+
+
+def pearson_from_moments(x: Array, mean: Array, m2: Array, l: int, *,
+                         dtype=None) -> Array:
+    """Eq. 4 from per-row moments: U_i = (X_i - mean_i) / sqrt(M2_i).
+    Mirrors pcc.transform's zero-variance convention (rows with
+    sqrt(M2) <= eps map to zeros)."""
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    norm = jnp.sqrt(jnp.maximum(m2.astype(acc), 0.0))[:, None]
+    centered = xa - mean.astype(acc)[:, None]
+    u = jnp.where(norm > pcc._VAR_EPS,
+                  centered / jnp.maximum(norm, 1e-300), 0.0)
+    return u.astype(dtype or x.dtype)
+
+
+def cosine_from_moments(x: Array, mean: Array, m2: Array, l: int, *,
+                        dtype=None) -> Array:
+    """L2 normalization from moments: ||X_i||^2 = M2_i + l * mean_i^2."""
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    sumsq = m2.astype(acc) + l * mean.astype(acc) ** 2
+    norm = jnp.sqrt(jnp.maximum(sumsq, 0.0))[:, None]
+    u = jnp.where(norm > 0, xa / jnp.where(norm > 0, norm, 1.0), 0.0)
+    return u.astype(dtype or x.dtype)
+
+
+def covariance_from_moments(x: Array, mean: Array, m2: Array, l: int, *,
+                            dtype=None) -> Array:
+    """Centering from moments: U_i = X_i - mean_i (M2 unused)."""
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    return (x.astype(acc) - mean.astype(acc)[:, None]).astype(dtype or x.dtype)
+
+
+def dot_from_moments(x: Array, mean: Array, m2: Array, l: int, *,
+                     dtype=None) -> Array:
+    """Identity (the dot measure has no per-row statistics)."""
+    return x.astype(dtype or x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Epilogues (elementwise maps on raw inner-product values)
 # ---------------------------------------------------------------------------
 # Built-in epilogues are pure static divisions.  The divisor functions below
@@ -246,6 +304,18 @@ class Measure:
     exact_int8: bool = False
     permute_gather: bool = False
     tile_kernel: Optional[Callable[..., Array]] = None
+    # from_moments(x_rows, mean, m2, l, dtype=) rebuilds the transformed
+    # rows from raw rows + per-row running moments — the incremental-
+    # maintenance seam of live corpora (serving/live.py).  None means the
+    # transform has no moment form (rank measures): a mutated corpus must
+    # re-transform exactly.
+    from_moments: Optional[Callable[..., Array]] = None
+
+    @property
+    def incremental(self) -> bool:
+        """Whether a live corpus can maintain this measure's prepared
+        operand from running per-row moments (O(delta·l) append/update)."""
+        return self.from_moments is not None and self.tile_kernel is None
 
     @property
     def fusable(self) -> bool:
@@ -280,18 +350,20 @@ def identity_transform(x: Array, *, dtype=None) -> Array:
 
 
 PEARSON = Measure("pearson", pcc.transform, None, (-1.0, 1.0),
-                  permute_gather=True)
+                  permute_gather=True, from_moments=pearson_from_moments)
 SPEARMAN = Measure("spearman", spearman_transform, None, (-1.0, 1.0),
                    permute_gather=True)
 COSINE = Measure("cosine", l2_normalize_rows, None, (-1.0, 1.0),
-                 permute_gather=True)
+                 permute_gather=True, from_moments=cosine_from_moments)
 COVARIANCE = Measure("covariance", center_rows, _cov_epilogue, None,
-                     epilogue_div=_cov_div, permute_gather=True)
+                     epilogue_div=_cov_div, permute_gather=True,
+                     from_moments=covariance_from_moments)
 KENDALL = Measure("kendall", pair_sign_transform, _kendall_epilogue,
                   (-1.0, 1.0), epilogue_div=_kendall_div, exact_int8=True)
 KENDALL_B = Measure("kendall_tau_b", pair_sign_tie_scaled_transform, None,
                     (-1.0, 1.0))
-DOT = Measure("dot", identity_transform, None, None, permute_gather=True)
+DOT = Measure("dot", identity_transform, None, None, permute_gather=True,
+              from_moments=dot_from_moments)
 
 # Merge-sort Kendall variants (kernels/kendall_merge.py): the transform is
 # just the (n, l) ranks and the tile kernel applies Knight's O(l log l)
@@ -651,6 +723,10 @@ __all__ = [
     "center_rows",
     "pair_sign_transform",
     "pair_sign_tie_scaled_transform",
+    "pearson_from_moments",
+    "cosine_from_moments",
+    "covariance_from_moments",
+    "dot_from_moments",
     "masked_operands",
     "masked_dense_reference",
     "dense_reference",

@@ -518,6 +518,37 @@ def prepare_operand_raw(x: Array, measure: measures.Measure, compute_dtype,
     return pad_operands(u, t, l_blk)
 
 
+def take_operand_rows(u, rows, n_pad: int):
+    """Row-select a prepared (padded) operand and re-pad to ``n_pad`` rows.
+
+    ``rows`` is a slice or an integer index array over the operand's *real*
+    rows.  The delta-plan seam of live corpora (serving/live.py): an append
+    launches only the new-vs-old grid and the new-vs-new triangle, and both
+    need the new rows' already-prepared operand slab re-padded to the delta
+    plan's row alignment.  Quantized :class:`Operand` containers slice and
+    pad both the data and the per-row scales; zero rows (and zero scales)
+    stay inert exactly as in :func:`pad_operands`.
+    """
+    if isinstance(u, Operand):
+        data, scale = u.data[rows], u.scale[rows]
+        short = n_pad - data.shape[0]
+        if short < 0:
+            raise ValueError(
+                f"selected {data.shape[0]} rows, more than n_pad={n_pad}")
+        if short:
+            data = jnp.pad(data, ((0, short), (0, 0)))
+            scale = jnp.pad(scale, (0, short))
+        return Operand(data, scale)
+    data = u[rows]
+    short = n_pad - data.shape[0]
+    if short < 0:
+        raise ValueError(
+            f"selected {data.shape[0]} rows, more than n_pad={n_pad}")
+    if short:
+        data = jnp.pad(data, ((0, short), (0, 0)))
+    return data
+
+
 def pad_operands(u: Array, t: int, l_blk: int) -> Array:
     """Zero-pad transformed variables to (n_pad, l_pad) kernel alignment.
     Zero rows correlate to 0 with everything, so padding is inert."""
@@ -535,6 +566,7 @@ __all__ = [
     "Operand",
     "needs_row_scales",
     "pad_operands",
+    "take_operand_rows",
     "pad_scales",
     "prepare_operand_raw",
     "resolve_interpret",

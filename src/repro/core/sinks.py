@@ -764,6 +764,38 @@ class ExceedanceSink(TileSink):
         return self._inner.result()
 
 
+def topk_merge_rows(vals: np.ndarray, idx: np.ndarray, r_ids: np.ndarray,
+                    c_ids: np.ndarray, v: np.ndarray, k: int) -> None:
+    """THE canonical per-row top-k merge, in place.
+
+    ``vals``/``idx`` are (n_rows, k) running state (index -1 = empty slot);
+    (r_ids, c_ids, v) are candidate triples.  Candidates merge under the
+    canonical total order — |value| desc, then column asc — so the retained
+    top-k is a *set function* of the candidates seen: independent of pass
+    partitioning, merge order, and state capacity >= k, ties included.
+    That invariant is what lets the serving batcher slice one
+    TopKSink(k_max) run into per-request top-k lists bit-identical to
+    standalone TopKSink(k) runs, and what lets live corpora
+    (serving/live.py) re-merge *delta* candidates into standing top-k
+    results without replaying the passes that produced the state.
+
+    A row's candidate columns must be unique and must not duplicate
+    columns already held for that row (duplicates would occupy two slots).
+    """
+    order = np.argsort(r_ids, kind="stable")
+    r_s, c_s, v_s = r_ids[order], c_ids[order], v[order]
+    uniq, starts = np.unique(r_s, return_index=True)
+    bounds = np.append(starts, len(r_s))
+    for u, lo, hi in zip(uniq, bounds[:-1], bounds[1:]):
+        cand_v = np.concatenate([vals[u], v_s[lo:hi]])
+        cand_i = np.concatenate([idx[u], c_s[lo:hi]])
+        key = np.abs(cand_v)
+        key[cand_i < 0] = -np.inf  # empty slots lose to any candidate
+        sel = np.lexsort((cand_i, -key))[:k]
+        vals[u] = cand_v[sel]
+        idx[u] = cand_i[sel]
+
+
 class TopKSink(TileSink):
     """Streaming per-row top-k neighbours: keep the k strongest-|r| partners
     of every row without materialising the matrix — O(n_rows * k) state.
@@ -820,25 +852,7 @@ class TopKSink(TileSink):
 
     def _merge(self, r_ids: np.ndarray, c_ids: np.ndarray,
                v: np.ndarray) -> None:
-        order = np.argsort(r_ids, kind="stable")
-        r_s, c_s, v_s = r_ids[order], c_ids[order], v[order]
-        uniq, starts = np.unique(r_s, return_index=True)
-        bounds = np.append(starts, len(r_s))
-        for u, lo, hi in zip(uniq, bounds[:-1], bounds[1:]):
-            cand_v = np.concatenate([self.vals[u], v_s[lo:hi]])
-            cand_i = np.concatenate([self.idx[u], c_s[lo:hi]])
-            key = np.abs(cand_v)
-            key[cand_i < 0] = -np.inf  # empty slots lose to any candidate
-            # canonical total order: |value| desc, then column asc.  A row's
-            # candidate columns are unique, so this total order makes the
-            # retained top-k a *set function* of the candidates seen —
-            # independent of pass partitioning, merge order, and state
-            # capacity >= k, ties included.  That is what lets the serving
-            # batcher slice one TopKSink(k_max) run into per-request top-k
-            # lists bit-identical to standalone TopKSink(k) runs.
-            sel = np.lexsort((cand_i, -key))[: self.k]
-            self.vals[u] = cand_v[sel]
-            self.idx[u] = cand_i[sel]
+        topk_merge_rows(self.vals, self.idx, r_ids, c_ids, v, self.k)
 
     def result(self) -> dict:
         self.vals[self.idx < 0] = 0.0
@@ -854,6 +868,7 @@ __all__ = [
     "RowBlockSink",
     "ExceedanceSink",
     "TopKSink",
+    "topk_merge_rows",
     "scatter_tiles",
     "scatter_tiles_at",
     "place_tiles_host",

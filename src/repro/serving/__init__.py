@@ -8,41 +8,69 @@ tracing, per-launch overhead — amortised across requests:
 
   corpus.py      CorpusHandle: per-measure corpus transforms + norms,
                  computed once, cached on device (the same TransformCache
-                 seam ``corr()`` itself uses).
+                 seam ``corr()`` itself uses); live mutation
+                 (``append``/``update``) with incremental operand
+                 maintenance, drift budget, generations, and delta
+                 subscriptions.
+  live.py        The streaming substrate: running per-row moments
+                 (Welford seed + delta merge), IncrementalOperand
+                 (O(delta·l) transform maintenance), LiveIndex (a
+                 standing all-pairs result kept current by delta plans —
+                 the d-vs-n grid + d-vs-d triangle, never the full
+                 re-triangle).
   plan_cache.py  ProblemSpec / PlanCache: frozen plans keyed on bucketed
                  problem specs; repeat shapes never re-plan or re-trace.
   batcher.py     Query / QueryBatcher: coalesce concurrent queries into
                  one padded grid launch, scatter per-request results back
                  (dense rows via RowBlockSink, top-k via one TopKSink).
   server.py      CorrServer: sync + async submission, max-wait/max-batch
-                 dispatch policy, per-request serving stats; edge-
-                 significance queries (``significance()``: probe rows vs
-                 corpus with permutation p-values, reusing the corpus's
-                 cached null state).
+                 dispatch policy, multi-corpus routing (``add_corpus`` /
+                 ``submit(corpus=...)``), standing queries
+                 (``watch`` -> WatchHandle, revalidated per delta),
+                 per-request serving stats naming the corpus generation;
+                 edge-significance queries (``significance()``: probe
+                 rows vs corpus with permutation p-values, reusing the
+                 corpus's cached null state).
 
 Results are bit-identical to standalone ``corr()`` calls — batching and
-caching are pure execution policy (docs/serving.md).
+caching are pure execution policy — except within a live corpus's drift
+budget, where incrementally maintained operands are within the pinned
+DRIFT_TOL of a cold transform (docs/serving.md).
 """
 
 from repro.serving.batcher import BatchInfo, Query, QueryBatcher
 from repro.serving.corpus import CorpusHandle, as_corpus
+from repro.serving.live import (DEFAULT_DRIFT_BUDGET, DRIFT_TOL, Delta,
+                                IncrementalOperand, LiveIndex,
+                                merge_row_moments, row_moments,
+                                supports_incremental, topk_rows_from_dense)
 from repro.serving.plan_cache import (PlanCache, ProblemSpec, bucket_rows,
                                       mesh_key)
 from repro.serving.server import (CorrServer, DeadlineExceeded, ServedResult,
-                                  ServerOverloaded)
+                                  ServerOverloaded, WatchHandle)
 
 __all__ = [
     "BatchInfo",
     "CorpusHandle",
     "CorrServer",
+    "DEFAULT_DRIFT_BUDGET",
+    "DRIFT_TOL",
     "DeadlineExceeded",
+    "Delta",
+    "IncrementalOperand",
+    "LiveIndex",
     "PlanCache",
     "ProblemSpec",
     "Query",
     "QueryBatcher",
     "ServedResult",
     "ServerOverloaded",
+    "WatchHandle",
     "as_corpus",
     "bucket_rows",
     "mesh_key",
+    "merge_row_moments",
+    "row_moments",
+    "supports_incremental",
+    "topk_rows_from_dense",
 ]

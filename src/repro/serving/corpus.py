@@ -17,11 +17,25 @@ to the executor as ``v_pad``; ``row_norms()`` exposes the per-row L2
 norms of the transformed corpus (a cheap screen for degenerate rows:
 pearson/cosine rows with zero variance/norm transform to zero rows and
 score 0 with everything).
+
+Corpora are *live* (docs/serving.md "Live corpora & standing queries"):
+``append(rows)`` and ``update(idx, rows)`` mutate the corpus in place.
+For moment-form measures (pearson, cosine, covariance, dot) the prepared
+operands are maintained *incrementally* — O(delta·l) transform work via
+the running per-row moments of :mod:`repro.serving.live`, governed by a
+``drift_budget`` of update batches before a forced exact refresh.  Rank
+measures (spearman, kendall*) have no moment form: a mutation warns once
+per measure and the next ``operand()`` re-transforms the full corpus
+exactly — loud, never silently stale.  Every mutation bumps the corpus
+``generation`` and pushes a :class:`~repro.serving.live.Delta` to
+subscribers (standing indexes and server watches) on the mutating thread.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+import threading
+import warnings
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +45,8 @@ from repro.core import measures
 from repro.core.api import TransformCache
 from repro.core.plan import prepare_operand_raw
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+from repro.serving.live import DEFAULT_DRIFT_BUDGET, Delta, \
+    IncrementalOperand, supports_incremental
 
 Array = jax.Array
 
@@ -43,19 +59,36 @@ class CorpusHandle:
     lifetime) plus the cached per-measure prepared operands.  Handles are
     cheap views over the cache — build one per corpus and share it across
     servers/batchers.
+
+    Mutations (``append``/``update``/``refresh``) serialize on an internal
+    lock and run subscriber revalidation synchronously before returning;
+    reads (``operand``/``row_norms``) are lock-free snapshots.
     """
 
     def __init__(self, x, *, t: int = DEFAULT_TILE,
-                 l_blk: int = DEFAULT_LBLK, cache_capacity: int = 8):
+                 l_blk: int = DEFAULT_LBLK, cache_capacity: int = 8,
+                 drift_budget: int = DEFAULT_DRIFT_BUDGET):
         x = jnp.asarray(x)
         if x.ndim != 2:
             raise ValueError(f"corpus must be (n, l), got shape {x.shape}")
+        if drift_budget < 1:
+            raise ValueError(f"drift_budget must be >= 1, got {drift_budget}")
         self.x = x
         self.t = int(t)
         self.l_blk = int(l_blk)
+        self.drift_budget = int(drift_budget)
         self._cache = TransformCache(capacity=cache_capacity)
         self._norms: Dict[str, Array] = {}
         self._null_chunks: Dict[tuple, Array] = {}
+        # -- live-corpus state --
+        self._mu = threading.Lock()          # serializes mutations
+        self._generation = 0
+        self._live: Dict[tuple, IncrementalOperand] = {}
+        self._served_exact: Dict[tuple, str] = {}   # key -> measure name
+        self._warned: set = set()
+        self._subscribers: Dict[int, Callable[[Delta], None]] = {}
+        self._next_sub = 0
+        self.refreshes = 0
 
     @property
     def n(self) -> int:
@@ -64,6 +97,12 @@ class CorpusHandle:
     @property
     def l(self) -> int:
         return self.x.shape[1]
+
+    @property
+    def generation(self) -> int:
+        """Corpus version: 0 at registration, +1 per append/update batch.
+        Served results name the generation they answered against."""
+        return self._generation
 
     def _prepare(self, meas: measures.Measure, compute_dtype) -> Array:
         # the one shared preparation pipeline (plan.prepare_operand_raw):
@@ -79,13 +118,152 @@ class CorpusHandle:
 
         Bit-identical to what ``corr(probes, corpus, measure=...)`` would
         prepare internally (same transform, same padding), so batched
-        serving results match one-shot calls exactly.
+        serving results match one-shot calls exactly.  For moment-form
+        measures the returned operand is *maintained* across mutations
+        (incremental, within the drift budget); for rank measures it is
+        rebuilt exactly after each mutation.
         """
         meas = measures.get(measure)
         cd = None if compute_dtype is None else jnp.dtype(compute_dtype)
+        key = (meas.name, None if cd is None else cd.name)
+        if supports_incremental(meas, cd):
+            state = self._live.get(key)
+            if state is None:
+                state = IncrementalOperand(self.x, meas, cd, self.t,
+                                           self.l_blk,
+                                           operand=self._prepare(meas, cd))
+                self._live[key] = state
+            # re-enter the maintained operand through the TransformCache so
+            # hit/miss accounting (and corr()'s shared seam) keeps working;
+            # a post-mutation miss hands back the maintained operand — no
+            # re-transform runs
+            return self._cache.prepared(
+                self.x, meas, cd, self.t, self.l_blk,
+                build=lambda: state.operand)
+        self._served_exact[key] = meas.name
         return self._cache.prepared(
             self.x, meas, cd, self.t, self.l_blk,
             build=lambda: self._prepare(meas, cd))
+
+    # -- mutation -----------------------------------------------------------
+
+    def _warn_exact_fallbacks(self) -> None:
+        for name in set(self._served_exact.values()):
+            if name not in self._warned:
+                self._warned.add(name)
+                warnings.warn(
+                    f"corpus mutation with measure {name!r}: rank "
+                    f"transforms have no incremental (moment) form, so "
+                    f"the full corpus re-transforms exactly on next use "
+                    f"(O(n*l), never silently stale). Expect mutation-"
+                    f"heavy workloads on rank measures to pay cold-"
+                    f"transform cost per batch.", stacklevel=3)
+
+    def _maintain(self, apply_delta: Callable[[IncrementalOperand], None],
+                  new_x: Array) -> None:
+        """Advance every maintained operand, then enforce the drift
+        budget: a state that has absorbed ``drift_budget`` moment-merged
+        update batches rebuilds exactly from the new corpus."""
+        for state in list(self._live.values()):
+            apply_delta(state)
+            if state.update_batches >= self.drift_budget:
+                state.refresh(new_x)
+                self.refreshes += 1
+
+    def _finish_mutation(self, new_x: Array, delta_kind: str, **kw) -> Delta:
+        self._warn_exact_fallbacks()
+        self.x = new_x          # drops old id(x): exact caches invalidate
+        self._norms.clear()
+        self._null_chunks.clear()
+        self._generation += 1
+        delta = Delta(self._generation, delta_kind, **kw)
+        errs = []
+        for fn in list(self._subscribers.values()):
+            try:
+                fn(delta)
+            except Exception as e:          # noqa: BLE001 — isolate subs
+                errs.append(e)
+        if errs:
+            raise errs[0]
+        return delta
+
+    def _check_rows(self, rows) -> Array:
+        rows = jnp.asarray(rows)
+        if rows.ndim != 2 or rows.shape[1] != self.l:
+            raise ValueError(
+                f"mutation rows must be (d, {self.l}), got {rows.shape}")
+        if rows.shape[0] == 0:
+            raise ValueError("mutation batch is empty")
+        return rows
+
+    def append(self, rows) -> Delta:
+        """Append d fresh rows.  Maintained operands extend in O(d·l)
+        (batch-Welford moment seed + moment-form transform of just the
+        new rows); subscribers revalidate against the delta before this
+        returns.  Returns the :class:`Delta` (with the new generation)."""
+        rows = self._check_rows(rows)
+        with self._mu:
+            n0 = self.n
+            new_x = jnp.concatenate([self.x, rows.astype(self.x.dtype)])
+            self._maintain(lambda st: st.append(rows), new_x)
+            return self._finish_mutation(new_x, "append",
+                                         lo=n0, hi=n0 + rows.shape[0])
+
+    def update(self, idx, rows) -> Delta:
+        """Replace the rows at ``idx`` (unique, in range) with ``rows``.
+        Maintained operands advance by the Welford delta-merge of the
+        affected rows' moments — O(d·l), counted against the drift budget
+        (the merge is where f32 rounding accumulates; after the budget is
+        spent the state rebuilds exactly)."""
+        rows = self._check_rows(rows)
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        if idx.size != rows.shape[0]:
+            raise ValueError(
+                f"idx has {idx.size} entries for {rows.shape[0]} rows")
+        if idx.size != np.unique(idx).size:
+            raise ValueError("update indices must be unique")
+        if idx.size and (idx.min() < 0 or idx.max() >= self.n):
+            raise ValueError(
+                f"update indices out of range for n={self.n}")
+        with self._mu:
+            ji = jnp.asarray(idx)
+            old_rows = self.x[ji]
+            new_x = self.x.at[ji].set(rows.astype(self.x.dtype))
+            self._maintain(lambda st: st.update(idx, old_rows, rows), new_x)
+            return self._finish_mutation(new_x, "update", idx=idx)
+
+    def refresh(self) -> None:
+        """Force an exact rebuild of every maintained operand now (what
+        the drift budget does periodically).  Afterwards each operand is
+        bit-identical to a cold transform of the current corpus.  Does
+        not bump the generation (the corpus *values* are unchanged);
+        standing indexes repair drifted merged state with their own
+        ``rebuild()``."""
+        with self._mu:
+            for state in list(self._live.values()):
+                state.refresh(self.x)
+                self.refreshes += 1
+            # self.x keeps its id here (values unchanged), so cached
+            # operand entries would go stale — drop them; the next
+            # operand() re-enters the freshly rebuilt state
+            self._cache.clear()
+
+    def subscribe(self, fn: Callable[[Delta], None]) -> Callable[[], None]:
+        """Register a delta subscriber (standing index / server watch).
+        ``fn(delta)`` runs synchronously on the mutating thread after the
+        corpus has advanced.  Returns an unsubscribe callable."""
+        with self._mu:
+            sid = self._next_sub
+            self._next_sub += 1
+            self._subscribers[sid] = fn
+
+        def unsubscribe() -> None:
+            with self._mu:
+                self._subscribers.pop(sid, None)
+
+        return unsubscribe
+
+    # -- derived state ------------------------------------------------------
 
     def row_norms(self, measure: measures.MeasureLike = "pearson") -> Array:
         """Per-row L2 norms of the transformed corpus (cached).
@@ -97,7 +275,8 @@ class CorpusHandle:
         meas = measures.get(measure)
         norms = self._norms.get(meas.name)
         if norms is None:
-            u = self.operand(meas)[: self.n]
+            u = self.operand(meas)
+            u = getattr(u, "data", u)[: self.n]
             norms = jnp.sqrt(jnp.sum(
                 u.astype(jnp.float32) ** 2, axis=1))
             self._norms[meas.name] = norms
@@ -117,6 +296,7 @@ class CorpusHandle:
         callable; entries are keyed by chunk index plus the full null
         identity and live for the handle's lifetime (``clear_null_state()``
         drops them — B x corpus operand device memory when fully built).
+        Mutations clear them (the null state depends on the corpus rows).
 
         Races are benign: two threads missing the same chunk compute
         identical stacks (the keys determine the permutations).
@@ -147,16 +327,28 @@ class CorpusHandle:
     def stats(self) -> dict:
         """Transform-cache counters: `misses` is the number of corpus
         transforms actually run (the serving invariant: one per
-        (measure, dtype), however many queries arrive).  `null_chunks` is
+        (measure, dtype), however many queries arrive) — except that a
+        maintained (live) operand re-enters the cache after a mutation as
+        a "miss" that hands back the incrementally advanced operand
+        without re-transforming.  `null_chunks` is
         the number of cached replica-chunk stacks (significance null
-        state)."""
+        state).  Live-corpus state rides along: generation, per-state
+        drift counters, forced refresh count, subscriber count."""
         out = self._cache.stats()
         out["null_chunks"] = len(self._null_chunks)
+        out["generation"] = self._generation
+        out["rows"] = self.n
+        out["drift_budget"] = self.drift_budget
+        out["refreshes"] = self.refreshes
+        out["subscribers"] = len(self._subscribers)
+        out["live"] = {"/".join(str(p) for p in key): st.stats()
+                       for key, st in self._live.items()}
         return out
 
     def __repr__(self) -> str:
         return (f"CorpusHandle(n={self.n}, l={self.l}, t={self.t}, "
-                f"l_blk={self.l_blk}, cached={len(self._cache)})")
+                f"l_blk={self.l_blk}, gen={self._generation}, "
+                f"cached={len(self._cache)})")
 
 
 def as_corpus(corpus, *, t: int = DEFAULT_TILE,

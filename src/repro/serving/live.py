@@ -1,0 +1,531 @@
+"""Live corpora: incremental ingest, delta plans, and standing state.
+
+The paper computes all-pairs PCC once over a *static* matrix; the ROADMAP
+north-star is a long-lived service, and production corpora are not static
+— rows arrive and get revised continuously.  This module is the streaming
+side of the serving layer (docs/serving.md "Live corpora & standing
+queries"):
+
+  * **Incremental transform maintenance** — :class:`IncrementalOperand`
+    keeps a (measure, dtype) prepared operand *and* the per-row running
+    moments (mean, centered sum of squares M2) it derives from.  Append /
+    update of d rows costs O(d·l): fresh rows seed their moments with one
+    batch Welford pass, revised rows *merge* the delta into their moments
+    (CoMet's "never recompute what algebra lets you update",
+    arXiv:1705.08213) and rebuild only their own operand rows via
+    ``Measure.from_moments``.  The merge form accumulates float drift, so
+    every state carries an update counter against the corpus's drift
+    budget and is periodically rebuilt exactly (``refresh``) — after a
+    refresh the operand is bit-identical to a cold transform.  Rank
+    measures (spearman, kendall*) have no moment form; the corpus falls
+    back to a loud exact re-transform for them (serving/corpus.py).
+
+  * **Delta-aware execution** — :class:`LiveIndex` maintains a standing
+    corpus-vs-corpus result (dense matrix or per-row top-k).  On append
+    of d rows only the d-vs-n rectangular grid and the d-vs-d triangle
+    launch — riding the existing GridWorkload / TriangularWorkload
+    bijections and reusing :class:`~repro.serving.plan_cache.PlanCache`
+    entries via tile-bucketed specs — never the full (n+d) triangle.
+    Delta results merge into the standing state: dense by row/column
+    extension, top-k by the canonical per-row re-merge
+    (:func:`~repro.core.sinks.topk_merge_rows`).  ``recovery=`` composes:
+    each delta stream runs under the self-healing executor with its own
+    coverage bitmap over (grid or triangular) tile ids.
+
+  * **Versioned generations** — every mutation bumps the corpus
+    generation; every standing result and served answer names the
+    generation it answered against, so readers can tell a pre-delta
+    answer from a post-delta one.
+
+Standing *queries* (``CorrServer.watch``) build on the same pieces:
+the server subscribes to its corpora and revalidates each watch against
+each delta batch (serving/server.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import measures
+from repro.core.allpairs import execute_plan
+from repro.core.plan import needs_row_scales, prepare_operand_raw, \
+    take_operand_rows
+from repro.core.sinks import DenseSink, TopKSink, topk_merge_rows
+from repro.serving.plan_cache import PlanCache, ProblemSpec
+
+Array = jax.Array
+
+# Incremental update batches an operand state may absorb before the next
+# mutation triggers an exact refresh (CorpusHandle(drift_budget=...)).
+DEFAULT_DRIFT_BUDGET = 64
+
+# Pinned bound on |incremental - cold| for any result computed within one
+# drift budget of moment-merged updates (tests/test_live.py property-tests
+# this; the moment merge is algebraically exact, so the drift is pure f32
+# rounding — observed orders of magnitude below this bound).
+DRIFT_TOL = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Running per-row moments (Welford)
+# ---------------------------------------------------------------------------
+
+
+def row_moments(x: Array) -> Tuple[Array, Array]:
+    """Per-row (mean, M2) with M2 = sum((x - mean)^2) — the batch form of
+    Welford's accumulator (one merge of all l samples).  Seeds the moment
+    state of fresh rows; numerics mirror the full transforms (mean first,
+    then centered sum), so a freshly seeded row's ``from_moments`` output
+    matches the cold transform."""
+    x = jnp.asarray(x)
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    mean = jnp.mean(xa, axis=1)
+    c = xa - mean[:, None]
+    m2 = jnp.sum(c * c, axis=1)
+    return mean.astype(jnp.float32), m2.astype(jnp.float32)
+
+
+def merge_row_moments(mean: Array, m2: Array, old_rows: Array,
+                      new_rows: Array) -> Tuple[Array, Array]:
+    """Welford-style delta merge: the moments of a row after replacing its
+    samples, from the old moments plus the old/new sample values — O(d·l),
+    no pass over unchanged state.
+
+    Algebra (exact over the reals)::
+
+        mean' = mean + sum(new - old) / l
+        M2    = sum(x^2) - l * mean^2
+        M2'   = M2 + sum(new^2 - old^2) - l * (mean'^2 - mean^2)
+
+    In f32 the sum-of-squares form cancels catastrophically for
+    low-variance rows, which is exactly the drift the corpus's drift
+    budget bounds and the periodic exact refresh repairs."""
+    old = jnp.asarray(old_rows).astype(jnp.float32)
+    new = jnp.asarray(new_rows).astype(jnp.float32)
+    l = old.shape[1]
+    mean = jnp.asarray(mean, jnp.float32)
+    m2 = jnp.asarray(m2, jnp.float32)
+    mean2 = mean + jnp.sum(new - old, axis=1) / l
+    m22 = m2 + jnp.sum(new * new - old * old, axis=1) \
+        - l * (mean2 * mean2 - mean * mean)
+    return mean2, jnp.maximum(m22, 0.0)
+
+
+def supports_incremental(meas: measures.Measure, compute_dtype) -> bool:
+    """Whether (measure, dtype) can ride the O(delta·l) moment path:
+    the measure must have a moment-form transform and the dtype must not
+    need per-row quantization scales (scale maintenance would re-quantize
+    every row the scale of which changed — the exact path handles those)."""
+    return meas.incremental and not needs_row_scales(meas, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Delta records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Delta:
+    """One corpus mutation batch, as pushed to subscribers.
+
+    kind       "append" (rows [lo, hi) are new) or "update" (rows at
+               ``idx`` were replaced).
+    generation the corpus generation *after* this mutation — the version
+               every revalidated standing result will name.
+    """
+
+    generation: int
+    kind: str
+    lo: int = 0
+    hi: int = 0
+    idx: Optional[np.ndarray] = None
+
+    @property
+    def count(self) -> int:
+        return (self.hi - self.lo) if self.kind == "append" else len(self.idx)
+
+
+# ---------------------------------------------------------------------------
+# Incremental operand maintenance
+# ---------------------------------------------------------------------------
+
+
+class IncrementalOperand:
+    """A maintained prepared operand for one (measure, compute_dtype).
+
+    State: the padded device operand (exactly what
+    :func:`~repro.core.plan.prepare_operand_raw` would produce), the
+    per-row running moments it derives from, and the count of moment-merge
+    update batches absorbed since the last exact build.  ``append`` seeds
+    fresh rows (batch Welford + ``from_moments``); ``update`` merges the
+    delta into the affected rows' moments and rebuilds only those operand
+    rows; both are O(delta·l) transform work.  ``refresh`` rebuilds
+    exactly and zeroes the drift counter.
+    """
+
+    def __init__(self, x: Array, meas: measures.Measure, compute_dtype,
+                 t: int, l_blk: int, operand: Optional[Array] = None):
+        if not supports_incremental(meas, compute_dtype):
+            raise ValueError(
+                f"measure {meas.name!r} with compute_dtype={compute_dtype} "
+                f"has no incremental (moment-form) path")
+        self.meas = meas
+        self.compute_dtype = compute_dtype
+        self.t = int(t)
+        self.l_blk = int(l_blk)
+        self.update_batches = 0
+        self._build(x, operand)
+
+    def _build(self, x: Array, operand: Optional[Array] = None) -> None:
+        # `operand` lets the owner hand in an already-prepared operand for
+        # x (the CorpusHandle routes the initial build through its
+        # TransformCache); it must be exactly prepare_operand_raw's output
+        self.n, self.l = x.shape
+        self.u = operand if operand is not None else prepare_operand_raw(
+            x, self.meas, self.compute_dtype, self.t, self.l_blk)
+        self.mean, self.m2 = row_moments(x)
+        self.update_batches = 0
+
+    @property
+    def operand(self) -> Array:
+        """The maintained padded operand — the drop-in ``v_pad``."""
+        return self.u
+
+    def _rows_operand(self, x_rows: Array, mean: Array, m2: Array) -> Array:
+        u = self.meas.from_moments(jnp.asarray(x_rows), mean, m2, self.l,
+                                   dtype=jnp.float32)
+        if self.compute_dtype is not None:
+            u = u.astype(self.compute_dtype)
+        l_pad = self.u.shape[1]
+        if u.shape[1] < l_pad:
+            u = jnp.pad(u, ((0, 0), (0, l_pad - u.shape[1])))
+        return u
+
+    def append(self, x_new: Array) -> None:
+        """Extend with d fresh rows: O(d·l) transform + one row concat."""
+        x_new = jnp.asarray(x_new)
+        d = x_new.shape[0]
+        mean_d, m2_d = row_moments(x_new)
+        u_d = self._rows_operand(x_new, mean_d, m2_d)
+        n1 = self.n + d
+        n1_pad = -(-n1 // self.t) * self.t
+        u = jnp.concatenate([self.u[: self.n], u_d])
+        if u.shape[0] < n1_pad:
+            u = jnp.pad(u, ((0, n1_pad - u.shape[0]), (0, 0)))
+        self.u = u
+        self.mean = jnp.concatenate([self.mean, mean_d])
+        self.m2 = jnp.concatenate([self.m2, m2_d])
+        self.n = n1
+
+    def update(self, idx: np.ndarray, x_old_rows: Array,
+               x_new_rows: Array) -> None:
+        """Replace rows ``idx``: Welford delta-merge of their moments plus
+        an O(d·l) rebuild of just those operand rows.  Counts one drift
+        batch (the merge is where f32 rounding accumulates)."""
+        ji = jnp.asarray(np.asarray(idx, np.int64))
+        mean2, m22 = merge_row_moments(self.mean[ji], self.m2[ji],
+                                       x_old_rows, x_new_rows)
+        u_rows = self._rows_operand(jnp.asarray(x_new_rows), mean2, m22)
+        self.u = self.u.at[ji].set(u_rows)
+        self.mean = self.mean.at[ji].set(mean2)
+        self.m2 = self.m2.at[ji].set(m22)
+        self.update_batches += 1
+
+    def refresh(self, x: Array) -> None:
+        """Exact rebuild from the full corpus — bit-identical to a cold
+        ``prepare_operand_raw`` — and drift counter reset."""
+        self._build(x)
+
+    def stats(self) -> dict:
+        return {"rows": self.n, "update_batches": self.update_batches}
+
+
+# ---------------------------------------------------------------------------
+# Standing top-k helpers
+# ---------------------------------------------------------------------------
+
+
+def topk_rows_from_dense(scores: np.ndarray, k: int,
+                         col_ids: Optional[np.ndarray] = None,
+                         exclude_cols: Optional[np.ndarray] = None,
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Canonical per-row top-k state from a dense (m, c) score block.
+
+    ``col_ids`` maps local columns to global ids (default: 0..c-1);
+    ``exclude_cols`` drops one global column per row (self-pairs).
+    Merge order is the canonical one (|value| desc, column asc), so the
+    result is bit-identical to what a TopKSink run over the same scores
+    would hold."""
+    scores = np.asarray(scores, np.float32)
+    m, c = scores.shape
+    cols = (np.arange(c, dtype=np.int64) if col_ids is None
+            else np.asarray(col_ids, np.int64))
+    vals = np.zeros((m, k), np.float32)
+    idx = np.full((m, k), -1, np.int64)
+    r_ids = np.repeat(np.arange(m, dtype=np.int64), c)
+    c_ids = np.tile(cols, m)
+    v = scores.reshape(-1)
+    if exclude_cols is not None:
+        keep = c_ids != np.repeat(np.asarray(exclude_cols, np.int64), c)
+        r_ids, c_ids, v = r_ids[keep], c_ids[keep], v[keep]
+    topk_merge_rows(vals, idx, r_ids, c_ids, v, k)
+    return vals, idx
+
+
+# ---------------------------------------------------------------------------
+# LiveIndex: a standing corpus-vs-corpus result under deltas
+# ---------------------------------------------------------------------------
+
+
+class LiveIndex:
+    """A standing all-pairs result over a live corpus.
+
+    Subscribes to a :class:`~repro.serving.corpus.CorpusHandle` and keeps
+    either the dense (n, n) similarity matrix (``k=None``) or the per-row
+    top-k neighbourhood (``k=int``) current under append/update deltas:
+
+      append(d)  launches ONLY the d-vs-n grid and the d-vs-d triangle
+                 (kernel-spy asserted in tests/test_live.py) and merges —
+                 dense by row/column extension, top-k by per-row re-merge.
+      update(d)  launches the d-vs-n grid of the revised rows; dense
+                 merges rows+columns in place; top-k rebuilds the revised
+                 rows, exactly recomputes rows whose kept set referenced a
+                 revised column (their k-th boundary may have moved), and
+                 re-merges the new candidate values everywhere else.
+
+    Delta plans ride the shared :class:`PlanCache` via tile-bucketed
+    specs; ``recovery=`` arms the self-healing executor per delta stream
+    (coverage bitmap over that stream's grid/triangle tile ids).
+    ``result()`` copies always name the generation they reflect.
+
+    Revalidation runs synchronously on the mutating thread (the corpus
+    serializes mutations), so after ``corpus.append(...)`` returns the
+    index is already current.
+    """
+
+    def __init__(self, corpus, *, measure: measures.MeasureLike = "pearson",
+                 k: Optional[int] = None, compute_dtype=None,
+                 plan_cache: Optional[PlanCache] = None,
+                 max_tiles_per_pass: Optional[int] = None,
+                 interpret: Optional[bool] = None, clip: bool = True,
+                 fuse_epilogue: bool = True, mesh=None, recovery=None):
+        if not hasattr(corpus, "subscribe"):
+            from repro.serving.corpus import CorpusHandle
+            corpus = CorpusHandle(corpus)
+        if k is not None and k <= 0:
+            raise ValueError(f"k must be positive, got {k}")
+        self.corpus = corpus
+        self.measure = measures.get(measure)
+        self.k = k
+        self.compute_dtype = compute_dtype
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self.max_tiles_per_pass = max_tiles_per_pass
+        self.interpret = interpret
+        self.clip = clip
+        self.fuse_epilogue = fuse_epilogue
+        self.mesh = mesh
+        self.recovery = recovery
+        self._lock = threading.Lock()
+        self.deltas_applied = 0
+        self.rebuilds = 0
+        with self._lock:
+            self._rebuild()
+        self._unsubscribe = corpus.subscribe(self._on_delta)
+
+    # -- plan resolution ----------------------------------------------------
+
+    def _spec(self, rows: int, cols: Optional[int]) -> ProblemSpec:
+        return ProblemSpec.for_query(
+            rows, cols, self.corpus.l, measure=self.measure,
+            t=self.corpus.t, l_blk=self.corpus.l_blk,
+            compute_dtype=self.compute_dtype, clip=self.clip,
+            fuse_epilogue=self.fuse_epilogue,
+            max_tiles_per_pass=self.max_tiles_per_pass,
+            interpret=self.interpret, mesh=self.mesh)
+
+    def _operand(self):
+        return self.corpus.operand(self.measure, self.compute_dtype)
+
+    def _grid_block(self, u, rows, n_cols: int) -> np.ndarray:
+        """One rectangular delta launch: `rows` of the prepared operand vs
+        its first n_cols rows, dense, cropped to real rows."""
+        plan, _ = self.plan_cache.get(self._spec(len(rows), n_cols))
+        u_rows = take_operand_rows(u, jnp.asarray(np.asarray(rows, np.int64)),
+                                   plan.n_pad)
+        v_cols = take_operand_rows(u, slice(0, plan.col_pad), plan.col_pad)
+        out = execute_plan(plan, u_rows, v_cols, sink=DenseSink(),
+                           mesh=self.mesh, recovery=self.recovery)
+        return np.asarray(out)[: len(rows)]
+
+    # -- full (re)build -----------------------------------------------------
+
+    def _rebuild(self) -> None:
+        n = self.corpus.n
+        plan, _ = self.plan_cache.get(self._spec(n, None))
+        u = self._operand()
+        if self.k is None:
+            # own the buffer: device-backed views are read-only and the
+            # standing matrix takes in-place delta merges
+            self._r = np.array(execute_plan(
+                plan, u, sink=DenseSink(), mesh=self.mesh,
+                recovery=self.recovery), dtype=np.float32)
+        else:
+            top = execute_plan(plan, u, sink=TopKSink(self.k),
+                               mesh=self.mesh, recovery=self.recovery)
+            self._vals = np.array(top["values"], dtype=np.float32)
+            self._idx = np.array(top["indices"], dtype=np.int64)
+        self._generation = self.corpus.generation
+        self.rebuilds += 1
+
+    def rebuild(self) -> None:
+        """Force a cold full rebuild (drops all incrementally merged
+        state; the result is what a cold ``corr()`` would return)."""
+        with self._lock:
+            self._rebuild()
+
+    # -- delta application --------------------------------------------------
+
+    def _on_delta(self, delta: Delta) -> None:
+        with self._lock:
+            if delta.generation != self._generation + 1:
+                # missed or out-of-order delta (e.g. a subscriber raised
+                # before us on an earlier mutation): resync exactly
+                self._rebuild()
+                return
+            if delta.kind == "append":
+                self._apply_append(delta)
+            else:
+                self._apply_update(delta)
+            self._generation = delta.generation
+            self.deltas_applied += 1
+
+    def _apply_append(self, delta: Delta) -> None:
+        n0, n1 = delta.lo, delta.hi
+        d = n1 - n0
+        u = self._operand()
+        # d-vs-n0 rectangular grid (GridWorkload) ...
+        g = self._grid_block(u, np.arange(n0, n1), n0) if n0 else \
+            np.zeros((d, 0), np.float32)
+        # ... plus the d-vs-d triangle (TriangularWorkload) — never the
+        # full (n0+d) triangle.
+        plan_t, _ = self.plan_cache.get(self._spec(d, None))
+        u_d = take_operand_rows(u, slice(n0, n1), plan_t.n_pad)
+        tt = np.asarray(execute_plan(plan_t, u_d, sink=DenseSink(),
+                                     mesh=self.mesh, recovery=self.recovery))
+        if self.k is None:
+            r = np.zeros((n1, n1), np.float32)
+            r[:n0, :n0] = self._r
+            r[n0:, :n0] = g
+            r[:n0, n0:] = g.T
+            r[n0:, n0:] = tt
+            self._r = r
+            return
+        vals = np.zeros((n1, self.k), np.float32)
+        idx = np.full((n1, self.k), -1, np.int64)
+        vals[:n0], idx[:n0] = self._vals, self._idx
+        # old rows gain the new columns; new rows gain everything they see
+        new_ids = np.arange(n0, n1, dtype=np.int64)
+        r_ids = np.concatenate([
+            np.repeat(np.arange(n0, dtype=np.int64), d),    # g.T -> old rows
+            np.repeat(new_ids, n0),                          # g -> new rows
+            np.repeat(new_ids, d),                           # tt -> new rows
+        ])
+        c_ids = np.concatenate([
+            np.tile(new_ids, n0),
+            np.tile(np.arange(n0, dtype=np.int64), d),
+            np.tile(new_ids, d),
+        ])
+        v = np.concatenate([np.asarray(g).T.reshape(-1), g.reshape(-1),
+                            tt.reshape(-1)])
+        keep = r_ids != c_ids  # drop the tt diagonal (self-pairs)
+        topk_merge_rows(vals, idx, r_ids[keep], c_ids[keep], v[keep], self.k)
+        self._vals, self._idx = vals, idx
+
+    def _apply_update(self, delta: Delta) -> None:
+        idx = np.asarray(delta.idx, np.int64)
+        n = self.corpus.n
+        u = self._operand()
+        ru = self._grid_block(u, idx, n)        # (d, n), revised values
+        if self.k is None:
+            self._r[idx, :] = ru
+            self._r[:, idx] = ru.T
+            return
+        # 1. revised rows: their whole neighbourhood recomputes from ru
+        self._vals[idx], self._idx[idx] = topk_rows_from_dense(
+            ru, self.k, exclude_cols=idx)
+        # 2. rows whose kept set referenced a revised column: the stored
+        #    value is stale and the k-th boundary may move — recompute
+        #    them exactly with one more (bucketed) grid launch
+        updated = np.zeros(n, bool)
+        updated[idx] = True
+        stale_mask = updated[np.clip(self._idx, 0, n - 1)] & (self._idx >= 0)
+        stale_mask = stale_mask.any(axis=1)
+        stale_mask[idx] = False
+        stale = np.where(stale_mask)[0]
+        if stale.size:
+            rs = self._grid_block(u, stale, n)
+            self._vals[stale], self._idx[stale] = topk_rows_from_dense(
+                rs, self.k, exclude_cols=stale)
+        # 3. everyone else only *gains* candidates at the revised columns
+        rest = np.where(~stale_mask & ~updated)[0]
+        if rest.size:
+            d = idx.size
+            r_ids = np.repeat(rest, d)
+            c_ids = np.tile(idx, rest.size)
+            v = np.asarray(ru, np.float32)[:, rest].T.reshape(-1)
+            topk_merge_rows(self._vals, self._idx, r_ids, c_ids, v, self.k)
+
+    # -- results ------------------------------------------------------------
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def result(self) -> dict:
+        """A copy of the standing result, naming its generation: dense
+        indexes return {"r", "generation"}; top-k {"indices", "values",
+        "generation"}."""
+        with self._lock:
+            if self.k is None:
+                return {"r": self._r.copy(), "generation": self._generation}
+            vals = self._vals.copy()
+            vals[self._idx < 0] = 0.0
+            return {"indices": self._idx.copy(), "values": vals,
+                    "generation": self._generation}
+
+    def stats(self) -> dict:
+        return {"generation": self._generation, "rows": self.corpus.n,
+                "deltas_applied": self.deltas_applied,
+                "rebuilds": self.rebuilds,
+                "plan_cache": self.plan_cache.stats()}
+
+    def close(self) -> None:
+        """Unsubscribe from the corpus (the standing state stays
+        readable, frozen at its last generation)."""
+        self._unsubscribe()
+
+    def __enter__(self) -> "LiveIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = [
+    "DEFAULT_DRIFT_BUDGET",
+    "DRIFT_TOL",
+    "Delta",
+    "IncrementalOperand",
+    "LiveIndex",
+    "merge_row_moments",
+    "row_moments",
+    "supports_incremental",
+    "topk_rows_from_dense",
+]

@@ -1,14 +1,19 @@
-"""CorrServer: a long-lived query service over one registered corpus.
+"""CorrServer: a long-lived query service over registered corpora.
 
 The front end of the serving layer (docs/serving.md).  A server owns
 
-  * a :class:`~repro.serving.corpus.CorpusHandle` (corpus transforms run
-    once per measure, cached on device),
-  * a :class:`~repro.serving.plan_cache.PlanCache` (repeat query shapes
-    reuse frozen plans and compiled kernels),
-  * a :class:`~repro.serving.batcher.QueryBatcher` plus ONE dispatcher
-    thread that coalesces concurrent requests under a max-wait /
-    max-batch-rows policy.
+  * one or more :class:`~repro.serving.corpus.CorpusHandle` instances
+    (corpus transforms run once per measure, cached on device), routed by
+    corpus id — the constructor's corpus registers as ``"default"``,
+    ``add_corpus()`` registers more, and ``submit(..., corpus=...)``
+    routes each request,
+  * ONE shared :class:`~repro.serving.plan_cache.PlanCache` (repeat query
+    shapes reuse frozen plans and compiled kernels across corpora — two
+    corpora with the same row count share plans outright),
+  * a :class:`~repro.serving.batcher.QueryBatcher` per corpus plus ONE
+    dispatcher thread that coalesces concurrent requests under a
+    max-wait / max-batch-rows policy (batches partition per corpus at
+    dispatch: requests against different corpora never share a launch).
 
 Submission is thread-safe from any number of caller threads:
 
@@ -26,8 +31,18 @@ array (``jnp.asarray`` in Query) — safe under JAX's thread-safe
 dispatch, and the enqueue itself is lock-protected.
 
 Every result carries per-request stats: queue wait, service time, batch
-occupancy, and whether the launch hit the plan cache — the observability
-the serving benchmark (benchmarks/serving.py) and capacity planning need.
+occupancy, whether the launch hit the plan cache, and the corpus
+generation it answered against — the observability the serving benchmark
+(benchmarks/serving.py) and capacity planning need.
+
+Standing queries (docs/serving.md "Live corpora & standing queries"):
+``watch(probes, k)`` registers a :class:`WatchHandle` — a top-k query
+that stays current as its corpus mutates.  Each ``append``/``update``
+delta revalidates the watch incrementally (probes vs the delta rows
+only, merged through the canonical top-k order; rows whose kept set
+referenced a revised column recompute exactly), and when the kept set
+changes the new result is pushed to the watch's callback.  Every watch
+result names the corpus generation it reflects.
 
 Degradation (docs/robustness.md): the server degrades instead of dying.
 Malformed probes are rejected at submit() (Query validates shape, dtype,
@@ -50,18 +65,23 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future
-from typing import Any, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import measures
-from repro.core.plan import ExecutionPlan
+from repro.core.allpairs import execute_plan
+from repro.core.plan import ExecutionPlan, take_operand_rows
 from repro.core.significance import PermutationSpec, run_significance
+from repro.core.sinks import DenseSink, topk_merge_rows
 from repro.runtime import faults
 from repro.serving.batcher import Query, QueryBatcher
-from repro.serving.plan_cache import PlanCache
+from repro.serving.live import Delta, topk_rows_from_dense
+from repro.serving.plan_cache import PlanCache, ProblemSpec
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
+
+DEFAULT_CORPUS = "default"
 
 
 class DeadlineExceeded(TimeoutError):
@@ -87,7 +107,8 @@ class ServedResult:
            bit-identical to a standalone ``corr()`` call.
     stats: queue_s (enqueue -> dispatch), service_s (dispatch -> done),
            batch_requests / batch_rows / batch_occupancy, plan_cache_hit,
-           passes.
+           passes, corpus (id) and corpus_generation (the corpus version
+           this answer reflects).
     """
 
     value: Any
@@ -100,10 +121,166 @@ class _Pending:
     future: Future
     t_enqueue: float
     deadline: Optional[float] = None    # absolute time.monotonic() cutoff
+    corpus_id: str = DEFAULT_CORPUS
+
+
+class WatchHandle:
+    """A standing top-k query: ``probes`` vs a live corpus, kept current.
+
+    Registered by :meth:`CorrServer.watch`; subscribed to the corpus, so
+    every ``append``/``update`` revalidates it *incrementally* on the
+    mutating thread before the mutation returns:
+
+      append(d)  launches only probes-vs-the-d-new-rows and merges the
+                 candidates through the canonical top-k order;
+      update(d)  launches probes-vs-the-d-revised-rows; probe rows whose
+                 kept set referenced a revised column recompute exactly
+                 (their k-th boundary may have moved), everyone else just
+                 merges the revised candidate values.
+
+    When a revalidation changes the kept set, the new snapshot is pushed
+    to ``callback(snapshot)`` (if given).  ``current()`` returns the
+    standing snapshot at any time; both name the corpus generation they
+    reflect, so a reader can tell pre- from post-delta answers.
+    """
+
+    def __init__(self, batcher: QueryBatcher, probes, k: int,
+                 meas: measures.Measure,
+                 callback: Optional[Callable[[dict], None]] = None,
+                 corpus_id: str = DEFAULT_CORPUS):
+        q = Query(probes, k=k, measure=meas)    # eager probe validation
+        if q.probes.shape[1] != batcher.corpus.l:
+            raise ValueError(
+                f"probes have l={q.probes.shape[1]} samples, corpus "
+                f"{corpus_id!r} has l={batcher.corpus.l}")
+        self.batcher = batcher
+        self.corpus_id = corpus_id
+        self.probes = q.probes
+        self.m = q.m
+        self.k = int(k)
+        self.meas = meas
+        self.callback = callback
+        self.pushes = 0             # callback deliveries (kept set changed)
+        self.revalidations = 0      # deltas examined
+        self._lock = threading.Lock()
+        with self._lock:
+            self._refresh_full()
+        self._unsubscribe = batcher.corpus.subscribe(self._on_delta)
+        self._closed = False
+
+    # -- delta-plan launches ------------------------------------------------
+
+    def _spec(self, rows: int, cols: int) -> ProblemSpec:
+        b = self.batcher
+        return ProblemSpec.for_query(
+            rows, cols, b.corpus.l, measure=self.meas, t=b.t, l_blk=b.l_blk,
+            compute_dtype=b.compute_dtype, clip=b.clip,
+            fuse_epilogue=b.fuse_epilogue,
+            max_tiles_per_pass=b.max_tiles_per_pass, interpret=b.interpret,
+            mesh=b.mesh)
+
+    def _block(self, probe_rows, col_sel, n_cols: int) -> np.ndarray:
+        """Dense scores of (a subset of) the probes vs a column selection
+        of the corpus operand — one bucketed grid launch through the
+        shared plan cache."""
+        b = self.batcher
+        probes = (self.probes if probe_rows is None
+                  else self.probes[jnp.asarray(probe_rows)])
+        plan, _ = b.plan_cache.get(self._spec(probes.shape[0], n_cols))
+        u = plan.prepare_rows(probes)
+        v_full = b.corpus.operand(self.meas, b.compute_dtype)
+        if col_sel is None:
+            col_sel = slice(0, plan.col_pad)
+        # slice-then-pad: the tail of a live operand holds *real* freshly
+        # appended rows, so delta columns must re-pad with zeros
+        v = take_operand_rows(v_full, col_sel, plan.col_pad)
+        r = execute_plan(plan, u, v, sink=DenseSink(), mesh=b.mesh)
+        return np.asarray(r)[: probes.shape[0]]
+
+    # -- revalidation -------------------------------------------------------
+
+    def _refresh_full(self) -> None:
+        n = self.batcher.corpus.n
+        r = self._block(None, None, n)
+        self._vals, self._idx = topk_rows_from_dense(r, self.k)
+        self._generation = self.batcher.corpus.generation
+
+    def _apply_append(self, delta: Delta) -> None:
+        n0, d = delta.lo, delta.hi - delta.lo
+        block = self._block(None, slice(n0, delta.hi), d)   # (m, d)
+        r_ids = np.repeat(np.arange(self.m, dtype=np.int64), d)
+        c_ids = np.tile(np.arange(n0, delta.hi, dtype=np.int64), self.m)
+        topk_merge_rows(self._vals, self._idx, r_ids, c_ids,
+                        block.reshape(-1).astype(np.float32), self.k)
+
+    def _apply_update(self, delta: Delta) -> None:
+        idx = np.asarray(delta.idx, np.int64)
+        n = self.batcher.corpus.n
+        block = self._block(None, jnp.asarray(idx), idx.size)   # (m, d)
+        updated = np.zeros(n, bool)
+        updated[idx] = True
+        stale_mask = (updated[np.clip(self._idx, 0, n - 1)]
+                      & (self._idx >= 0)).any(axis=1)
+        stale = np.where(stale_mask)[0]
+        if stale.size:
+            # a kept value may have *dropped*: recompute those probe rows
+            r = self._block(stale, None, n)
+            self._vals[stale], self._idx[stale] = topk_rows_from_dense(
+                r, self.k)
+        rest = np.where(~stale_mask)[0]
+        if rest.size:
+            r_ids = np.repeat(rest, idx.size)
+            c_ids = np.tile(idx, rest.size)
+            v = block[rest].reshape(-1).astype(np.float32)
+            topk_merge_rows(self._vals, self._idx, r_ids, c_ids, v, self.k)
+
+    def _on_delta(self, delta: Delta) -> None:
+        snap = None
+        with self._lock:
+            before_v, before_i = self._vals.copy(), self._idx.copy()
+            if delta.generation != self._generation + 1:
+                self._refresh_full()        # missed a delta: resync exact
+            elif delta.kind == "append":
+                self._apply_append(delta)
+            else:
+                self._apply_update(delta)
+            self._generation = delta.generation
+            self.revalidations += 1
+            changed = not (np.array_equal(before_i, self._idx)
+                           and np.array_equal(before_v, self._vals))
+            if changed:
+                self.pushes += 1
+                snap = self._snapshot()
+        if snap is not None and self.callback is not None:
+            self.callback(snap)     # outside the lock: callbacks may read
+
+    # -- results ------------------------------------------------------------
+
+    def _snapshot(self) -> dict:
+        vals = self._vals.copy()
+        vals[self._idx < 0] = 0.0
+        return {"indices": self._idx.copy(), "values": vals,
+                "generation": self._generation, "corpus": self.corpus_id}
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def current(self) -> dict:
+        """The standing result: {"indices", "values", "generation",
+        "corpus"} — the top-k answer as of the named generation."""
+        with self._lock:
+            return self._snapshot()
+
+    def close(self) -> None:
+        """Stop revalidating (the last snapshot stays readable)."""
+        if not self._closed:
+            self._closed = True
+            self._unsubscribe()
 
 
 class CorrServer:
-    """Plan-cached, request-batched ``corr()`` queries against a corpus.
+    """Plan-cached, request-batched ``corr()`` queries against corpora.
 
     max_wait_s:     how long the dispatcher holds the oldest request open
                     for batch-mates before launching (latency it is willing
@@ -120,7 +297,8 @@ class CorrServer:
                     load with ServerOverloaded for `cooldown` seconds; one
                     successful dispatch closes it again.
     Remaining kwargs keep their ``corr()`` semantics and fix the serving
-    configuration (tile geometry, default measure, precision, mesh).
+    configuration (tile geometry, default measure, precision, mesh) —
+    shared by every registered corpus.
     """
 
     def __init__(self, corpus, *,
@@ -145,12 +323,18 @@ class CorrServer:
         if breaker_threshold <= 0:
             raise ValueError(
                 f"breaker_threshold must be positive, got {breaker_threshold}")
-        self.batcher = QueryBatcher(
-            corpus, measure=measure, plan_cache=plan_cache, t=t, l_blk=l_blk,
+        # one plan cache for every corpus: equal specs share frozen plans
+        # and compiled kernels across corpora
+        plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self._cfg = dict(
+            measure=measure, plan_cache=plan_cache, t=t, l_blk=l_blk,
             compute_dtype=compute_dtype, clip=clip,
             fuse_epilogue=fuse_epilogue,
             max_tiles_per_pass=max_tiles_per_pass, interpret=interpret,
             mesh=mesh)
+        self.batcher = QueryBatcher(corpus, **self._cfg)
+        self._batchers: Dict[str, QueryBatcher] = {
+            DEFAULT_CORPUS: self.batcher}
         self.max_wait_s = float(max_wait_s)
         self.max_batch_rows = int(max_batch_rows)
         self.deadline_s = None if deadline_s is None else float(deadline_s)
@@ -158,6 +342,7 @@ class CorrServer:
         self.breaker_cooldown_s = float(breaker_cooldown_s)
         self._cv = threading.Condition()
         self._queue: List[_Pending] = []
+        self._watches: List[WatchHandle] = []
         self._closed = False
         self._batches = 0
         self._requests = 0
@@ -181,7 +366,7 @@ class CorrServer:
                                         daemon=True)
         self._thread.start()
 
-    # -- submission ---------------------------------------------------------
+    # -- corpora ------------------------------------------------------------
 
     @property
     def corpus(self):
@@ -191,19 +376,57 @@ class CorrServer:
     def plan_cache(self) -> PlanCache:
         return self.batcher.plan_cache
 
+    def _batcher(self, corpus_id: str) -> QueryBatcher:
+        b = self._batchers.get(corpus_id)
+        if b is None:
+            raise ValueError(
+                f"unknown corpus {corpus_id!r}; registered: "
+                f"{sorted(self._batchers)}")
+        return b
+
+    def add_corpus(self, name: str, corpus):
+        """Register another corpus under ``name``; subsequent
+        ``submit(..., corpus=name)`` / ``watch(..., corpus=name)`` route
+        to it.  Shares the server's plan cache and serving configuration
+        (tile geometry, measure default, precision, mesh).  Returns the
+        registered :class:`~repro.serving.corpus.CorpusHandle`."""
+        if name == DEFAULT_CORPUS and corpus is not self.corpus:
+            raise ValueError(
+                f"{DEFAULT_CORPUS!r} is the constructor corpus's id")
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("CorrServer is closed")
+            if name in self._batchers:
+                raise ValueError(f"corpus {name!r} is already registered")
+            b = QueryBatcher(corpus, **self._cfg)
+            self._batchers[name] = b
+        return b.corpus
+
+    def corpora(self) -> List[str]:
+        """Registered corpus ids (routing keys for submit/query/watch)."""
+        with self._cv:
+            return sorted(self._batchers)
+
+    # -- submission ---------------------------------------------------------
+
     def submit(self, probes, *, k: Optional[int] = None,
                measure: Optional[measures.MeasureLike] = None,
-               deadline_s: Optional[float] = None
+               deadline_s: Optional[float] = None,
+               corpus: str = DEFAULT_CORPUS
                ) -> "Future[ServedResult]":
         """Enqueue one query; returns immediately with a Future that
         resolves to a :class:`ServedResult` once a batch serves it.
 
         Raises ValueError synchronously for malformed probes (wrong rank,
-        non-real dtype, NaN/Inf) and :class:`ServerOverloaded` while the
-        circuit breaker is open.  ``deadline_s`` (default: the server's
+        non-real dtype, NaN/Inf) and unknown corpus ids, and
+        :class:`ServerOverloaded` while the circuit breaker is open.  A
+        sample-count mismatch against the routed corpus fails the
+        *Future* at dispatch (the batch-split machinery isolates it from
+        batch-mates).  ``deadline_s`` (default: the server's
         ``deadline_s``) bounds how stale the request may get: past it, the
         Future fails with :class:`DeadlineExceeded` instead of running."""
         q = Query(probes, k=k, measure=measure)  # validates probes eagerly
+        self._batcher(corpus)                    # routing must resolve now
         if deadline_s is None:
             deadline_s = self.deadline_s
         elif deadline_s <= 0:
@@ -221,22 +444,50 @@ class CorrServer:
                     f"failures; retry after "
                     f"{self._breaker_open_until - now:.3f}s")
             deadline = None if deadline_s is None else now + deadline_s
-            self._queue.append(_Pending(q, fut, now, deadline))
+            self._queue.append(_Pending(q, fut, now, deadline, corpus))
             self._cv.notify_all()
         return fut
 
     def query(self, probes, *, k: Optional[int] = None,
               measure: Optional[measures.MeasureLike] = None,
-              deadline_s: Optional[float] = None
+              deadline_s: Optional[float] = None,
+              corpus: str = DEFAULT_CORPUS
               ) -> ServedResult:
         """Synchronous spelling of submit(): blocks for the result (the
         request still rides whatever batch the dispatcher forms, so a sync
         caller pays at most max_wait_s of coalescing latency)."""
         return self.submit(probes, k=k, measure=measure,
-                           deadline_s=deadline_s).result()
+                           deadline_s=deadline_s, corpus=corpus).result()
+
+    def watch(self, probes, k: int, callback=None, *,
+              measure: Optional[measures.MeasureLike] = None,
+              corpus: str = DEFAULT_CORPUS) -> WatchHandle:
+        """Register a standing top-k query (see :class:`WatchHandle`).
+
+        Computes the initial snapshot synchronously, then revalidates
+        against every corpus delta; ``callback(snapshot)`` (optional)
+        fires whenever the kept set changes.  Unregister with
+        ``unwatch(handle)`` or ``handle.close()``."""
+        b = self._batcher(corpus)
+        meas = b.measure if measure is None else measures.get(measure)
+        h = WatchHandle(b, probes, k, meas, callback, corpus_id=corpus)
+        with self._cv:
+            if self._closed:
+                h.close()
+                raise RuntimeError("CorrServer is closed")
+            self._watches.append(h)
+        return h
+
+    def unwatch(self, handle: WatchHandle) -> None:
+        """Stop a standing query (idempotent)."""
+        handle.close()
+        with self._cv:
+            if handle in self._watches:
+                self._watches.remove(handle)
 
     def significance(self, probes, *, pvalues: PermutationSpec,
-                     measure: Optional[measures.MeasureLike] = None
+                     measure: Optional[measures.MeasureLike] = None,
+                     corpus: str = DEFAULT_CORPUS
                      ) -> ServedResult:
         """"Is this edge real?" — probe rows vs the corpus with permutation
         (or bootstrap) p-values: returns a :class:`ServedResult` whose
@@ -253,36 +504,38 @@ class CorrServer:
         repeat queries against the same PermutationSpec reuse the stacked
         permuted-corpus operands instead of re-deriving B permutations.
         """
-        b = self.batcher
+        b = self._batcher(corpus)
         meas = b.measure if measure is None else measures.get(measure)
         probes = jnp.asarray(probes)
-        if probes.ndim != 2 or probes.shape[1] != self.corpus.l:
+        if probes.ndim != 2 or probes.shape[1] != b.corpus.l:
             raise ValueError(
-                f"probes must be (m, l={self.corpus.l}), got shape "
+                f"probes must be (m, l={b.corpus.l}), got shape "
                 f"{probes.shape}")
         p = (1 if b.mesh is None
              else int(np.prod(b.mesh.devices.shape)))
         plan = ExecutionPlan.create(
-            probes.shape[0], self.corpus.l, n_cols=self.corpus.n,
+            probes.shape[0], b.corpus.l, n_cols=b.corpus.n,
             t=b.t, l_blk=b.l_blk, measure=meas, p=p,
             max_tiles_per_pass=b.max_tiles_per_pass, interpret=b.interpret,
             clip=b.clip, fuse_epilogue=b.fuse_epilogue,
             compute_dtype=b.compute_dtype,
             replicas=pvalues.iterations, replica_chunk=pvalues.chunk)
         t_start = time.monotonic()
-        null_before = self.corpus.stats()["null_chunks"]
+        null_before = b.corpus.stats()["null_chunks"]
         r, pv = run_significance(
-            plan, pvalues, plan.prepare(probes), columns=self.corpus.x,
-            v_pad=self.corpus.operand(meas, b.compute_dtype),
+            plan, pvalues, plan.prepare(probes), columns=b.corpus.x,
+            v_pad=b.corpus.operand(meas, b.compute_dtype),
             mesh=b.mesh,
-            replica_source=self.corpus.replica_source_for(plan, pvalues))
+            replica_source=b.corpus.replica_source_for(plan, pvalues))
         stats = {
             "service_s": time.monotonic() - t_start,
             "iterations": pvalues.iterations,
             "replica_chunks": len(plan.replica_chunk_sizes),
-            "null_state_hit": (self.corpus.stats()["null_chunks"]
+            "null_state_hit": (b.corpus.stats()["null_chunks"]
                                == null_before),
             "passes": plan.n_pass,
+            "corpus": corpus,
+            "corpus_generation": b.corpus.generation,
         }
         return ServedResult(value=(r, pv), stats=stats)
 
@@ -319,20 +572,20 @@ class CorrServer:
             if batch:
                 self._serve(batch)
 
-    def _execute_batch(self, queries: List[Query]):
+    def _execute_batch(self, batcher: QueryBatcher, queries: List[Query]):
         """One dispatch attempt, retried in place exactly once when the
         failure is transient-classified (runtime/faults taxonomy) — a
         blip should not cost a whole split."""
         try:
             faults.check("server_dispatch")
-            return self.batcher.execute(queries)
+            return batcher.execute(queries)
         except BaseException as e:  # noqa: BLE001 — classified below
             if faults.classify_failure(e) != "transient":
                 raise
             with self._cv:
                 self._fault_counts["retries"] += 1
         faults.check("server_dispatch")
-        return self.batcher.execute(queries)
+        return batcher.execute(queries)
 
     def _record_dispatch(self, ok: bool) -> None:
         """Breaker bookkeeping: success closes, `breaker_threshold`
@@ -370,11 +623,23 @@ class CorrServer:
                     f"{p.deadline - p.t_enqueue:.3f}s deadline"))
             else:
                 live.append(p)
-        batch = live
-        if not batch:
+        if not live:
             return
+        # Partition per corpus: requests against different corpora never
+        # share a launch (different column operands), but they did share
+        # the coalescing window — a multi-tenant batch costs one dispatch.
+        groups: Dict[str, List[_Pending]] = {}
+        for p in live:
+            groups.setdefault(p.corpus_id, []).append(p)
+        for cid, grp in groups.items():
+            self._serve_group(cid, grp, t_start)
+
+    def _serve_group(self, corpus_id: str, batch: List[_Pending],
+                     t_start: float) -> None:
+        batcher = self._batchers[corpus_id]
         try:
-            results, infos = self._execute_batch([p.query for p in batch])
+            results, infos = self._execute_batch(
+                batcher, [p.query for p in batch])
         except BaseException as e:  # noqa: BLE001 — degrade, don't die
             self._record_dispatch(ok=False)
             if len(batch) == 1:
@@ -390,7 +655,7 @@ class CorrServer:
             with self._cv:
                 self._fault_counts["splits"] += 1
             for p in batch:
-                self._serve_one(p, t_start)
+                self._serve_one(batcher, p, t_start)
             return
         self._record_dispatch(ok=True)
         t_done = time.monotonic()
@@ -400,6 +665,7 @@ class CorrServer:
             self._rows += sum(p.query.m for p in batch)
             self._occupancy_sum += sum(i.occupancy for i in infos
                                        ) / max(len(infos), 1)
+        generation = batcher.corpus.generation
         for p, value, info in zip(batch, results, infos):
             stats = {
                 "queue_s": t_start - p.t_enqueue,
@@ -409,13 +675,16 @@ class CorrServer:
                 "batch_occupancy": info.occupancy,
                 "plan_cache_hit": info.plan_cache_hit,
                 "passes": info.passes,
+                "corpus": p.corpus_id,
+                "corpus_generation": generation,
             }
             p.future.set_result(ServedResult(value=value, stats=stats))
 
-    def _serve_one(self, p: _Pending, t_start: float) -> None:
+    def _serve_one(self, batcher: QueryBatcher, p: _Pending,
+                   t_start: float) -> None:
         """Serve one request of a split batch in its own launch."""
         try:
-            results, infos = self._execute_batch([p.query])
+            results, infos = self._execute_batch(batcher, [p.query])
         except BaseException as e:  # noqa: BLE001 — this request's error
             self._record_dispatch(ok=False)
             with self._cv:
@@ -438,15 +707,22 @@ class CorrServer:
             "batch_occupancy": info.occupancy,
             "plan_cache_hit": info.plan_cache_hit,
             "passes": info.passes,
+            "corpus": p.corpus_id,
+            "corpus_generation": batcher.corpus.generation,
         }))
 
     # -- lifecycle / observability ------------------------------------------
 
     def stats(self) -> dict:
         """Server-level counters plus the plan- and transform-cache views
-        (the serving benchmark reads these)."""
+        (the serving benchmark reads these).  ``corpora`` maps every
+        registered corpus id to its handle stats (generation, live drift
+        counters included); ``corpus`` stays the default corpus's view.
+        ``watches`` aggregates standing-query activity."""
         with self._cv:
             batches = self._batches
+            watches = list(self._watches)
+            batchers = dict(self._batchers)
             served = {
                 "requests": self._requests,
                 "batches": batches,
@@ -463,15 +739,25 @@ class CorrServer:
             }
         served["plan_cache"] = self.plan_cache.stats()
         served["corpus"] = self.corpus.stats()
+        served["corpora"] = {cid: b.corpus.stats()
+                             for cid, b in batchers.items()}
+        served["watches"] = {
+            "count": len(watches),
+            "revalidations": sum(w.revalidations for w in watches),
+            "pushes": sum(w.pushes for w in watches),
+        }
         return served
 
     def close(self, timeout: Optional[float] = None) -> None:
-        """Drain the queue (every accepted Future resolves), then stop the
-        dispatcher.  Idempotent."""
+        """Drain the queue (every accepted Future resolves), stop the
+        dispatcher, and detach every standing query.  Idempotent."""
         with self._cv:
             self._closed = True
+            watches = list(self._watches)
             self._cv.notify_all()
         self._thread.join(timeout)
+        for w in watches:
+            w.close()
 
     def __enter__(self) -> "CorrServer":
         return self
@@ -481,4 +767,4 @@ class CorrServer:
 
 
 __all__ = ["CorrServer", "DeadlineExceeded", "ServedResult",
-           "ServerOverloaded"]
+           "ServerOverloaded", "WatchHandle"]

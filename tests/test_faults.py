@@ -228,6 +228,67 @@ def test_recovery_rejects_masked_and_pvalue_runs():
 
 
 # ---------------------------------------------------------------------------
+# Recovering executor over rectangular grids (the delta-pass workload)
+# ---------------------------------------------------------------------------
+# The coverage bitmap is indexed by global tile id, which GridWorkload's
+# row-major bijection provides exactly like the triangular one — these pin
+# that corr(x, y, recovery=) and the streaming delta passes built on it
+# self-heal over X-vs-Y grids too, not just symmetric triangles.
+
+
+GRID_KW = dict(t=8, l_blk=8, max_tiles_per_pass=2)  # 24x40 -> 15 tiles
+
+
+def test_grid_transient_retry_bit_identical():
+    x, y = _x(24, 16, seed=9), _x(40, 16, seed=10)
+    baseline = np.asarray(corr(x, y, **GRID_KW))
+    plan = FaultPlan.single("pass_launch", "transient", at=3, times=2)
+    pol = _policy()
+    with plan.armed():
+        r = np.asarray(corr(x, y, recovery=pol, **GRID_KW))
+    np.testing.assert_array_equal(r, baseline)
+    assert len(plan.fired) == 2
+    assert [e["action"] for e in pol.log] == ["retry", "retry"]
+
+
+def test_grid_oom_halves_pass_and_completes():
+    x, y = _x(24, 16, seed=11), _x(40, 16, seed=12)
+    baseline = np.asarray(corr(x, y, **GRID_KW))
+    plan = FaultPlan.single("pass_launch", "oom", at=4)
+    pol = _policy()
+    with plan.armed():
+        r = np.asarray(corr(x, y, recovery=pol, **GRID_KW))
+    np.testing.assert_array_equal(r, baseline)
+    assert [e["action"] for e in pol.log] == ["shrink_pass"]
+
+
+def test_grid_device_loss_resumes_from_coverage():
+    x, y = _x(24, 16, seed=13), _x(40, 16, seed=14)
+    baseline = np.asarray(corr(x, y, **GRID_KW))
+    plan = FaultPlan.single("pass_launch", "device_loss", at=3)
+    pol = _policy(
+        on_device_loss=lambda mesh, pl, exc: (mesh, pl.repartition(1)))
+    with plan.armed():
+        r = np.asarray(corr(x, y, recovery=pol, **GRID_KW))
+    np.testing.assert_array_equal(r, baseline)
+    assert [e["action"] for e in pol.log] == ["shrink_mesh"]
+
+
+def test_grid_topk_recovery_bit_identical():
+    from repro.core.sinks import TopKSink
+    x, y = _x(24, 16, seed=15), _x(40, 16, seed=16)
+    baseline = corr(x, y, sink=TopKSink(4), **GRID_KW)
+    plan = FaultPlan([FaultSpec("pass_launch", "transient", (2,)),
+                      FaultSpec("pass_launch", "oom", (5,))])
+    pol = _policy()
+    with plan.armed():
+        r = corr(x, y, sink=TopKSink(4), recovery=pol, **GRID_KW)
+    np.testing.assert_array_equal(r["indices"], baseline["indices"])
+    np.testing.assert_array_equal(r["values"], baseline["values"])
+    assert len(plan.fired) == 2
+
+
+# ---------------------------------------------------------------------------
 # Crash-atomic, self-verifying checkpoints
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,530 @@
+"""Live corpora: incremental ingest, delta plans, standing queries (ISSUE 9).
+
+Covers the streaming subsystem (serving/live.py + the corpus/server
+hooks): running-moment maintenance (Welford seed + delta merge) with the
+pinned drift bound and the exact-refresh guarantee, delta-aware execution
+(an append of d rows launches ONLY the d-vs-n grid + d-vs-d triangle —
+kernel-spy asserted — and merges bit-for-bit into the standing state),
+generation versioning, standing-query revalidation and push, multi-corpus
+routing, the rank-measure warn-and-re-transform guard, and recovery
+composition on delta passes.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import repro.core.allpairs as allpairs
+from repro.core import measures
+from repro.core.api import corr
+from repro.core.mapping import GridWorkload, TriangularWorkload
+from repro.core.plan import prepare_operand_raw, take_operand_rows
+from repro.core.sinks import TopKSink, topk_merge_rows
+from repro.runtime.faults import FaultPlan, RetryPolicy
+from repro.serving import (DRIFT_TOL, CorpusHandle, CorrServer,
+                           IncrementalOperand, LiveIndex, merge_row_moments,
+                           row_moments, supports_incremental,
+                           topk_rows_from_dense)
+
+KW = dict(t=8, l_blk=8)
+
+
+def _x(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, l)).astype(np.float32)
+
+
+def _mutate(handle, rng, steps, l):
+    """Drive `steps` mixed append/update cycles; return the final raw
+    corpus as independently maintained numpy ground truth."""
+    ref = np.asarray(handle.x).copy()
+    for _ in range(steps):
+        if rng.random() < 0.5:
+            d = rng.standard_normal(
+                (int(rng.integers(1, 7)), l)).astype(np.float32)
+            handle.append(d)
+            ref = np.concatenate([ref, d])
+        else:
+            k = int(rng.integers(1, min(5, ref.shape[0] + 1)))
+            idx = np.sort(rng.choice(ref.shape[0], size=k, replace=False))
+            rows = rng.standard_normal((k, l)).astype(np.float32)
+            handle.update(idx, rows)
+            ref[idx] = rows
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# Running moments
+# ---------------------------------------------------------------------------
+
+
+def test_row_moments_match_direct():
+    x = _x(9, 13, seed=1)
+    mean, m2 = map(np.asarray, row_moments(x))
+    np.testing.assert_allclose(mean, x.mean(axis=1), rtol=1e-6)
+    np.testing.assert_allclose(
+        m2, ((x - x.mean(axis=1, keepdims=True)) ** 2).sum(axis=1),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_merge_row_moments_matches_recompute():
+    old = _x(6, 17, seed=2)
+    new = _x(6, 17, seed=3)
+    mean, m2 = row_moments(old)
+    mean2, m22 = map(np.asarray, merge_row_moments(mean, m2, old, new))
+    ref_mean, ref_m2 = map(np.asarray, row_moments(new))
+    np.testing.assert_allclose(mean2, ref_mean, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(m22, ref_m2, rtol=1e-3, atol=1e-3)
+
+
+def test_supports_incremental_by_measure():
+    for name in ("pearson", "cosine", "covariance", "dot"):
+        assert supports_incremental(measures.get(name), None), name
+    for name in ("spearman", "kendall", "kendall_tau_b"):
+        assert not supports_incremental(measures.get(name), None), name
+    # quantized dtypes need per-row scales: no incremental path
+    assert not supports_incremental(measures.get("pearson"),
+                                    jnp.dtype(jnp.int8))
+
+
+def test_incremental_operand_append_update_refresh():
+    meas = measures.get("pearson")
+    x = _x(10, 12, seed=4)
+    st_ = IncrementalOperand(x, meas, None, 8, 8)
+    d = _x(3, 12, seed=5)
+    st_.append(d)
+    x = np.concatenate([x, d])
+    idx = np.array([1, 11])
+    rows = _x(2, 12, seed=6)
+    st_.update(idx, x[idx], rows)
+    x[idx] = rows
+    cold = np.asarray(prepare_operand_raw(jnp.asarray(x), meas, None, 8, 8))
+    np.testing.assert_allclose(np.asarray(st_.operand), cold,
+                               rtol=1e-5, atol=1e-5)
+    assert st_.update_batches == 1
+    st_.refresh(jnp.asarray(x))
+    # the exact-refresh contract: bitwise equal to a cold transform
+    assert np.array_equal(np.asarray(st_.operand), cold)
+    assert st_.update_batches == 0
+
+
+def test_incremental_operand_rejects_rank_measures():
+    with pytest.raises(ValueError, match="no incremental"):
+        IncrementalOperand(_x(8, 10), measures.get("kendall"), None, 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# Drift: pinned bound between incremental cycles and a cold transform
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_property_drift_bounded_over_cycles(seed):
+    """After N mixed append/update cycles, the standing dense result is
+    within DRIFT_TOL of a cold corr() over the final corpus (the ISSUE's
+    pinned drift budget for incremental paths)."""
+    rng = np.random.default_rng(seed)
+    h = CorpusHandle(_x(12, 10, seed=seed % 997), **KW)
+    li = LiveIndex(h, measure="pearson")
+    ref = _mutate(h, rng, steps=6, l=10)
+    live = li.result()
+    cold = np.asarray(corr(ref, **KW))
+    assert np.abs(live["r"] - cold).max() <= DRIFT_TOL
+    assert live["generation"] == h.generation == 6
+
+
+def test_exact_refresh_restores_bit_identity():
+    """The drift budget triggers an exact rebuild: after `drift_budget`
+    update batches the maintained operand is bitwise a cold transform."""
+    h = CorpusHandle(_x(16, 12, seed=7), drift_budget=3, **KW)
+    _ = h.operand("pearson")
+    rng = np.random.default_rng(8)
+    for i in range(3):
+        idx = np.sort(rng.choice(h.n, size=2, replace=False))
+        h.update(idx, rng.standard_normal((2, 12)).astype(np.float32))
+    st_ = h.stats()
+    assert st_["refreshes"] == 1                 # budget of 3 spent once
+    assert st_["live"]["pearson/None"]["update_batches"] == 0
+    cold = np.asarray(prepare_operand_raw(
+        h.x, measures.get("pearson"), None, 8, 8))
+    assert np.array_equal(np.asarray(h.operand("pearson")), cold)
+    # manual refresh gives the same contract at any time
+    h.update(np.array([0]), rng.standard_normal((1, 12)).astype(np.float32))
+    h.refresh()
+    cold = np.asarray(prepare_operand_raw(
+        h.x, measures.get("pearson"), None, 8, 8))
+    assert np.array_equal(np.asarray(h.operand("pearson")), cold)
+
+
+def test_append_is_bit_identical_to_cold():
+    """Appends only *seed* fresh moments (no merge): the extended operand
+    and the standing dense result match a cold run exactly."""
+    h = CorpusHandle(_x(20, 12, seed=9), **KW)
+    li = LiveIndex(h, measure="pearson")
+    d = _x(5, 12, seed=10)
+    h.append(d)
+    full = np.concatenate([_x(20, 12, seed=9), d])
+    cold_u = np.asarray(prepare_operand_raw(
+        jnp.asarray(full), measures.get("pearson"), None, 8, 8))
+    assert np.array_equal(np.asarray(h.operand("pearson")), cold_u)
+    assert np.array_equal(li.result()["r"], np.asarray(corr(full, **KW)))
+
+
+# ---------------------------------------------------------------------------
+# Delta-aware execution: only the delta tiles launch
+# ---------------------------------------------------------------------------
+
+
+def test_append_launches_only_delta_tiles(monkeypatch):
+    """The acceptance criterion: an append of d rows launches exactly one
+    d-vs-n grid stream and one d-vs-d triangle stream — never the full
+    (n+d) triangle."""
+    h = CorpusHandle(_x(40, 12, seed=11), **KW)
+    li = LiveIndex(h, measure="pearson")
+    launches = []
+    orig = allpairs.launch_tiles
+
+    def spy(plan, u, j0, launch, v=None, grid_cols=None):
+        launches.append(plan.workload)
+        return orig(plan, u, j0, launch, v=v, grid_cols=grid_cols)
+
+    monkeypatch.setattr(allpairs, "launch_tiles", spy)
+    h.append(_x(6, 12, seed=12))
+    kinds = [type(w).__name__ for w in launches]
+    assert kinds == ["GridWorkload", "TriangularWorkload"]
+    grid, tri = launches
+    assert grid == GridWorkload(1, 5)            # ceil(6/8) x ceil(40/8)
+    assert tri == TriangularWorkload(1)          # ceil(6/8) triangle
+    delta_tiles = grid.job_count + tri.job_count
+    full_tiles = TriangularWorkload(-(-46 // 8)).job_count
+    assert delta_tiles < full_tiles              # 6 << 21
+
+
+def test_update_launches_only_delta_grid(monkeypatch):
+    h = CorpusHandle(_x(40, 12, seed=13), **KW)
+    li = LiveIndex(h, measure="pearson")
+    launches = []
+    orig = allpairs.launch_tiles
+
+    def spy(plan, u, j0, launch, v=None, grid_cols=None):
+        launches.append(plan.workload)
+        return orig(plan, u, j0, launch, v=v, grid_cols=grid_cols)
+
+    monkeypatch.setattr(allpairs, "launch_tiles", spy)
+    h.update(np.array([3, 17]), _x(2, 12, seed=14))
+    assert [type(w).__name__ for w in launches] == ["GridWorkload"]
+    assert launches[0] == GridWorkload(1, 5)
+
+
+def test_live_index_topk_matches_cold_over_cycles():
+    rng = np.random.default_rng(15)
+    h = CorpusHandle(_x(20, 12, seed=15), **KW)
+    li = LiveIndex(h, measure="pearson", k=3)
+    ref = _mutate(h, rng, steps=5, l=12)
+    cold = corr(ref, sink=TopKSink(3), **KW)
+    live = li.result()
+    assert np.array_equal(live["indices"], np.asarray(cold["indices"]))
+    assert np.abs(live["values"]
+                  - np.asarray(cold["values"])).max() <= DRIFT_TOL
+    assert live["generation"] == h.generation
+
+
+def test_live_index_delta_recovery_composes():
+    """recovery= on a LiveIndex arms the self-healing executor for the
+    rectangular delta passes: an injected transient on the append grid
+    still yields the exact standing result."""
+    h = CorpusHandle(_x(16, 12, seed=16), **KW)
+    li = LiveIndex(h, measure="pearson",
+                   recovery=RetryPolicy(sleep=lambda s: None),
+                   max_tiles_per_pass=2)
+    plan = FaultPlan.single("pass_launch", "transient", at=1)
+    with plan.armed():
+        h.append(_x(5, 12, seed=17))
+    assert plan.fired == [("pass_launch", 1, "transient")]
+    cold = np.asarray(corr(np.asarray(h.x), **KW))
+    assert np.abs(li.result()["r"] - cold).max() == 0.0
+
+
+def test_live_index_rebuild_matches_cold():
+    h = CorpusHandle(_x(12, 10, seed=18), **KW)
+    li = LiveIndex(h, measure="pearson")
+    _mutate(h, np.random.default_rng(19), steps=4, l=10)
+    li.rebuild()
+    cold = np.asarray(corr(np.asarray(h.x), **KW))
+    assert np.array_equal(li.result()["r"], cold)
+    assert li.result()["generation"] == h.generation
+
+
+def test_live_index_close_stops_tracking():
+    h = CorpusHandle(_x(10, 10, seed=20), **KW)
+    li = LiveIndex(h, measure="pearson")
+    li.close()
+    h.append(_x(2, 10, seed=21))
+    assert li.result()["generation"] == 0        # frozen at close
+
+
+# ---------------------------------------------------------------------------
+# Generations
+# ---------------------------------------------------------------------------
+
+
+def test_generation_versioning():
+    h = CorpusHandle(_x(10, 10, seed=22), **KW)
+    assert h.generation == 0
+    d1 = h.append(_x(2, 10, seed=23))
+    assert (d1.generation, d1.kind, d1.lo, d1.hi) == (1, "append", 10, 12)
+    assert d1.count == 2
+    d2 = h.update(np.array([0]), _x(1, 10, seed=24))
+    assert (d2.generation, d2.kind) == (2, "update")
+    assert d2.count == 1
+    assert h.generation == 2
+    assert h.stats()["generation"] == 2
+
+
+def test_served_results_name_generation():
+    with CorrServer(_x(16, 12, seed=25), max_wait_s=0.0, **KW) as srv:
+        probes = _x(2, 12, seed=26)
+        r0 = srv.query(probes)
+        assert r0.stats["corpus_generation"] == 0
+        assert r0.stats["corpus"] == "default"
+        srv.corpus.append(_x(3, 12, seed=27))
+        r1 = srv.query(probes)
+        assert r1.stats["corpus_generation"] == 1
+        assert r1.value.shape == (2, 19)
+        cold = np.asarray(corr(probes, np.asarray(srv.corpus.x), **KW))
+        np.testing.assert_array_equal(np.asarray(r1.value), cold)
+
+
+# ---------------------------------------------------------------------------
+# Standing queries (server.watch)
+# ---------------------------------------------------------------------------
+
+
+def test_watch_initial_snapshot_matches_cold():
+    with CorrServer(_x(24, 12, seed=28), max_wait_s=0.0, **KW) as srv:
+        probes = _x(3, 12, seed=29)
+        w = srv.watch(probes, 3)
+        cold = corr(probes, np.asarray(srv.corpus.x), sink=TopKSink(3), **KW)
+        cur = w.current()
+        assert np.array_equal(cur["indices"], np.asarray(cold["indices"]))
+        np.testing.assert_array_equal(cur["values"],
+                                      np.asarray(cold["values"]))
+        assert cur["generation"] == 0
+
+
+def test_watch_revalidates_and_pushes_on_append():
+    pushes = []
+    with CorrServer(_x(24, 12, seed=30), max_wait_s=0.0, **KW) as srv:
+        probes = _x(3, 12, seed=31)
+        w = srv.watch(probes, 3, callback=pushes.append)
+        # rows strongly correlated with probe 0 MUST enter its top-k
+        strong = (probes[0:1] * 2.0 + 0.01).astype(np.float32)
+        srv.corpus.append(np.concatenate([strong, _x(2, 12, seed=32)]))
+        cold = corr(probes, np.asarray(srv.corpus.x), sink=TopKSink(3), **KW)
+        cur = w.current()
+        assert np.array_equal(cur["indices"], np.asarray(cold["indices"]))
+        assert cur["indices"][0, 0] == 24        # the appended strong row
+        assert cur["generation"] == 1
+        assert len(pushes) == 1 and pushes[0]["generation"] == 1
+        # the pushed snapshot IS the new current state
+        assert np.array_equal(pushes[0]["indices"], cur["indices"])
+        st_ = srv.stats()["watches"]
+        assert st_ == {"count": 1, "revalidations": 1, "pushes": 1}
+
+
+def test_watch_update_of_kept_column_recomputes_exactly():
+    pushes = []
+    with CorrServer(_x(24, 12, seed=33), max_wait_s=0.0, **KW) as srv:
+        probes = _x(3, 12, seed=34)
+        w = srv.watch(probes, 3, callback=pushes.append)
+        kept = int(w.current()["indices"][0, 0])
+        # demote the kept column to noise: its row must drop out and the
+        # k-th boundary must move — only an exact recompute gets this right
+        srv.corpus.update(np.array([kept]), _x(1, 12, seed=35))
+        cold = corr(probes, np.asarray(srv.corpus.x), sink=TopKSink(3), **KW)
+        cur = w.current()
+        assert np.array_equal(cur["indices"], np.asarray(cold["indices"]))
+        assert np.abs(cur["values"]
+                      - np.asarray(cold["values"])).max() <= DRIFT_TOL
+        assert cur["generation"] == 1
+
+
+def test_watch_no_push_when_kept_set_unchanged():
+    pushes = []
+    with CorrServer(_x(24, 12, seed=36), max_wait_s=0.0, **KW) as srv:
+        probes = _x(2, 12, seed=37)
+        w = srv.watch(probes, 2, callback=pushes.append)
+        before = w.current()
+        # orthogonal noise rows: they cannot displace anything kept
+        weak = np.zeros((2, 12), np.float32)
+        weak[:, 0] = 1e-6
+        srv.corpus.append(weak)
+        cur = w.current()
+        assert cur["generation"] == 1            # revalidated ...
+        assert w.revalidations == 1
+        if np.array_equal(before["indices"], cur["indices"]):
+            assert pushes == []                  # ... but nothing pushed
+
+
+def test_unwatch_stops_revalidation():
+    with CorrServer(_x(16, 12, seed=38), max_wait_s=0.0, **KW) as srv:
+        w = srv.watch(_x(2, 12, seed=39), 2)
+        srv.unwatch(w)
+        srv.corpus.append(_x(2, 12, seed=40))
+        assert w.current()["generation"] == 0
+        assert srv.stats()["watches"]["count"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Multi-corpus routing
+# ---------------------------------------------------------------------------
+
+
+def test_multi_corpus_routing_and_stats():
+    xa, xb = _x(16, 12, seed=41), _x(12, 10, seed=42)
+    with CorrServer(xa, max_wait_s=0.0, **KW) as srv:
+        srv.add_corpus("b", xb)
+        assert srv.corpora() == ["b", "default"]
+        pa = _x(2, 12, seed=43)
+        pb = _x(2, 10, seed=44)
+        ra = srv.query(pa)
+        rb = srv.query(pb, corpus="b", k=4)
+        np.testing.assert_array_equal(np.asarray(ra.value),
+                                      np.asarray(corr(pa, xa, **KW)))
+        cold_b = corr(pb, xb, sink=TopKSink(4), **KW)
+        np.testing.assert_array_equal(rb.value["indices"],
+                                      np.asarray(cold_b["indices"]))
+        assert ra.stats["corpus"] == "default"
+        assert rb.stats["corpus"] == "b"
+        st_ = srv.stats()
+        assert sorted(st_["corpora"]) == ["b", "default"]
+        assert st_["corpora"]["b"]["rows"] == 12
+        # probe-length validation routes per corpus — the mismatch fails
+        # the future at dispatch (seed semantics), never the dispatcher
+        with pytest.raises(ValueError, match="corpus has l=10"):
+            srv.submit(pa, corpus="b").result(timeout=60)
+        with pytest.raises(ValueError, match="unknown corpus"):
+            srv.submit(pa, corpus="nope")
+        with pytest.raises(ValueError, match="already registered"):
+            srv.add_corpus("b", xb)
+
+
+def test_multi_corpus_batch_partitions_per_corpus():
+    """Requests against different corpora may share a coalescing window
+    but never a launch — each resolves against its own corpus."""
+    xa, xb = _x(16, 12, seed=45), _x(12, 12, seed=46)
+    with CorrServer(xa, max_wait_s=0.05, max_batch_rows=4096, **KW) as srv:
+        srv.add_corpus("b", xb)
+        pa, pb = _x(2, 12, seed=47), _x(2, 12, seed=48)
+        fa = srv.submit(pa)
+        fb = srv.submit(pb, corpus="b")
+        np.testing.assert_array_equal(np.asarray(fa.result().value),
+                                      np.asarray(corr(pa, xa, **KW)))
+        np.testing.assert_array_equal(np.asarray(fb.result().value),
+                                      np.asarray(corr(pb, xb, **KW)))
+        assert fa.result().value.shape == (2, 16)
+        assert fb.result().value.shape == (2, 12)
+
+
+def test_watch_routes_per_corpus():
+    xa, xb = _x(16, 12, seed=49), _x(12, 12, seed=50)
+    with CorrServer(xa, max_wait_s=0.0, **KW) as srv:
+        hb = srv.add_corpus("b", xb)
+        w = srv.watch(_x(2, 12, seed=51), 2, corpus="b")
+        assert w.current()["corpus"] == "b"
+        # default-corpus mutations never touch a "b" watch
+        srv.corpus.append(_x(2, 12, seed=52))
+        assert w.current()["generation"] == 0
+        hb.append(_x(2, 12, seed=53))
+        assert w.current()["generation"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Rank-measure guard: warn once, re-transform exactly
+# ---------------------------------------------------------------------------
+
+
+def test_rank_measure_mutation_warns_once_and_retransforms():
+    h = CorpusHandle(_x(12, 10, seed=54), **KW)
+    _ = h.operand("kendall")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        h.append(_x(2, 10, seed=55))
+        h.append(_x(2, 10, seed=56))             # second mutation: silent
+    msgs = [str(x.message) for x in w
+            if "no incremental" in str(x.message)]
+    assert len(msgs) == 1 and "'kendall'" in msgs[0]
+    # the fallback is EXACT: next operand() is a cold full re-transform
+    cold = np.asarray(prepare_operand_raw(
+        h.x, measures.get("kendall"), None, 8, 8))
+    assert np.array_equal(np.asarray(h.operand("kendall")), cold)
+    # and never stale: the served answer matches a cold corr()
+    probes = _x(2, 10, seed=57)
+    with CorrServer(h, max_wait_s=0.0, **KW) as srv:
+        got = srv.query(probes, measure="kendall")
+        cold_r = np.asarray(corr(probes, np.asarray(h.x),
+                                 measure="kendall", **KW))
+        np.testing.assert_array_equal(np.asarray(got.value), cold_r)
+
+
+def test_moment_measures_do_not_warn():
+    h = CorpusHandle(_x(12, 10, seed=58), **KW)
+    _ = h.operand("pearson")
+    _ = h.operand("cosine")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        h.append(_x(2, 10, seed=59))
+    assert not [x for x in w if "no incremental" in str(x.message)]
+
+
+# ---------------------------------------------------------------------------
+# Mutation validation + helpers
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_validation():
+    h = CorpusHandle(_x(8, 10, seed=60), **KW)
+    with pytest.raises(ValueError, match="must be"):
+        h.append(_x(2, 9, seed=61))              # wrong l
+    with pytest.raises(ValueError, match="empty"):
+        h.append(np.zeros((0, 10), np.float32))
+    with pytest.raises(ValueError, match="unique"):
+        h.update(np.array([1, 1]), _x(2, 10, seed=62))
+    with pytest.raises(ValueError, match="out of range"):
+        h.update(np.array([8]), _x(1, 10, seed=63))
+    with pytest.raises(ValueError, match="entries for"):
+        h.update(np.array([1]), _x(2, 10, seed=64))
+    assert h.generation == 0                     # nothing committed
+
+
+def test_take_operand_rows_slices_and_repads():
+    u = jnp.arange(24, dtype=jnp.float32).reshape(6, 4)
+    out = np.asarray(take_operand_rows(u, slice(2, 5), 8))
+    assert out.shape == (8, 4)
+    np.testing.assert_array_equal(out[:3], np.asarray(u)[2:5])
+    assert (out[3:] == 0).all()
+    with pytest.raises(ValueError, match="more than n_pad"):
+        take_operand_rows(u, slice(0, 6), 4)
+
+
+def test_topk_rows_from_dense_matches_sink_order():
+    rng = np.random.default_rng(65)
+    scores = rng.standard_normal((5, 9)).astype(np.float32)
+    vals, idx = topk_rows_from_dense(scores, 3)
+    # reference: canonical merge one candidate batch at a time
+    rv = np.zeros((5, 3), np.float32)
+    ri = np.full((5, 3), -1, np.int64)
+    for j in range(9):
+        topk_merge_rows(rv, ri, np.arange(5), np.full(5, j),
+                        scores[:, j], 3)
+    np.testing.assert_array_equal(idx, ri)
+    np.testing.assert_array_equal(vals, rv)
+    # per-row self-exclusion drops exactly that column
+    vals2, idx2 = topk_rows_from_dense(scores, 3,
+                                       exclude_cols=np.arange(5))
+    for r in range(5):
+        assert r not in idx2[r]
