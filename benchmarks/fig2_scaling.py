@@ -62,6 +62,47 @@ def run(subprocess_part: bool = True) -> None:
             print(f"fig2/measured_p{p},{dt*1e6:.1f},"
                   f"tiles_per_dev={tiles_per_device(plan.total_tiles, p)};"
                   f"maxerr={err:.1e}")
+
+        # multi-host scale-out: 2 hosts x 4 devices write disjoint shard
+        # files; the device-side top-k epilogue crosses O(n*k) to hosts
+        # instead of O(n^2 / hosts).  (docs/scaling.md)
+        import tempfile, time
+        from repro.core.plan import ExecutionPlan
+        from repro.core.allpairs import execute_plan
+        from repro.core.sinks import DeviceTopKSink, ShardedHostSink, \\
+            TopKSink, assemble
+        mesh = jax.make_mesh((8,), ("d",))
+        ep = ExecutionPlan.create(128, 64, t=16, l_blk=32, p=8,
+                                  max_tiles_per_pass=4)
+        u = ep.prepare(x)
+        d = tempfile.mkdtemp()
+        t0 = time.perf_counter()
+        for h in range(2):
+            r = execute_plan(ep, u, sink=ShardedHostSink(
+                d, host=h, n_hosts=2), mesh=mesh)
+            assert r["complete"], h
+        dt = time.perf_counter() - t0
+        err = float(np.max(np.abs(assemble(d) - np.asarray(ref))))
+        host_bytes = ep.total_tiles * ep.t * ep.t * 4 // 2
+        print(f"fig2/multihost_sharded_h2,{dt*1e6:.1f},"
+              f"hosts=2;tiles={ep.total_tiles};"
+              f"bytes_per_host={host_bytes};maxerr={err:.1e}")
+        k = 8
+        t0 = time.perf_counter()
+        dtk = execute_plan(ep, u, sink=DeviceTopKSink(k), mesh=mesh)
+        dt = time.perf_counter() - t0
+        ep1 = ExecutionPlan.create(128, 64, t=16, l_blk=32,
+                                   max_tiles_per_pass=4)
+        tk = execute_plan(ep1, ep1.prepare(x), sink=TopKSink(k))
+        same = (np.array_equal(dtk["indices"], tk["indices"])
+                and np.array_equal(dtk["values"], tk["values"]))
+        dense_bytes = ep.total_tiles * ep.t * ep.t * 4 // 2
+        topk_bytes = 128 * k * 8
+        print(f"fig2/multihost_topk_device,{dt*1e6:.1f},"
+              f"k={k};bit_identical={int(same)};"
+              f"bytes_to_host={topk_bytes};"
+              f"dense_bytes_per_host={dense_bytes};"
+              f"crossing_ratio={dense_bytes / topk_bytes:.1f}")
     """)
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",

@@ -54,7 +54,8 @@ from repro.core.plan import (ExecutionPlan, pad_operands, resolve_interpret,
 from repro.core.quantize import Operand, operand_parts
 from repro.core.sinks import (DenseSink, TileSink, place_tiles_host,
                               scatter_tiles, symmetrize)
-from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles
+from repro.kernels.pcc_tile import (DEFAULT_LBLK, DEFAULT_TILE, pcc_tiles,
+                                    pcc_topk_tiles)
 from repro.runtime import faults
 
 Array = jax.Array
@@ -137,14 +138,41 @@ def launch_tiles(plan: ExecutionPlan, u, j0, launch: int, v=None,
                      row_scale=row_scale, col_scale=col_scale)
 
 
+def launch_topk_tiles(plan: ExecutionPlan, u, j0, dev_hi, launch: int,
+                      kk: int, v=None, grid_cols: Optional[int] = None):
+    """Launch seam of the device-side top-k epilogue
+    (kernels/pcc_tile.pcc_topk_tiles): one pass's tiles are computed and
+    folded into per-row top-k state entirely in VMEM, so only O(n * kk)
+    state crosses to the host.  j0 is the *raw* (unclamped) device-local
+    global start and dev_hi the device's exclusive bound — the kernel's
+    validity guard, which replaces the executor's clamped-slot filtering.
+    """
+    u_data, u_scale = operand_parts(u)
+    v_data, _ = operand_parts(v) if v is not None else (None, None)
+    if u_scale is not None or plan.measure.tile_kernel is not None:
+        raise ValueError(
+            "device top-k epilogue supports the plain GEMM kernel only "
+            "(no quantized scales, no custom tile kernels) — "
+            "DeviceTopKSink.open validates this")
+    return pcc_topk_tiles(u_data, j0, dev_hi, t=plan.t, l_blk=plan.l_blk,
+                          pass_tiles=launch, kk=kk,
+                          n_cols_valid=plan.n_cols,
+                          symmetric_problem=plan.symmetric_problem,
+                          interpret=plan.interpret,
+                          epilogue=plan.epilogue_spec,
+                          v_pad=v_data, grid_cols=grid_cols)
+
+
 def _local_launches(plan: ExecutionPlan, u_pad: Array,
                     v_pad: Optional[Array] = None, start_pass: int = 0,
-                    skip=frozenset()):
+                    skip=frozenset(), state_k: Optional[int] = None):
     """Single-device pass launches: consecutive spans of the workload's
     tile-id range, each kernel sized to its actual tile count.  start_pass
     skips already-completed passes without computing them (checkpoint
     resume); `skip` drops individual later passes (coverage resume after
-    an elastic repartition, where completed work is no longer a prefix)."""
+    an elastic repartition, where completed work is no longer a prefix).
+    state_k switches the launch to the device top-k epilogue: the buffer
+    becomes the kernel's per-row state tuple instead of tiles."""
     grid_cols = plan.workload.grid_cols
     sizes = plan.launch_sizes
     for k, launch in list(enumerate(sizes))[start_pass:]:
@@ -152,6 +180,13 @@ def _local_launches(plan: ExecutionPlan, u_pad: Array,
             continue
         faults.check("pass_launch")
         lo = plan.pass_offset(k)
+        if state_k is not None:
+            buf = launch_topk_tiles(plan, u_pad, lo, plan.total_tiles,
+                                    launch, state_k, v=v_pad,
+                                    grid_cols=grid_cols)
+            yield k, np.arange(lo, lo + launch, dtype=np.int64), buf, \
+                None, None
+            continue
         buf = launch_tiles(plan, u_pad, lo, launch, v=v_pad,
                            grid_cols=grid_cols)
         if not plan.fused and plan.measure.epilogue is not None:
@@ -162,7 +197,8 @@ def _local_launches(plan: ExecutionPlan, u_pad: Array,
 
 def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
                    shard_u: bool, v_pad: Optional[Array] = None,
-                   start_pass: int = 0, skip=frozenset()):
+                   start_pass: int = 0, skip=frozenset(),
+                   state_k: Optional[int] = None):
     """shard_map pass launches (paper SSIII-D): all mesh axes flatten into
     one logical PE-rank axis; device `rank` owns the contiguous tile range
     [rank*per_dev, (rank+1)*per_dev) and each pass covers at most
@@ -182,6 +218,10 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
     """
     axes = tuple(mesh.axis_names)
     grid_cols = plan.workload.grid_cols
+    if state_k is not None and shard_u:
+        raise ValueError(
+            "device top-k state does not compose with shard_u: the in-shard "
+            "all_gather would re-run per pass against state-shaped outputs")
     u_data, u_scale = operand_parts(u_pad)
     v_data, v_scale = (operand_parts(v_pad) if v_pad is not None
                        else (None, None))
@@ -235,11 +275,21 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
             rank = jnp.int32(0)
             for ax in axes:
                 rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-            j0 = jnp.minimum(rank * plan.per_dev + off[0],
-                             plan.total_tiles - 1)
             uu = u_rep if su is None else Operand(u_rep, su)
             vv = (None if v is None
                   else (v if sv is None else Operand(v, sv)))
+            if state_k is not None:
+                # the raw start and the device bound go to the kernel's
+                # validity guard: clamped remainder slots compute duplicate
+                # tiles (as always) but contribute no candidates, keeping
+                # per-(device, pass) states disjoint
+                raw = rank * plan.per_dev + off[0]
+                dev_hi = jnp.minimum((rank + 1) * plan.per_dev,
+                                     plan.total_tiles)
+                return launch_topk_tiles(plan, uu, raw, dev_hi, launch,
+                                         state_k, v=vv, grid_cols=grid_cols)
+            j0 = jnp.minimum(rank * plan.per_dev + off[0],
+                             plan.total_tiles - 1)
             # symmetric quantized runs: launch_tiles reuses su for the
             # columns when v is None, so sv only matters for grids
             return launch_tiles(plan, uu, j0, launch, v=vv,
@@ -258,8 +308,14 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
                  + ((rep_spec,) if v_in is not None else ())
                  + ((P(None), P(None)) if has_s else ())
                  + (P(None),))
+        if state_k is not None:
+            # 2 state stacks for grids, 4 (row + mirrored col) for triangles
+            n_out = 4 if grid_cols is None else 2
+            out_spec = tuple(P(axes) for _ in range(n_out))
+        else:
+            out_spec = P(axes)
         fns[launch] = shard_map(device_fn, mesh=mesh, in_specs=specs,
-                                out_specs=P(axes), check_vma=False)
+                                out_specs=out_spec, check_vma=False)
         return fns[launch]
 
     for k, launch in list(enumerate(plan.launch_sizes))[start_pass:]:
@@ -272,6 +328,11 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
                 + ((s_row_in, s_col_in) if has_s else ())
                 + (off,))
         buf = pass_fn(launch)(*args)
+        if state_k is not None:
+            # state stacks carry their own validity guard: no clamped-slot
+            # selection to resolve, and ids are the pass's true tile set
+            yield k, plan.pass_selection(k)[0], buf, None, None
+            continue
         if not plan.fused and plan.measure.epilogue is not None:
             buf = plan.measure.epilogue(buf, plan.l)
         # The raw sharded buffer is handed on as-is: clamped tail-device
@@ -285,7 +346,8 @@ def _mesh_launches(plan: ExecutionPlan, u_pad: Array, mesh: Mesh,
 
 def _stream(plan: ExecutionPlan, u_pad: Array, *, mesh: Optional[Mesh] = None,
             shard_u: bool = False, v_pad: Optional[Array] = None,
-            start_pass: int = 0, skip=frozenset()):
+            start_pass: int = 0, skip=frozenset(),
+            state_k: Optional[int] = None):
     """Double-buffered pass stream of (k, ids, raw_buffer, sel, padded_ids):
     pulls (and thus async-dispatches) pass k+1 before yielding pass k, so a
     sink that blocks on host transfer overlaps the device's next pass
@@ -294,10 +356,11 @@ def _stream(plan: ExecutionPlan, u_pad: Array, *, mesh: Optional[Mesh] = None,
     v_pad supplies the second operand of rectangular workloads; start_pass
     resumes mid-run and `skip` drops individual later passes (coverage
     resume) — neither is ever dispatched."""
-    launches = (_local_launches(plan, u_pad, v_pad, start_pass, skip)
+    launches = (_local_launches(plan, u_pad, v_pad, start_pass, skip,
+                                state_k)
                 if mesh is None
                 else _mesh_launches(plan, u_pad, mesh, shard_u, v_pad,
-                                    start_pass, skip))
+                                    start_pass, skip, state_k))
     pending = None
     for item in launches:
         if pending is not None:
@@ -350,10 +413,20 @@ def execute_plan(plan: ExecutionPlan, u_pad: Array,
     if recovery is not None:
         return _execute_recovering(plan, u_pad, v_pad, sink=sink, mesh=mesh,
                                    shard_u=shard_u, policy=recovery)
+    state_k = _sink_state_k(sink)
     return run_sink(
         plan, sink,
         lambda k0, skip: _stream(plan, u_pad, v_pad=v_pad, mesh=mesh,
-                                 shard_u=shard_u, start_pass=k0, skip=skip))
+                                 shard_u=shard_u, start_pass=k0, skip=skip,
+                                 state_k=state_k))
+
+
+def _sink_state_k(sink: Optional[TileSink]) -> Optional[int]:
+    """State capacity for sinks that want the device top-k stream
+    (core/sinks.DeviceTopKSink), else None (the tile stream)."""
+    if sink is not None and getattr(sink, "wants_device_state", False):
+        return int(sink.k)
+    return None
 
 
 def _default_shrink(mesh: Optional[Mesh], plan: ExecutionPlan,
@@ -403,6 +476,8 @@ def _execute_recovering(plan: ExecutionPlan, u_pad: Array,
     else:
         covered = np.asarray(covered, bool).copy()
     pass_complete = getattr(snk, "pass_complete", lambda k: None)
+    state_k = _sink_state_k(snk)
+    merge_dedups = getattr(snk, "merge_dedups", False)
     failures = 0
     while not covered.all():
         k0, skip = plan.coverage_schedule(covered)
@@ -411,11 +486,17 @@ def _execute_recovering(plan: ExecutionPlan, u_pad: Array,
         try:
             stream = _stream(plan, u_pad, v_pad=v_pad, mesh=mesh,
                              shard_u=shard_u, start_pass=k0,
-                             skip=frozenset(skip))
+                             skip=frozenset(skip), state_k=state_k)
             for k, ids, buf, sel, padded in stream:
                 ids = np.asarray(ids)
                 fresh = ~covered[ids]
-                if sel is None:
+                if merge_dedups:
+                    # state-shaped buffers cannot be subset by tile id; the
+                    # sink's canonical merge drops the exact duplicates a
+                    # retried pass re-delivers (topk_merge_rows dedup=True)
+                    if fresh.any():
+                        snk.consume(ids, buf)
+                elif sel is None:
                     if fresh.all():
                         snk.consume(ids, buf)
                     elif fresh.any():
@@ -683,6 +764,7 @@ __all__ = [
     "allpairs",
     "execute_plan",
     "launch_tiles",
+    "launch_topk_tiles",
     "run_sink",
     "stream_tiles",
     "prepare",

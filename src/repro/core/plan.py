@@ -318,6 +318,34 @@ class ExecutionPlan:
     def device_ranges(self) -> Tuple[Tuple[int, int], ...]:
         return tuple(self.device_range(r) for r in range(self.p))
 
+    def host_tile_range(self, host: int, n_hosts: int) -> Tuple[int, int]:
+        """Contiguous tile-id range [lo, hi) whose *output* host `host`
+        owns in an n_hosts-process run (core/sinks.ShardedHostSink).
+
+        When the mesh is split evenly across hosts (n_hosts divides p) the
+        range is exactly the union of the host's local devices' ranges —
+        the only tiles whose pass outputs are host-addressable under
+        shard_map, so ownership is forced, not a policy choice.  A
+        single-device plan (p == 1, the host-simulation case) splits the
+        tile ids with the same ceil-partition rule the device split uses.
+        """
+        if not 0 <= host < n_hosts:
+            raise ValueError(f"host {host} out of range for {n_hosts} hosts")
+        if n_hosts == 1:
+            return 0, self.total_tiles
+        if self.p % n_hosts == 0:
+            rph = self.p // n_hosts
+            lo = self.device_range(host * rph)[0]
+            hi = self.device_range((host + 1) * rph - 1)[1]
+            return lo, hi
+        if self.p == 1:
+            tph = tiles_per_device(self.total_tiles, n_hosts)
+            lo = min(host * tph, self.total_tiles)
+            return lo, min(lo + tph, self.total_tiles)
+        raise ValueError(
+            f"n_hosts={n_hosts} must divide the mesh size p={self.p} "
+            f"(each host persists the tiles its local devices compute)")
+
     def repartition(self, new_p: int) -> "ExecutionPlan":
         """Re-slice the plan for a new device count (elastic re-meshing).
 

@@ -512,6 +512,389 @@ class HostSink(TileSink):
         return r
 
 
+class ShardedHostSink(TileSink):
+    """Multi-host output sharding: each host persists only its disjoint
+    global-tile-id range as chunked ``.npy`` files plus a JSON manifest —
+    no host ever holds (or writes) more than its 1/n_hosts slice of the
+    n x n result, which is what made CoMet's exascale all-pairs runs
+    possible (arXiv:1705.08213: device-side reductions, disjoint per-node
+    output shards).
+
+    Ownership is ``plan.host_tile_range(host, n_hosts)`` — the union of the
+    host's local devices' tile ranges, i.e. exactly the tiles whose pass
+    outputs are addressable on this host under shard_map — and is *frozen*
+    at open(): an elastic repartition mid-run (``rebind``) must not
+    re-derive ownership, or two hosts could claim one tile's output.
+
+    Durability extends the HostSink v2 sidecar scheme: every completed pass
+    commits one chunk file (tiles in ascending-id order, written to a temp
+    name, fsynced, renamed) and atomically rewrites the per-host manifest
+    ``manifest.h<host>.json`` recording the plan spec, the frozen range,
+    and per-chunk ``{file, iv, crc}`` entries (CRC32 over the chunk bytes).
+    ``resume=True`` validates the spec, re-verifies every chunk's CRC —
+    corrupt chunks are dropped and recomputed, never trusted — and reports
+    the resume schedule through the standard coverage-bitmap contract, so
+    ``recovery=RetryPolicy()`` and kill-and-resume compose exactly as for
+    HostSink.  Tiles outside the host's range report as covered, so each
+    host runs only its own pass range (passes with no owned tiles are
+    skipped outright).
+
+    ``open_manifest(dir)`` / ``assemble(dir)`` read the shards back —
+    lazily (row ranges) or fully — without requiring this sink.
+
+    Fault-injection sites: ``sink_write`` (tile staging; honours partial
+    writes), ``sink_flush`` (chunk write), ``sink_commit`` (crash before
+    the manifest rename).
+    """
+
+    MANIFEST_VERSION = 1
+
+    # Distribution-only spec fields: elastic re-meshing (device loss ->
+    # plan.repartition) changes p and the pass split WITHOUT changing a
+    # bit of the output, so shard identity — resume validation and
+    # cross-manifest agreement — must ignore them.
+    _DISTRIBUTION_KEYS = frozenset({"p", "max_tiles_per_pass", "n_pass"})
+
+    @classmethod
+    def content_spec(cls, spec: dict) -> dict:
+        """The output-identity part of a plan spec_dict."""
+        return {k: v for k, v in spec.items()
+                if k not in cls._DISTRIBUTION_KEYS}
+
+    def __init__(self, dir: str, host: int = 0, n_hosts: int = 1,
+                 resume: bool = False):
+        if n_hosts <= 0:
+            raise ValueError(f"n_hosts must be positive, got {n_hosts}")
+        if not 0 <= host < n_hosts:
+            raise ValueError(f"host {host} out of range for {n_hosts} hosts")
+        self._dir = dir
+        self._host = int(host)
+        self._n_hosts = int(n_hosts)
+        self._resume = resume
+
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self._dir, f"manifest.h{self._host}.json")
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        os.makedirs(self._dir, exist_ok=True)
+        self._chunks: List[dict] = []
+        self._pending: List[tuple] = []
+        self._covered = np.zeros(plan.total_tiles, bool)
+        if self._resume:
+            self._open_resume()
+        else:
+            self._lo, self._hi = plan.host_tile_range(self._host,
+                                                      self._n_hosts)
+            self._mark_foreign()
+            self._write_manifest()
+        k0, self._skip = plan.coverage_schedule(self._covered)
+        self._completed = k0 - 1
+
+    def _mark_foreign(self) -> None:
+        # other hosts' tiles are their problem: reporting them covered makes
+        # this host's executor run exactly its own pass range
+        self._covered[: self._lo] = True
+        self._covered[self._hi:] = True
+
+    def _chunk_crc(self, tiles: np.ndarray) -> int:
+        return zlib.crc32(np.ascontiguousarray(
+            tiles, dtype=np.float32).tobytes()) & 0xFFFFFFFF
+
+    def _write_manifest(self) -> None:
+        meas = self.plan.measure
+        clip = (list(meas.clip)
+                if self.plan.clip and meas.clip is not None else None)
+        doc = {"version": self.MANIFEST_VERSION,
+               "spec": self.plan.spec_dict(),
+               "host": self._host, "n_hosts": self._n_hosts,
+               "range": [int(self._lo), int(self._hi)],
+               "clip_range": clip,
+               "chunks": self._chunks}
+        tmp = self.manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        faults.check("sink_commit")
+        os.replace(tmp, self.manifest_path)
+        self._fsync_dir()
+
+    def _fsync_dir(self) -> None:
+        try:
+            fd = os.open(self._dir, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
+
+    def _open_resume(self) -> None:
+        try:
+            with open(self.manifest_path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise ValueError(
+                f"cannot resume shard: manifest {self.manifest_path!r} "
+                f"unreadable ({e}).  The manifest commit is atomic; delete "
+                f"the shard directory to restart this host from scratch."
+            ) from None
+        spec = self.plan.spec_dict()
+        if self.content_spec(doc.get("spec") or {}) != self.content_spec(spec):
+            raise ValueError(
+                f"cannot resume shard {self.manifest_path!r}: persisted "
+                f"plan spec {doc.get('spec')} does not match the requested "
+                f"run {spec}")
+        if (doc.get("host"), doc.get("n_hosts")) != (self._host,
+                                                     self._n_hosts):
+            raise ValueError(
+                f"cannot resume shard {self.manifest_path!r}: it belongs "
+                f"to host {doc.get('host')}/{doc.get('n_hosts')}, not "
+                f"{self._host}/{self._n_hosts}")
+        self._lo, self._hi = (int(v) for v in doc["range"])
+        self._mark_foreign()
+        dropped = 0
+        for e in doc.get("chunks", []):
+            ids = _ids_from_intervals(e.get("iv", []))
+            path = os.path.join(self._dir, e.get("file", ""))
+            try:
+                tiles = np.load(path)
+            except (OSError, ValueError):
+                dropped += 1
+                continue
+            if (tiles.shape != (ids.size, self.plan.t, self.plan.t)
+                    or int(e.get("crc", -1)) != self._chunk_crc(tiles)):
+                dropped += 1  # corrupt chunk: recompute it, never trust it
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+                continue
+            self._covered[ids] = True
+            self._chunks.append(e)
+        if dropped:
+            # durably prune so a crash right now never re-trusts a
+            # known-bad chunk
+            self._write_manifest()
+
+    # -- executor contract ---------------------------------------------------
+
+    def resume_pass(self) -> int:
+        return self._completed + 1
+
+    def skip_passes(self) -> set:
+        return set(self._skip)
+
+    def covered(self) -> np.ndarray:
+        return self._covered.copy()
+
+    def rebind(self, new_plan: ExecutionPlan) -> None:
+        # ownership stays frozen across the repartition; only the pass
+        # schedule is re-derived, and the manifest re-commits under the new
+        # spec so a crash after the shrink resumes against the right plan
+        self.plan = new_plan
+        self._commit_pending()
+        k0, self._skip = new_plan.coverage_schedule(self._covered)
+        self._completed = k0 - 1
+        self._write_manifest()
+
+    def _commit_pending(self) -> None:
+        if not self._pending:
+            return
+        ids = np.concatenate([p[0] for p in self._pending])
+        tiles = np.concatenate([p[1] for p in self._pending])
+        self._pending = []
+        order = np.argsort(ids)
+        ids, tiles = ids[order], np.ascontiguousarray(tiles[order],
+                                                      dtype=np.float32)
+        fresh = ~self._covered[ids]
+        if not fresh.all():
+            ids, tiles = ids[fresh], tiles[fresh]
+        if ids.size == 0:
+            return
+        name = f"chunk-{int(ids[0]):010d}-{int(ids[-1]):010d}.npy"
+        faults.check("sink_flush")
+        tmp = os.path.join(self._dir, name + ".tmp")
+        with open(tmp, "wb") as f:
+            np.save(f, tiles)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self._dir, name))
+        self._covered[ids] = True
+        self._chunks.append({"file": name, "iv": _id_intervals(ids),
+                             "crc": self._chunk_crc(tiles)})
+
+    def pass_complete(self, k: int) -> None:
+        self._completed = k
+        self._commit_pending()
+        self._write_manifest()
+
+    def consume(self, ids: np.ndarray, tiles: Array) -> None:
+        ids = np.asarray(ids, dtype=np.int64)
+        own = (ids >= self._lo) & (ids < self._hi)
+        if not own.any():
+            return
+        fault = faults.poll("sink_write")
+        if isinstance(fault, faults.PartialWriteFault):
+            cut = int(own.sum() * fault.fraction)
+            self._pending.append((ids[own][:cut],
+                                  np.asarray(tiles)[own][:cut]))
+            raise fault
+        if fault is not None:
+            raise fault
+        self._pending.append((ids[own], np.asarray(tiles)[own]))
+
+    def result(self) -> dict:
+        own = int(self._covered[self._lo: self._hi].sum())
+        return {"dir": self._dir, "manifest": self.manifest_path,
+                "host": self._host, "n_hosts": self._n_hosts,
+                "range": (self._lo, self._hi), "tiles": own,
+                "complete": own == self._hi - self._lo}
+
+
+class ShardedMatrix:
+    """Lazy reader over a ShardedHostSink output directory.
+
+    Validates that every per-host manifest describes the same run (same
+    plan spec), verifies chunk CRCs *as chunks are read* — a corrupt chunk
+    is refused with an error naming the file, never silently zero-filled —
+    and assembles either the full (n_rows, n_cols) matrix or any row range
+    without materialising more than the requested rows plus one chunk.
+    """
+
+    def __init__(self, manifests: List[dict], dir: str):
+        if not manifests:
+            raise ValueError(f"no manifest.h*.json found in {dir!r}")
+        self._dir = dir
+        spec0 = manifests[0]["spec"]
+        for d in manifests[1:]:
+            if (ShardedHostSink.content_spec(d["spec"])
+                    != ShardedHostSink.content_spec(spec0)):
+                raise ValueError(
+                    f"shard manifests disagree on the plan spec "
+                    f"({dir!r}): {spec0} vs {d['spec']} — these shards "
+                    f"come from different runs")
+        self.spec = spec0
+        self.n_rows = int(spec0["n_rows"])
+        self.n_cols = int(spec0["n_cols"])
+        self.t = int(spec0["t"])
+        self.total_tiles = int(spec0["total_tiles"])
+        self.symmetric = spec0["workload"] == "TriangularWorkload"
+        self.clip_range = manifests[0].get("clip_range")
+        self.hosts = sorted(int(d["host"]) for d in manifests)
+        self.ranges = {int(d["host"]): tuple(int(v) for v in d["range"])
+                       for d in manifests}
+        t = self.t
+        self._m = -(-self.n_rows // t)
+        self._mc = -(-self.n_cols // t)
+        self._chunks = []
+        for d in manifests:
+            for e in d.get("chunks", []):
+                ids = _ids_from_intervals(e.get("iv", []))
+                self._chunks.append(
+                    (os.path.join(dir, e["file"]), ids, int(e["crc"])))
+
+    def _coords(self, ids: np.ndarray):
+        if self.symmetric:
+            return mapping.job_coord_batch(self._m, ids)
+        return ids // self._mc, ids % self._mc
+
+    def _load(self, path: str, ids: np.ndarray, crc: int) -> np.ndarray:
+        try:
+            tiles = np.load(path)
+        except (OSError, ValueError) as e:
+            raise ValueError(
+                f"shard chunk {path!r} unreadable ({e}) — re-run the "
+                f"owning host with resume=True to recompute it") from None
+        data = np.ascontiguousarray(tiles, dtype=np.float32)
+        if (tiles.shape != (ids.size, self.t, self.t)
+                or (zlib.crc32(data.tobytes()) & 0xFFFFFFFF) != crc):
+            raise ValueError(
+                f"shard chunk {path!r} fails its manifest CRC — refusing "
+                f"corrupt data; re-run the owning host with resume=True to "
+                f"recompute exactly this chunk")
+        return data
+
+    def _check_complete(self, need: np.ndarray) -> None:
+        have = np.zeros(self.total_tiles, bool)
+        for _, ids, _ in self._chunks:
+            have[ids] = True
+        missing = need & ~have
+        if missing.any():
+            ivs = _id_intervals(np.nonzero(missing)[0].astype(np.int64))
+            raise ValueError(
+                f"shards in {self._dir!r} are incomplete for the requested "
+                f"rows: missing tile ids {ivs[:5]}{'...' if len(ivs) > 5 else ''}")
+
+    def rows(self, lo: int, hi: int) -> np.ndarray:
+        """Assemble rows [lo, hi) of the result — the only materialised
+        state is the (hi - lo, n_cols) output plus one chunk at a time."""
+        if not 0 <= lo <= hi <= self.n_rows:
+            raise ValueError(f"row range [{lo}, {hi}) outside "
+                             f"[0, {self.n_rows})")
+        t = self.t
+        all_ids = np.arange(self.total_tiles, dtype=np.int64)
+        ys_all, xs_all = self._coords(all_ids)
+        hit = (ys_all * t < hi) & (ys_all * t + t > lo)
+        if self.symmetric:
+            hit |= (xs_all * t < hi) & (xs_all * t + t > lo)
+        self._check_complete(hit)
+        out = np.zeros((hi - lo, self.n_cols), np.float32)
+        span = np.arange(t)
+        for path, ids, crc in self._chunks:
+            ys, xs = self._coords(ids)
+            rel_y = (ys * t < hi) & (ys * t + t > lo)
+            rel_x = (self.symmetric & (xs * t < hi) & (xs * t + t > lo)
+                     & (ys != xs))
+            if not (rel_y.any() or rel_x.any()):
+                continue
+            tiles = self._load(path, ids, crc)
+            for pick, tv, rb, cb in (
+                    (rel_y, tiles, ys, xs),
+                    (rel_x, tiles.transpose(0, 2, 1), xs, ys)):
+                if not pick.any():
+                    continue
+                sub = tv[pick]
+                rows = (rb[pick, None] * t + span)[:, :, None]
+                cols = (cb[pick, None] * t + span)[:, None, :]
+                ok = (rows >= lo) & (rows < hi) & (cols < self.n_cols)
+                okb = np.broadcast_to(ok, sub.shape)
+                out[np.broadcast_to(rows - lo, sub.shape)[okb],
+                    np.broadcast_to(cols, sub.shape)[okb]] = sub[okb]
+        if self.clip_range is not None:
+            np.clip(out, self.clip_range[0], self.clip_range[1], out=out)
+        return out
+
+    def full(self) -> np.ndarray:
+        """The complete (n_rows, n_cols) matrix — bit-identical to a
+        single-host DenseSink/HostSink run of the same plan."""
+        return self.rows(0, self.n_rows)
+
+
+def open_manifest(dir: str) -> ShardedMatrix:
+    """Open a ShardedHostSink output directory for (lazy) reading."""
+    manifests = []
+    try:
+        names = sorted(os.listdir(dir))
+    except OSError as e:
+        raise ValueError(f"cannot open shard directory {dir!r}: {e}") \
+            from None
+    for name in names:
+        if name.startswith("manifest.h") and name.endswith(".json"):
+            with open(os.path.join(dir, name)) as f:
+                manifests.append(json.load(f))
+    return ShardedMatrix(manifests, dir)
+
+
+def assemble(dir: str) -> np.ndarray:
+    """Assemble the full matrix from a (complete) set of host shards."""
+    return open_manifest(dir).full()
+
+
 class ReductionSink(TileSink):
     """Fold the tile stream through `fn(state, ids, tiles, ys, xs, plan)`.
 
@@ -765,7 +1148,8 @@ class ExceedanceSink(TileSink):
 
 
 def topk_merge_rows(vals: np.ndarray, idx: np.ndarray, r_ids: np.ndarray,
-                    c_ids: np.ndarray, v: np.ndarray, k: int) -> None:
+                    c_ids: np.ndarray, v: np.ndarray, k: int,
+                    dedup: bool = False) -> None:
     """THE canonical per-row top-k merge, in place.
 
     ``vals``/``idx`` are (n_rows, k) running state (index -1 = empty slot);
@@ -775,12 +1159,18 @@ def topk_merge_rows(vals: np.ndarray, idx: np.ndarray, r_ids: np.ndarray,
     partitioning, merge order, and state capacity >= k, ties included.
     That invariant is what lets the serving batcher slice one
     TopKSink(k_max) run into per-request top-k lists bit-identical to
-    standalone TopKSink(k) runs, and what lets live corpora
-    (serving/live.py) re-merge *delta* candidates into standing top-k
-    results without replaying the passes that produced the state.
+    standalone TopKSink(k) runs, what lets live corpora (serving/live.py)
+    re-merge *delta* candidates into standing top-k results without
+    replaying the passes that produced the state, and what makes per-host
+    partial top-k states (the device-side epilogue, kernels/pcc_tile.py)
+    merge into exactly the single-host answer.
 
     A row's candidate columns must be unique and must not duplicate
     columns already held for that row (duplicates would occupy two slots).
+    ``dedup=True`` relaxes that: exact (column, value) duplicates — which a
+    recovering executor produces when a retried pass re-delivers a device
+    top-k state overlapping already-covered tiles — sort adjacent under the
+    canonical order and all but the first are dropped before truncation.
     """
     order = np.argsort(r_ids, kind="stable")
     r_s, c_s, v_s = r_ids[order], c_ids[order], v[order]
@@ -791,7 +1181,14 @@ def topk_merge_rows(vals: np.ndarray, idx: np.ndarray, r_ids: np.ndarray,
         cand_i = np.concatenate([idx[u], c_s[lo:hi]])
         key = np.abs(cand_v)
         key[cand_i < 0] = -np.inf  # empty slots lose to any candidate
-        sel = np.lexsort((cand_i, -key))[:k]
+        sel = np.lexsort((cand_i, -key))
+        if dedup:
+            ci, cv = cand_i[sel], cand_v[sel]
+            keep = np.ones(sel.size, bool)
+            keep[1:] = ~((ci[1:] == ci[:-1]) & (ci[1:] >= 0)
+                         & (cv[1:] == cv[:-1]))
+            sel = sel[keep]
+        sel = sel[:k]
         vals[u] = cand_v[sel]
         idx[u] = cand_i[sel]
 
@@ -859,15 +1256,102 @@ class TopKSink(TileSink):
         return {"indices": self.idx, "values": self.vals}
 
 
+class DeviceTopKSink(TopKSink):
+    """TopKSink fed by the device-side top-k epilogue
+    (kernels/pcc_tile.pcc_topk_tiles): the executor streams per-row-block
+    top-k *state* instead of tiles, so only O(n * k) crosses the
+    device->host boundary per pass — the multi-host serving path, where
+    shipping O(n^2 / hosts) of tiles would swamp the interconnect.
+
+    ``wants_device_state`` routes the executor to the top-k kernel;
+    ``merge_dedups`` tells the *recovering* executor that a retried pass
+    may re-deliver candidates whose tiles are already covered — the
+    canonical merge drops exact duplicates, so coverage filtering (which
+    cannot subset a state-shaped buffer) is unnecessary.
+
+    Because the in-kernel selection replicates topk_merge_rows' canonical
+    order, result() is bit-identical to plain TopKSink(k) on the same
+    plan — single-host or across any mesh partition.
+    """
+
+    wants_device_state = True
+    merge_dedups = True
+
+    @staticmethod
+    def supports(plan: ExecutionPlan) -> bool:
+        """Whether this plan can take the device-side top-k path (the
+        predicate ``open()`` enforces) — callers that want a silent
+        TopKSink fallback (serving/batcher.py) test this first."""
+        from repro.core.plan import needs_row_scales
+        return (plan.fused
+                and plan.measure.tile_kernel is None
+                and not plan.replicas
+                and not needs_row_scales(plan.measure, plan.compute_dtype))
+
+    def open(self, plan: ExecutionPlan) -> None:
+        super().open(plan)
+        if not plan.fused:
+            raise ValueError(
+                "DeviceTopKSink needs the fused epilogue: the in-kernel "
+                "merge ranks *finalised* values (post div/clip), so an "
+                "unfused plan would rank unscaled accumulator sums")
+        if plan.measure.tile_kernel is not None:
+            raise ValueError(
+                f"DeviceTopKSink cannot run measure {plan.measure.name!r}: "
+                f"custom tile kernels bypass the top-k epilogue — use "
+                f"TopKSink")
+        if plan.replicas:
+            raise ValueError("DeviceTopKSink does not support replica "
+                             "(significance) runs")
+        from repro.core.plan import needs_row_scales
+        if needs_row_scales(plan.measure, plan.compute_dtype):
+            raise ValueError(
+                "DeviceTopKSink does not support quantized scaled operands "
+                "— the dequant outer product is not fused into the top-k "
+                "merge; use TopKSink")
+
+    def consume(self, ids: np.ndarray, state) -> None:
+        """One pass's state stacks: (row_vals, row_cols[, col_vals,
+        col_cols]), each (D * m, t, kk) with D devices' states stacked
+        (D == 1 for local runs).  `ids` is the pass's valid tile set —
+        unused for content (the kernel's validity guard already excluded
+        clamped slots) but part of the coverage contract."""
+        del ids
+        plan = self.plan
+        t, n_r = plan.t, plan.n_rows
+        m = plan.n_pad // t
+        pairs = [(state[0], state[1])]
+        if len(state) > 2:
+            pairs.append((state[2], state[3]))
+        for sv, sc in pairs:
+            sv = np.asarray(sv).reshape(-1, t, sv.shape[-1])
+            sc = np.asarray(sc).reshape(sv.shape)
+            # slab j of each device's m-block state is global row block j % m
+            blocks = np.arange(sv.shape[0]) % m
+            rows = np.broadcast_to(
+                (blocks[:, None] * t + np.arange(t))[:, :, None], sv.shape)
+            ok = (sc >= 0) & (rows < n_r)
+            if not ok.any():
+                continue
+            topk_merge_rows(self.vals, self.idx, rows[ok],
+                            sc[ok].astype(np.int64), sv[ok], self.k,
+                            dedup=True)
+
+
 __all__ = [
     "TileSink",
     "DenseSink",
     "HostSink",
+    "ShardedHostSink",
+    "ShardedMatrix",
+    "open_manifest",
+    "assemble",
     "ReductionSink",
     "EdgeCountSink",
     "RowBlockSink",
     "ExceedanceSink",
     "TopKSink",
+    "DeviceTopKSink",
     "topk_merge_rows",
     "scatter_tiles",
     "scatter_tiles_at",

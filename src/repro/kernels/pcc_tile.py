@@ -466,4 +466,269 @@ def pcc_tiles(
     return out
 
 
-__all__ = ["pcc_tiles", "EpilogueSpec", "DEFAULT_TILE", "DEFAULT_LBLK"]
+# -- device-side per-row top-k epilogue (multi-host scale-out) ---------------
+#
+# pcc_topk_tiles computes the same tiles as pcc_tiles but never writes them
+# to HBM: each (t, t) tile lives only in a VMEM scratch accumulator, and at
+# its final k-step it is folded into running per-row (value, column) top-k
+# state blocks — so a pass's device->host traffic is O(n * k), not
+# O(pass_tiles * t^2), and a multi-host launch ships partial top-k states
+# instead of n^2/hosts of tiles (the CoMet trick, arXiv:1705.08213).
+#
+# The in-kernel selection replicates core/sinks.topk_merge_rows' canonical
+# order *exactly*: |value| descending, ties by ascending column — two stable
+# argsorts (secondary key first) are np.lexsort((col, -|v|)) — so per-host
+# partial states merge into results bit-identical to a single-host TopKSink.
+#
+# State blocks are revisited across grid steps: the row state y(jt) is
+# non-decreasing within a pass (row-major tile order), so its revisits are
+# consecutive; the mirrored column state x(jt) is not monotonic, which is
+# read-modify-write-correct in interpret mode (this repo's execution mode —
+# see docs/architecture.md) but would need a revisit-ordering guarantee on
+# compiled TPU pipelines.
+
+
+def _tk_row_state_map(i, k, jstart_ref, *, m: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    y_t, _ = job_coord_f32(m, jt)
+    return y_t, 0, 0
+
+
+def _tk_col_state_map(i, k, jstart_ref, *, m: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    _, x_t = job_coord_f32(m, jt)
+    return x_t, 0, 0
+
+
+def _tk_grid_row_state_map(i, k, jstart_ref, *, mc: int, total: int):
+    del k
+    jt = jnp.minimum(jstart_ref[0] + i, total - 1)
+    return jt // mc, 0, 0
+
+
+def _topk_select(state_v, state_c, tile_v, tile_c, kk: int):
+    """Merge (t, t) tile candidates into (t, kk) state under the canonical
+    order.  Masked candidates carry column -1 (key -inf, value zeroed) and
+    are dropped again host-side, exactly like empty state slots."""
+    cand_v = jnp.concatenate(
+        [state_v, jnp.where(tile_c < 0, jnp.float32(0.0), tile_v)], axis=1)
+    cand_c = jnp.concatenate([state_c, tile_c], axis=1)
+    key = jnp.where(cand_c < 0, -jnp.inf, jnp.abs(cand_v))
+    p1 = jnp.argsort(cand_c, axis=1, stable=True)
+    key1 = jnp.take_along_axis(-key, p1, axis=1)
+    p2 = jnp.argsort(key1, axis=1, stable=True)
+    sel = jnp.take_along_axis(p1, p2, axis=1)[:, :kk]
+    return (jnp.take_along_axis(cand_v, sel, axis=1),
+            jnp.take_along_axis(cand_c, sel, axis=1))
+
+
+def _topk_kernel(jstart_ref, urow_ref, ucol_ref, *rest, l_blocks: int,
+                 epilogue: Optional[EpilogueSpec], kk: int, t: int,
+                 n_cols: int, symmetric: bool, mirror: bool, m: int,
+                 grid_cols: Optional[int], total: int):
+    """pcc_tiles' accumulation (bit-identical f32 adds into a VMEM scratch)
+    plus a final-k-step merge of the finished tile into per-row top-k state.
+
+    jstart_ref holds three scalars: [clamped j_start (the index maps' view,
+    as in pcc_tiles), the *raw* device start, and the device's exclusive
+    tile bound] — the latter two gate the merge so clamped duplicate slots
+    never contribute candidates and per-(device, pass) states stay disjoint.
+    """
+    if mirror:
+        (_rv_in, _rc_in, _cv_in, _cc_in,
+         rv_out, rc_out, cv_out, cc_out, acc) = rest
+    else:
+        _rv_in, _rc_in, rv_out, rc_out, acc = rest
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    if jnp.issubdtype(urow_ref.dtype, jnp.integer):
+        part = jax.lax.dot_general(
+            urow_ref[...], ucol_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+    else:
+        part = jax.lax.dot_general(
+            urow_ref[...], ucol_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    acc[...] += part
+
+    jt_raw = jstart_ref[1] + i
+    valid = jt_raw < jstart_ref[2]
+    jt = jnp.minimum(jt_raw, total - 1)
+    if grid_cols is None:
+        y_t, x_t = job_coord_f32(m, jt)
+    else:
+        y_t = jt // grid_cols
+        x_t = jt - y_t * grid_cols
+
+    def _final_tile():
+        r = acc[...]
+        if epilogue is not None and not epilogue.is_identity():
+            r = epilogue.apply(r)
+        return r
+
+    rows_io = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols_io = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    last = k == l_blocks - 1
+
+    @pl.when(last & valid)
+    def _merge_rows():
+        r = _final_tile()
+        cols_g = x_t * t + cols_io
+        bad = cols_g >= n_cols
+        if symmetric:
+            bad = bad | (y_t * t + rows_io == cols_g)
+        nv, nc = _topk_select(rv_out[0], rc_out[0], r,
+                              jnp.where(bad, -1, cols_g), kk)
+        rv_out[0] = nv
+        rc_out[0] = nc
+
+    if mirror:
+        # off-diagonal tiles also rank row i as a neighbour of row j via the
+        # transposed tile; diagonal tiles already carry both orders
+        @pl.when(last & valid & (y_t != x_t))
+        def _merge_cols():
+            r = _final_tile()
+            cols_g = y_t * t + cols_io
+            bad = cols_g >= n_cols
+            nv, nc = _topk_select(cv_out[0], cc_out[0], r.T,
+                                  jnp.where(bad, -1, cols_g), kk)
+            cv_out[0] = nv
+            cc_out[0] = nc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t", "l_blk", "pass_tiles", "kk", "interpret",
+                     "epilogue", "grid_cols", "n_cols_valid",
+                     "symmetric_problem"),
+)
+def pcc_topk_tiles(
+    u_pad: jax.Array,
+    j_start: jax.Array,
+    dev_hi: jax.Array,
+    *,
+    t: int = DEFAULT_TILE,
+    l_blk: int = DEFAULT_LBLK,
+    pass_tiles: int,
+    kk: int,
+    n_cols_valid: int,
+    symmetric_problem: bool = True,
+    interpret: bool = False,
+    epilogue: Optional[EpilogueSpec] = None,
+    v_pad: Optional[jax.Array] = None,
+    grid_cols: Optional[int] = None,
+):
+    """pcc_tiles with the top-k epilogue: compute `pass_tiles` tiles from
+    raw device-local start `j_start`, returning per-row-block top-k state
+    instead of the tiles themselves.
+
+    j_start here is the *unclamped* device start (rank * per_dev + offset);
+    dev_hi is the device's exclusive global tile bound — slots at or past
+    it (the cross-device ceil remainder) compute clamped duplicates exactly
+    as pcc_tiles does, but are excluded from the merge.
+
+    kk: state capacity per row (>= the requested k); n_cols_valid masks
+    padding columns; symmetric_problem additionally masks self-pairs.
+    Triangular runs (grid_cols=None) also maintain mirrored column-side
+    state, so a row's neighbours from tiles where it is the *column* block
+    are captured without ever materialising the transpose.
+
+    Returns (row_vals, row_cols) for grid workloads, plus
+    (col_vals, col_cols) for triangular ones — each (m, t, kk), value 0 /
+    column -1 marking empty slots.  Replica stacks and quantized scaled
+    operands are not supported (core/sinks.DeviceTopKSink gates on this).
+    """
+    n_pad, l_pad = u_pad.shape
+    if n_pad % t or l_pad % l_blk:
+        raise ValueError(
+            f"u_pad {u_pad.shape} not aligned to t={t}, l_blk={l_blk}")
+    if pass_tiles <= 0:
+        raise ValueError(f"pass_tiles must be positive, got {pass_tiles}")
+    if kk <= 0:
+        raise ValueError(f"kk must be positive, got {kk}")
+    if v_pad is not None and v_pad.ndim != 2:
+        raise ValueError(
+            "pcc_topk_tiles does not support replica stacks — top-k of a "
+            "null distribution is not a defined workload")
+    v = u_pad if v_pad is None else v_pad
+    mirror = grid_cols is None
+    m = n_pad // t
+    if grid_cols is None:
+        total = m * (m + 1) // 2
+        if v.shape != u_pad.shape:
+            raise ValueError(
+                f"triangular top-k needs v_pad == u_pad shape, got "
+                f"{v.shape} vs {u_pad.shape}")
+        row_map = functools.partial(_row_map, m=m, total=total)
+        col_map = functools.partial(_col_map, m=m, total=total)
+        rs_map = functools.partial(_tk_row_state_map, m=m, total=total)
+        cs_map = functools.partial(_tk_col_state_map, m=m, total=total)
+    else:
+        if v.shape[-1] != l_pad or v.shape[-2] != grid_cols * t:
+            raise ValueError(
+                f"column operand {v.shape} does not match grid_cols="
+                f"{grid_cols} tiles of t={t} over l_pad={l_pad}")
+        total = m * grid_cols
+        row_map = functools.partial(_grid_row_map, mc=grid_cols, total=total)
+        col_map = functools.partial(_grid_col_map, mc=grid_cols, total=total)
+        rs_map = functools.partial(_tk_grid_row_state_map, mc=grid_cols,
+                                   total=total)
+        cs_map = None
+    l_blocks = l_pad // l_blk
+
+    j0 = jnp.asarray(j_start, jnp.int32).reshape(())
+    hi = jnp.asarray(dev_hi, jnp.int32).reshape(())
+    starts = jnp.stack([jnp.minimum(j0, total - 1), j0, hi])
+
+    kernel = functools.partial(
+        _topk_kernel, l_blocks=l_blocks, epilogue=epilogue, kk=kk, t=t,
+        n_cols=n_cols_valid, symmetric=symmetric_problem, mirror=mirror,
+        m=m, grid_cols=grid_cols, total=total)
+
+    state_spec = pl.BlockSpec((1, t, kk), rs_map)
+    in_specs = [pl.BlockSpec((t, l_blk), row_map),
+                pl.BlockSpec((t, l_blk), col_map),
+                state_spec, pl.BlockSpec((1, t, kk), rs_map)]
+    out_specs = [state_spec, pl.BlockSpec((1, t, kk), rs_map)]
+    rv0 = jnp.zeros((m, t, kk), jnp.float32)
+    rc0 = jnp.full((m, t, kk), -1, jnp.int32)
+    operands = [starts, u_pad, v, rv0, rc0]
+    out_shape = [jax.ShapeDtypeStruct((m, t, kk), jnp.float32),
+                 jax.ShapeDtypeStruct((m, t, kk), jnp.int32)]
+    # aliased state inputs initialise the revisited output blocks; indices
+    # count the scalar-prefetch operand (starts = 0)
+    aliases = {3: 0, 4: 1}
+    if mirror:
+        col_state_spec = pl.BlockSpec((1, t, kk), cs_map)
+        in_specs += [col_state_spec, pl.BlockSpec((1, t, kk), cs_map)]
+        out_specs += [col_state_spec, pl.BlockSpec((1, t, kk), cs_map)]
+        operands += [jnp.zeros((m, t, kk), jnp.float32),
+                     jnp.full((m, t, kk), -1, jnp.int32)]
+        out_shape += [jax.ShapeDtypeStruct((m, t, kk), jnp.float32),
+                      jax.ShapeDtypeStruct((m, t, kk), jnp.int32)]
+        aliases.update({5: 2, 6: 3})
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(pass_tiles, l_blocks),
+            in_specs=in_specs,
+            out_specs=tuple(out_specs),
+            scratch_shapes=[pltpu.VMEM((t, t), jnp.float32)],
+        ),
+        out_shape=tuple(out_shape),
+        interpret=interpret,
+        input_output_aliases=aliases,
+    )(*operands)
+
+
+__all__ = ["pcc_tiles", "pcc_topk_tiles", "EpilogueSpec", "DEFAULT_TILE",
+           "DEFAULT_LBLK"]

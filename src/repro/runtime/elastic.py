@@ -107,6 +107,20 @@ def replan_execution(plan: ExecutionPlan, new_p: int) -> ExecutionPlan:
     return plan.repartition(new_p)
 
 
+def host_shard_plan(plan: ExecutionPlan,
+                    n_hosts: int) -> Tuple[Tuple[int, int], ...]:
+    """Per-host output-ownership ranges of a multi-host run: element h is
+    the [lo, hi) global-tile-id range host h's ShardedHostSink persists
+    (core/sinks.py).  Like replan_pcc this is stateless — a pure function
+    of (plan, n_hosts) — so after an elastic shrink the surviving hosts
+    re-derive their shard ranges from the re-sliced plan with no
+    coordination; tiles that moved hosts are exactly the set the coverage
+    bitmap reports missing on resume."""
+    if n_hosts <= 0:
+        raise ValueError(f"n_hosts must be positive, got {n_hosts}")
+    return tuple(plan.host_tile_range(h, n_hosts) for h in range(n_hosts))
+
+
 def elastic_pcc_plan(mesh: Mesh, n_failed: int, total_tiles: int,
                      data_axis: str = "data",
                      exec_plan: Optional[ExecutionPlan] = None) -> ElasticPlan:
@@ -131,4 +145,5 @@ def elastic_pcc_plan(mesh: Mesh, n_failed: int, total_tiles: int,
 
 
 __all__ = ["ElasticPlan", "shrink_data_axis", "shrink_mesh", "build_mesh",
-           "replan_pcc", "replan_execution", "elastic_pcc_plan"]
+           "replan_pcc", "replan_execution", "elastic_pcc_plan",
+           "host_shard_plan"]

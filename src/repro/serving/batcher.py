@@ -43,7 +43,7 @@ import jax.numpy as jnp
 
 from repro.core import measures
 from repro.core.allpairs import execute_plan
-from repro.core.sinks import RowBlockSink, TopKSink
+from repro.core.sinks import DeviceTopKSink, RowBlockSink, TopKSink
 from repro.serving.corpus import CorpusHandle, as_corpus
 from repro.serving.plan_cache import PlanCache, ProblemSpec
 from repro.kernels.pcc_tile import DEFAULT_LBLK, DEFAULT_TILE
@@ -102,6 +102,10 @@ class BatchInfo:
     rows_bucket: int        # padded launch rows (tile multiple)
     plan_cache_hit: bool
     passes: int
+    # per-rank tile occupancy of a mesh launch: element r is rank r's
+    # assigned-tiles / per-device capacity (trailing ranks of a ceil
+    # partition idle below 1.0).  None for local (mesh-free) launches.
+    host_occupancy: Optional[tuple] = None
 
     @property
     def occupancy(self) -> float:
@@ -168,17 +172,27 @@ class QueryBatcher:
 
         if topk:
             kmax = max(q.k for q in group)
-            top = execute_plan(plan, u_pad, v_pad,
-                               sink=TopKSink(kmax), mesh=self.mesh)
+            # device-side epilogue when the plan supports it: only
+            # O(rows * k) state crosses to the host per pass instead of
+            # O(rows * n) tiles — the multi-host serving path.  Results
+            # are bit-identical either way (the in-kernel merge replicates
+            # the canonical topk_merge_rows order).
+            sink = (DeviceTopKSink(kmax) if DeviceTopKSink.supports(plan)
+                    else TopKSink(kmax))
+            top = execute_plan(plan, u_pad, v_pad, sink=sink, mesh=self.mesh)
             outs = [{"indices": top["indices"][lo:hi, : q.k].copy(),
                      "values": top["values"][lo:hi, : q.k].copy()}
                     for (lo, hi), q in zip(bounds, group)]
         else:
             outs = execute_plan(plan, u_pad, v_pad,
                                 sink=RowBlockSink(bounds), mesh=self.mesh)
+        host_occ = None
+        if self.mesh is not None:
+            host_occ = tuple((hi - lo) / plan.per_dev
+                             for lo, hi in plan.device_ranges)
         info = BatchInfo(requests=len(group), rows=rows,
                          rows_bucket=plan.n_rows, plan_cache_hit=hit,
-                         passes=plan.n_pass)
+                         passes=plan.n_pass, host_occupancy=host_occ)
         return outs, info
 
     # -- public -------------------------------------------------------------

@@ -41,8 +41,11 @@ that stays current as its corpus mutates.  Each ``append``/``update``
 delta revalidates the watch incrementally (probes vs the delta rows
 only, merged through the canonical top-k order; rows whose kept set
 referenced a revised column recompute exactly), and when the kept set
-changes the new result is pushed to the watch's callback.  Every watch
-result names the corpus generation it reflects.
+changes the new result is pushed to the watch's callback.  Revalidation
+runs on the *dispatcher* thread: the corpus subscriber is a thin
+enqueue, so a slow watch callback never stalls ingest — deltas apply
+FIFO (generation order), ``flush_watches()`` waits for the queue to
+drain.  Every watch result names the corpus generation it reflects.
 
 Degradation (docs/robustness.md): the server degrades instead of dying.
 Malformed probes are rejected at submit() (Query validates shape, dtype,
@@ -127,9 +130,11 @@ class _Pending:
 class WatchHandle:
     """A standing top-k query: ``probes`` vs a live corpus, kept current.
 
-    Registered by :meth:`CorrServer.watch`; subscribed to the corpus, so
-    every ``append``/``update`` revalidates it *incrementally* on the
-    mutating thread before the mutation returns:
+    Registered by :meth:`CorrServer.watch` (deltas then apply on the
+    server's dispatcher thread, in generation order) or constructed
+    standalone (deltas apply synchronously on the mutating thread).
+    Either way every ``append``/``update`` revalidates it
+    *incrementally*:
 
       append(d)  launches only probes-vs-the-d-new-rows and merges the
                  candidates through the canonical top-k order;
@@ -147,7 +152,9 @@ class WatchHandle:
     def __init__(self, batcher: QueryBatcher, probes, k: int,
                  meas: measures.Measure,
                  callback: Optional[Callable[[dict], None]] = None,
-                 corpus_id: str = DEFAULT_CORPUS):
+                 corpus_id: str = DEFAULT_CORPUS,
+                 dispatch: Optional[Callable[["WatchHandle", Delta],
+                                             None]] = None):
         q = Query(probes, k=k, measure=meas)    # eager probe validation
         if q.probes.shape[1] != batcher.corpus.l:
             raise ValueError(
@@ -165,7 +172,16 @@ class WatchHandle:
         self._lock = threading.Lock()
         with self._lock:
             self._refresh_full()
-        self._unsubscribe = batcher.corpus.subscribe(self._on_delta)
+        # With a dispatch hook (CorrServer.watch), the corpus subscriber
+        # is a thin enqueue — the launches and the (possibly slow) user
+        # callback run on the server's dispatcher thread, so a watch never
+        # stalls the mutating thread.  Standalone handles (no server)
+        # keep the synchronous revalidate-before-append-returns contract.
+        if dispatch is None:
+            self._unsubscribe = batcher.corpus.subscribe(self._on_delta)
+        else:
+            self._unsubscribe = batcher.corpus.subscribe(
+                lambda delta: dispatch(self, delta))
         self._closed = False
 
     # -- delta-plan launches ------------------------------------------------
@@ -343,11 +359,19 @@ class CorrServer:
         self._cv = threading.Condition()
         self._queue: List[_Pending] = []
         self._watches: List[WatchHandle] = []
+        # watch deltas enqueued by mutating threads, drained (FIFO) by the
+        # dispatcher ahead of each batch; _deltas_busy covers the window
+        # between popping and applying so flush_watches() cannot return
+        # while a revalidation is mid-flight.
+        self._deltas: List[tuple] = []
+        self._deltas_busy = False
         self._closed = False
         self._batches = 0
         self._requests = 0
         self._rows = 0
         self._occupancy_sum = 0.0
+        self._host_occ_sums: Optional[List[float]] = None
+        self._host_occ_batches = 0
         # degradation state (all under _cv): consecutive failed dispatches
         # drive the breaker; the counters feed stats()["faults"].
         self._consecutive_failures = 0
@@ -360,6 +384,7 @@ class CorrServer:
             "deadline_exceeded": 0,  # requests shed past their deadline
             "shed": 0,              # submits refused while breaker open
             "breaker_trips": 0,     # closed -> open transitions
+            "watch_errors": 0,      # watch revalidations/callbacks that raised
         }
         self._thread = threading.Thread(target=self._dispatch_loop,
                                         name="corr-server-dispatch",
@@ -464,19 +489,48 @@ class CorrServer:
               corpus: str = DEFAULT_CORPUS) -> WatchHandle:
         """Register a standing top-k query (see :class:`WatchHandle`).
 
-        Computes the initial snapshot synchronously, then revalidates
-        against every corpus delta; ``callback(snapshot)`` (optional)
-        fires whenever the kept set changes.  Unregister with
-        ``unwatch(handle)`` or ``handle.close()``."""
+        Computes the initial snapshot synchronously; revalidation is
+        *asynchronous* — each corpus delta is enqueued to the server's
+        dispatcher thread, so a slow ``callback`` never stalls
+        ``append``/``update`` on the mutating thread.  Deltas apply in
+        generation order; ``flush_watches()`` blocks until every enqueued
+        delta has been applied (tests and read-your-writes callers).
+        ``callback(snapshot)`` (optional) fires whenever the kept set
+        changes.  Unregister with ``unwatch(handle)`` or
+        ``handle.close()``."""
         b = self._batcher(corpus)
         meas = b.measure if measure is None else measures.get(measure)
-        h = WatchHandle(b, probes, k, meas, callback, corpus_id=corpus)
+        h = WatchHandle(b, probes, k, meas, callback, corpus_id=corpus,
+                        dispatch=self._enqueue_delta)
         with self._cv:
             if self._closed:
                 h.close()
                 raise RuntimeError("CorrServer is closed")
             self._watches.append(h)
         return h
+
+    def _enqueue_delta(self, handle: WatchHandle, delta) -> None:
+        """Corpus-subscriber hook for server watches: O(1) on the mutating
+        thread — the revalidation launch runs on the dispatcher."""
+        with self._cv:
+            if self._closed:
+                return
+            self._deltas.append((handle, delta))
+            self._cv.notify_all()
+
+    def flush_watches(self, timeout: Optional[float] = None) -> None:
+        """Block until every watch delta enqueued so far has been applied
+        (mutate -> flush -> ``current()`` reads the post-delta answer)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while self._deltas or self._deltas_busy:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"{len(self._deltas)} watch deltas still pending "
+                        f"after {timeout}s")
+                self._cv.wait(remaining)
 
     def unwatch(self, handle: WatchHandle) -> None:
         """Stop a standing query (idempotent)."""
@@ -564,11 +618,30 @@ class CorrServer:
     def _dispatch_loop(self) -> None:
         while True:
             with self._cv:
-                while not self._queue and not self._closed:
+                while (not self._queue and not self._deltas
+                       and not self._closed):
                     self._cv.wait()
-                if not self._queue and self._closed:
+                deltas, self._deltas = self._deltas, []
+                if deltas:
+                    self._deltas_busy = True
+                if not deltas and not self._queue and self._closed:
                     return
-                batch = self._take_batch()
+                batch = self._take_batch() if self._queue else []
+            # watch deltas first: they were enqueued before (or while) the
+            # batch coalesced, and applying FIFO preserves per-corpus
+            # generation order.  Errors are counted, never propagated — a
+            # broken callback must not kill the dispatcher.
+            for h, d in deltas:
+                try:
+                    if not getattr(h, "_closed", False):
+                        h._on_delta(d)
+                except Exception:       # noqa: BLE001 — isolate watches
+                    with self._cv:
+                        self._fault_counts["watch_errors"] += 1
+            if deltas:
+                with self._cv:
+                    self._deltas_busy = False
+                    self._cv.notify_all()
             if batch:
                 self._serve(batch)
 
@@ -665,6 +738,7 @@ class CorrServer:
             self._rows += sum(p.query.m for p in batch)
             self._occupancy_sum += sum(i.occupancy for i in infos
                                        ) / max(len(infos), 1)
+            self._accum_host_occ(infos)
         generation = batcher.corpus.generation
         for p, value, info in zip(batch, results, infos):
             stats = {
@@ -699,6 +773,7 @@ class CorrServer:
             self._requests += 1
             self._rows += p.query.m
             self._occupancy_sum += info.occupancy
+            self._accum_host_occ(infos)
         p.future.set_result(ServedResult(value=results[0], stats={
             "queue_s": t_start - p.t_enqueue,
             "service_s": t_done - t_start,
@@ -712,6 +787,22 @@ class CorrServer:
         }))
 
     # -- lifecycle / observability ------------------------------------------
+
+    def _accum_host_occ(self, infos) -> None:
+        """Fold each mesh launch's per-rank tile occupancy into the
+        running per-host sums (called with _cv held).  Distinct launches
+        share one BatchInfo per group, so dedupe by identity."""
+        for i in {id(i): i for i in infos}.values():
+            ho = i.host_occupancy
+            if ho is None:
+                continue
+            if (self._host_occ_sums is None
+                    or len(self._host_occ_sums) != len(ho)):
+                self._host_occ_sums = [0.0] * len(ho)
+                self._host_occ_batches = 0
+            self._host_occ_sums = [a + b
+                                   for a, b in zip(self._host_occ_sums, ho)]
+            self._host_occ_batches += 1
 
     def stats(self) -> dict:
         """Server-level counters plus the plan- and transform-cache views
@@ -729,6 +820,12 @@ class CorrServer:
                 "rows": self._rows,
                 "mean_batch_occupancy": (self._occupancy_sum / batches
                                          if batches else 0.0),
+                # mean per-mesh-rank tile occupancy across mesh launches
+                # (None until a mesh launch happens / for mesh-less servers)
+                "host_occupancy": (
+                    None if not self._host_occ_batches else
+                    [s / self._host_occ_batches
+                     for s in self._host_occ_sums]),
                 "queued": len(self._queue),
                 "faults": {
                     **self._fault_counts,

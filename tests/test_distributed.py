@@ -328,6 +328,117 @@ def test_elastic_remesh_pcc_renumbering():
     """)
 
 
+def test_multihost_sharded_sink_and_topk_bit_identical():
+    """The multi-host story end to end on the 8-device mesh: per-host
+    shard files are disjoint, assemble == single-host DenseSink, the
+    device-side top-k epilogue == single-host TopKSink bit-for-bit — and
+    both survive an injected device loss (mesh shrink mid-run) plus a
+    crash + resume without changing a bit."""
+    _run("""
+        import json, os, tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.plan import ExecutionPlan
+        from repro.core.allpairs import execute_plan
+        from repro.core.sinks import (DenseSink, DeviceTopKSink,
+                                      ShardedHostSink, TopKSink, assemble)
+        from repro.runtime.faults import CrashFault, FaultPlan, RetryPolicy
+
+        mesh = jax.make_mesh((8,), ("d",))
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(40, 16)).astype(np.float32))
+        plan = ExecutionPlan.create(40, 16, t=8, l_blk=8, p=8,
+                                    max_tiles_per_pass=1)
+        u = plan.prepare(x)
+        plan1 = ExecutionPlan.create(40, 16, t=8, l_blk=8,
+                                     max_tiles_per_pass=4)
+        u1 = plan1.prepare(x)
+        ref = np.asarray(execute_plan(plan1, u1, sink=DenseSink()))
+        tk = execute_plan(plan1, u1, sink=TopKSink(5))
+
+        # 2 hosts x 4 devices: disjoint files, assemble == dense
+        d = tempfile.mkdtemp()
+        for h in range(2):
+            r = execute_plan(plan, u, sink=ShardedHostSink(
+                d, host=h, n_hosts=2), mesh=mesh)
+            assert r["complete"], h
+        files = [set(c["file"] for c in json.load(
+                     open(os.path.join(d, f"manifest.h{h}.json")))["chunks"])
+                 for h in range(2)]
+        assert files[0] and files[1] and not (files[0] & files[1])
+        np.testing.assert_array_equal(assemble(d), ref)
+
+        # merged device-side top-k == single-host TopKSink, bit for bit
+        dtk = execute_plan(plan, u, sink=DeviceTopKSink(5), mesh=mesh)
+        np.testing.assert_array_equal(dtk["indices"], tk["indices"])
+        np.testing.assert_array_equal(dtk["values"], tk["values"])
+
+        # device loss mid-run (8 -> 7 shrink): still bit-identical
+        pol = RetryPolicy(sleep=lambda s: None)
+        with FaultPlan.single("pass_launch", "device_loss", at=2).armed():
+            dtk2 = execute_plan(plan, u, sink=DeviceTopKSink(5), mesh=mesh,
+                                recovery=pol)
+        assert [e["action"] for e in pol.log] == ["shrink_mesh"]
+        np.testing.assert_array_equal(dtk2["indices"], tk["indices"])
+        np.testing.assert_array_equal(dtk2["values"], tk["values"])
+
+        # device loss on one host's sharded write, crash + resume on the
+        # other: assemble still == dense
+        d2 = tempfile.mkdtemp()
+        pol = RetryPolicy(sleep=lambda s: None)
+        with FaultPlan.single("pass_launch", "device_loss", at=2).armed():
+            r = execute_plan(plan, u, sink=ShardedHostSink(
+                d2, host=0, n_hosts=2), mesh=mesh, recovery=pol)
+        assert r["complete"]
+        try:
+            with FaultPlan.single("sink_commit", "crash", at=2).armed():
+                execute_plan(plan, u, sink=ShardedHostSink(
+                    d2, host=1, n_hosts=2), mesh=mesh)
+            raise SystemExit("crash fault did not fire")
+        except CrashFault:
+            pass
+        r = execute_plan(plan, u, sink=ShardedHostSink(
+            d2, host=1, n_hosts=2, resume=True), mesh=mesh)
+        assert r["complete"]
+        np.testing.assert_array_equal(assemble(d2), ref)
+        print("OK")
+    """)
+
+
+def test_mesh_backed_server_identity_and_host_occupancy():
+    """CorrServer over an 8-device mesh: one multi-host launch per
+    coalesced batch (the top-k path rides the device-side epilogue),
+    results bit-identical to local corr(), and stats() reports per-host
+    occupancy of the mesh launches."""
+    _run("""
+        import jax, numpy as np
+        from repro.core.api import corr
+        from repro.core.sinks import TopKSink
+        from repro.serving.server import CorrServer
+
+        rng = np.random.default_rng(9)
+        corpus = rng.normal(size=(48, 16)).astype(np.float32)
+        probes = rng.normal(size=(5, 16)).astype(np.float32)
+        mesh = jax.make_mesh((8,), ("d",))
+        with CorrServer(corpus, t=8, l_blk=8, max_wait_s=0.0,
+                        mesh=mesh) as srv:
+            dense = srv.query(probes)
+            topk = srv.query(probes, k=4)
+            st = srv.stats()
+        np.testing.assert_array_equal(
+            np.asarray(dense.value),
+            np.asarray(corr(probes, corpus, t=8, l_blk=8)))
+        cold = corr(probes, corpus, t=8, l_blk=8, sink=TopKSink(4))
+        np.testing.assert_array_equal(topk.value["indices"],
+                                      np.asarray(cold["indices"]))
+        np.testing.assert_array_equal(topk.value["values"],
+                                      np.asarray(cold["values"]))
+        ho = st["host_occupancy"]
+        assert ho is not None and len(ho) == 8
+        assert 0.0 <= min(ho) and max(ho) <= 1.0 and sum(ho) > 0
+        print("OK")
+    """)
+
+
 def test_compressed_psum_shard_map():
     """int8 error-feedback all-reduce: mean error bounded, feedback works."""
     _run("""

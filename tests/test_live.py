@@ -324,6 +324,7 @@ def test_watch_revalidates_and_pushes_on_append():
         # rows strongly correlated with probe 0 MUST enter its top-k
         strong = (probes[0:1] * 2.0 + 0.01).astype(np.float32)
         srv.corpus.append(np.concatenate([strong, _x(2, 12, seed=32)]))
+        srv.flush_watches()
         cold = corr(probes, np.asarray(srv.corpus.x), sink=TopKSink(3), **KW)
         cur = w.current()
         assert np.array_equal(cur["indices"], np.asarray(cold["indices"]))
@@ -345,6 +346,7 @@ def test_watch_update_of_kept_column_recomputes_exactly():
         # demote the kept column to noise: its row must drop out and the
         # k-th boundary must move — only an exact recompute gets this right
         srv.corpus.update(np.array([kept]), _x(1, 12, seed=35))
+        srv.flush_watches()
         cold = corr(probes, np.asarray(srv.corpus.x), sink=TopKSink(3), **KW)
         cur = w.current()
         assert np.array_equal(cur["indices"], np.asarray(cold["indices"]))
@@ -363,6 +365,7 @@ def test_watch_no_push_when_kept_set_unchanged():
         weak = np.zeros((2, 12), np.float32)
         weak[:, 0] = 1e-6
         srv.corpus.append(weak)
+        srv.flush_watches()
         cur = w.current()
         assert cur["generation"] == 1            # revalidated ...
         assert w.revalidations == 1
@@ -370,11 +373,66 @@ def test_watch_no_push_when_kept_set_unchanged():
             assert pushes == []                  # ... but nothing pushed
 
 
+def test_slow_watch_callback_does_not_stall_ingest():
+    """Revalidation runs on the dispatcher thread (PR 9 follow-up): a
+    deliberately slow watch callback must not add to append() latency,
+    and snapshot generations still arrive in order."""
+    import time
+
+    SLEEP = 2.0
+    gens = []
+
+    def slow(snap):
+        time.sleep(SLEEP)
+        gens.append(snap["generation"])
+
+    with CorrServer(_x(24, 12, seed=60), max_wait_s=0.0, **KW) as srv:
+        probes = _x(2, 12, seed=61)
+        w = srv.watch(probes, 2, callback=slow)
+        # warm the incremental-maintenance path (first append compiles)
+        srv.corpus.append(_x(1, 12, seed=64))
+        t0 = time.monotonic()
+        for i in range(2):
+            # each append correlates ~1.0 with probe 0: kept set changes
+            srv.corpus.append(
+                (probes[0:1] * (2.0 + i) + 0.01 * (i + 1)).astype(np.float32))
+        ingest_s = time.monotonic() - t0
+        srv.flush_watches(timeout=120)
+        # both mutations returned before even ONE callback could have
+        # finished — the old synchronous path would take >= 2 * SLEEP
+        assert ingest_s < SLEEP, ingest_s
+        assert w.generation == 3
+        assert gens and gens == sorted(gens)
+        # post-flush the standing answer reflects every delta
+        cold = corr(probes, np.asarray(srv.corpus.x), sink=TopKSink(2), **KW)
+        assert np.array_equal(w.current()["indices"],
+                              np.asarray(cold["indices"]))
+
+
+def test_watch_callback_error_counted_not_propagated():
+    """A raising callback neither fails the mutation nor kills the
+    dispatcher — it is counted in stats()['faults']['watch_errors']."""
+    def bad(snap):
+        raise RuntimeError("boom")
+
+    with CorrServer(_x(16, 12, seed=62), max_wait_s=0.0, **KW) as srv:
+        probes = _x(2, 12, seed=63)
+        srv.watch(probes, 2, callback=bad)
+        strong = (probes[0:1] * 2.0 + 0.01).astype(np.float32)
+        srv.corpus.append(strong)            # must not raise
+        srv.flush_watches(timeout=60)
+        assert srv.stats()["faults"]["watch_errors"] == 1
+        # the server still serves after the bad callback
+        r = srv.query(probes)
+        assert r.value.shape == (2, 17)
+
+
 def test_unwatch_stops_revalidation():
     with CorrServer(_x(16, 12, seed=38), max_wait_s=0.0, **KW) as srv:
         w = srv.watch(_x(2, 12, seed=39), 2)
         srv.unwatch(w)
         srv.corpus.append(_x(2, 12, seed=40))
+        srv.flush_watches()
         assert w.current()["generation"] == 0
         assert srv.stats()["watches"]["count"] == 0
 
@@ -438,8 +496,10 @@ def test_watch_routes_per_corpus():
         assert w.current()["corpus"] == "b"
         # default-corpus mutations never touch a "b" watch
         srv.corpus.append(_x(2, 12, seed=52))
+        srv.flush_watches()
         assert w.current()["generation"] == 0
         hb.append(_x(2, 12, seed=53))
+        srv.flush_watches()
         assert w.current()["generation"] == 1
 
 

@@ -213,5 +213,5 @@ def test_stats_faults_shape_when_healthy(corpus_x):
         f = srv.stats()["faults"]
     assert f == {"batch_failures": 0, "retries": 0, "splits": 0,
                  "failed_requests": 0, "deadline_exceeded": 0, "shed": 0,
-                 "breaker_trips": 0, "consecutive_failures": 0,
-                 "breaker_open": False}
+                 "breaker_trips": 0, "watch_errors": 0,
+                 "consecutive_failures": 0, "breaker_open": False}

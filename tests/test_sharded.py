@@ -1,0 +1,215 @@
+"""ShardedHostSink / ShardedMatrix / DeviceTopKSink (docs/scaling.md).
+
+Multi-host output persistence and the device-side top-k epilogue, run
+single-process: "hosts" are simulated by executing the same plan once per
+host rank against the same operands — exactly what each process of a real
+multi-host launch would run, since the sink's tile ownership is a pure
+function of (plan, host, n_hosts).  The 8-device mesh spellings (per-host
+files disjoint, merged top-k bit-identical, device-loss + resume) live in
+tests/test_distributed.py.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allpairs import execute_plan
+from repro.core.plan import ExecutionPlan
+from repro.core.sinks import (DenseSink, DeviceTopKSink, ShardedHostSink,
+                              TopKSink, assemble, open_manifest)
+from repro.runtime.elastic import host_shard_plan
+from repro.runtime.faults import CrashFault, FaultPlan
+
+KW = dict(t=8, l_blk=8, max_tiles_per_pass=4, interpret=True)
+
+
+def _x(n, l, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, l)).astype(np.float32)
+
+
+def _plan_u(n, l=16, seed=0, **kw):
+    plan = ExecutionPlan.create(n, l, **{**KW, **kw})
+    u = plan.prepare(jnp.asarray(_x(n, l, seed)))
+    return plan, u
+
+
+def _write_all_hosts(plan, u, d, n_hosts, resume=()):
+    for h in range(n_hosts):
+        r = execute_plan(plan, u, sink=ShardedHostSink(
+            d, host=h, n_hosts=n_hosts, resume=h in resume))
+        assert r["complete"], h
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Round trips over pass-boundary residues
+# ---------------------------------------------------------------------------
+
+# n = 40/48/56 with t=8 give total_tiles 15/21/28: residues mod mtp=4 of
+# {3, 1, 0} = {mtp-1, 1, 0} — the final pass is a full pass, a single
+# straggler tile, and one-short-of-full respectively.
+@pytest.mark.parametrize("n", [40, 48, 56])
+@pytest.mark.parametrize("n_hosts", [1, 2, 3])
+def test_sharded_roundtrip_matches_dense(tmp_path, n, n_hosts):
+    plan, u = _plan_u(n, seed=n)
+    assert plan.total_tiles % KW["max_tiles_per_pass"] in (0, 1, 3)
+    ref = np.asarray(execute_plan(plan, u, sink=DenseSink()))
+    d = str(tmp_path)
+    _write_all_hosts(plan, u, d, n_hosts)
+    np.testing.assert_array_equal(assemble(d), ref)
+    # the lazy row-range view slices without materializing n^2
+    sm = open_manifest(d)
+    np.testing.assert_array_equal(sm.rows(7, min(19, n)), ref[7:19])
+
+
+def test_sharded_grid_roundtrip(tmp_path):
+    plan = ExecutionPlan.create(24, 16, n_cols=40, **KW)
+    u, v = plan.prepare_pair(jnp.asarray(_x(24, 16, seed=1)),
+                             jnp.asarray(_x(40, 16, seed=2)))
+    ref = np.asarray(execute_plan(plan, u, v, sink=DenseSink()))
+    d = str(tmp_path)
+    for h in range(2):
+        r = execute_plan(plan, u, v, sink=ShardedHostSink(
+            d, host=h, n_hosts=2))
+        assert r["complete"]
+    np.testing.assert_array_equal(assemble(d), ref)
+    np.testing.assert_array_equal(open_manifest(d).rows(3, 17), ref[3:17])
+
+
+def test_host_ranges_partition_total(tmp_path):
+    plan, _ = _plan_u(56)
+    for n_hosts in (1, 2, 3, 5):
+        ranges = host_shard_plan(plan, n_hosts)
+        assert ranges[0][0] == 0 and ranges[-1][1] == plan.total_tiles
+        for (_, hi), (lo, _) in zip(ranges, ranges[1:]):
+            assert hi == lo          # contiguous, disjoint
+    with pytest.raises(ValueError, match="out of range"):
+        plan.host_tile_range(2, 2)
+    p8 = plan.repartition(8)
+    with pytest.raises(ValueError, match="must divide"):
+        p8.host_tile_range(0, 3)
+
+
+# ---------------------------------------------------------------------------
+# Manifest integrity: corruption, incompleteness, resume
+# ---------------------------------------------------------------------------
+
+
+def _chunk_files(d, host):
+    doc = json.load(open(os.path.join(d, f"manifest.h{host}.json")))
+    return [c["file"] for c in doc["chunks"]]
+
+
+def test_corrupt_chunk_refused_then_recomputed_alone(tmp_path):
+    plan, u = _plan_u(56, seed=3)
+    ref = np.asarray(execute_plan(plan, u, sink=DenseSink()))
+    d = str(tmp_path)
+    _write_all_hosts(plan, u, d, 2)
+    victim = os.path.join(d, _chunk_files(d, 0)[1])
+    raw = bytearray(open(victim, "rb").read())
+    raw[-3] ^= 0xFF
+    open(victim, "wb").write(bytes(raw))
+    # the reader REFUSES silently-corrupt data, naming the file
+    with pytest.raises(ValueError, match=os.path.basename(victim)):
+        assemble(d)
+    # resume drops exactly the corrupt chunk and recomputes only it:
+    # every other chunk file's bytes are untouched by the re-run
+    other = {f: open(os.path.join(d, f), "rb").read()
+             for f in _chunk_files(d, 0) + _chunk_files(d, 1)
+             if os.path.join(d, f) != victim}
+    snk = ShardedHostSink(d, host=0, n_hosts=2, resume=True)
+    snk.open(plan)
+    missing = np.where(~snk.covered())[0]
+    assert missing.size and missing.size < plan.total_tiles
+    r = execute_plan(plan, u, sink=ShardedHostSink(
+        d, host=0, n_hosts=2, resume=True))
+    assert r["complete"]
+    np.testing.assert_array_equal(assemble(d), ref)
+    for f, want in other.items():
+        assert open(os.path.join(d, f), "rb").read() == want, f
+
+
+def test_incomplete_assemble_names_missing_tiles(tmp_path):
+    plan, u = _plan_u(48, seed=4)
+    d = str(tmp_path)
+    execute_plan(plan, u, sink=ShardedHostSink(d, host=0, n_hosts=2))
+    with pytest.raises(ValueError, match="missing"):
+        assemble(d)
+    # ... but the rows the written shard fully covers ARE readable
+    sm = open_manifest(d)
+    ref = np.asarray(execute_plan(plan, u, sink=DenseSink()))
+    np.testing.assert_array_equal(sm.rows(0, 8), ref[:8])
+
+
+def test_crash_before_manifest_commit_then_resume(tmp_path):
+    plan, u = _plan_u(56, seed=5)
+    ref = np.asarray(execute_plan(plan, u, sink=DenseSink()))
+    d = str(tmp_path)
+    fp = FaultPlan.single("sink_commit", "crash", at=2)
+    with pytest.raises(CrashFault):
+        with fp.armed():
+            execute_plan(plan, u, sink=ShardedHostSink(d, host=0, n_hosts=1))
+    r = execute_plan(plan, u, sink=ShardedHostSink(
+        d, host=0, n_hosts=1, resume=True))
+    assert r["complete"]
+    np.testing.assert_array_equal(assemble(d), ref)
+
+
+def test_resume_of_complete_shard_runs_no_passes(tmp_path):
+    plan, u = _plan_u(48, seed=6)
+    d = str(tmp_path)
+    _write_all_hosts(plan, u, d, 2)
+    snk = ShardedHostSink(d, host=1, n_hosts=2, resume=True)
+    snk.open(plan)
+    assert bool(snk.covered().all())
+    assert snk.resume_pass() == plan.n_pass   # nothing left to launch
+    # a different PASS SPLIT is distribution-only: resume accepts it
+    # (elastic shrink rewrites manifests with the repartitioned plan)
+    resplit = ExecutionPlan.create(48, 16, t=8, l_blk=8,
+                                   max_tiles_per_pass=2, interpret=True)
+    snk2 = ShardedHostSink(d, host=1, n_hosts=2, resume=True)
+    snk2.open(resplit)
+    assert bool(snk2.covered().all())
+    # ... but content-spec drift is refused, not absorbed
+    other = ExecutionPlan.create(48, 16, t=8, l_blk=16, max_tiles_per_pass=4,
+                                 interpret=True)
+    with pytest.raises(ValueError, match="spec"):
+        ShardedHostSink(d, host=1, n_hosts=2, resume=True).open(other)
+
+
+# ---------------------------------------------------------------------------
+# Device-side top-k epilogue
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k", [(40, 3), (56, 5), (17, 4)])
+def test_device_topk_bit_identical_to_host_sink(n, k):
+    plan, u = _plan_u(n, seed=n + 7)
+    want = execute_plan(plan, u, sink=TopKSink(k))
+    got = execute_plan(plan, u, sink=DeviceTopKSink(k))
+    np.testing.assert_array_equal(got["indices"], want["indices"])
+    np.testing.assert_array_equal(got["values"], want["values"])
+
+
+def test_device_topk_grid_bit_identical(tmp_path):
+    plan = ExecutionPlan.create(24, 16, n_cols=40, **KW)
+    u, v = plan.prepare_pair(jnp.asarray(_x(24, 16, seed=8)),
+                             jnp.asarray(_x(40, 16, seed=9)))
+    want = execute_plan(plan, u, v, sink=TopKSink(4))
+    got = execute_plan(plan, u, v, sink=DeviceTopKSink(4))
+    np.testing.assert_array_equal(got["indices"], want["indices"])
+    np.testing.assert_array_equal(got["values"], want["values"])
+
+
+def test_device_topk_supports_predicate_and_refusals():
+    plan, u = _plan_u(40)
+    assert DeviceTopKSink.supports(plan)
+    unfused = ExecutionPlan.create(40, 16, fuse_epilogue=False, **KW)
+    assert not DeviceTopKSink.supports(unfused)
+    with pytest.raises(ValueError, match="fused epilogue"):
+        DeviceTopKSink(3).open(unfused)
+    quant = ExecutionPlan.create(40, 16, compute_dtype=jnp.int8, **KW)
+    assert not DeviceTopKSink.supports(quant)
